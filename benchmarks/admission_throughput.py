@@ -1,0 +1,120 @@
+"""Control-plane throughput: scalar (paper-style per-request Python)
+vs the vectorized jit path (beyond-paper) — decisions/second and
+tick latency at growing entitlement counts."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (
+    AdmissionController,
+    AdmissionRequest,
+    EntitlementSpec,
+    PoolSpec,
+    QoS,
+    Resources,
+    ScalingBounds,
+    ServiceClass,
+    TokenPool,
+)
+from repro.core.vectorized import (
+    PoolArrays,
+    admit_quantum,
+    arrays_from_pool,
+    tick_batch,
+)
+
+
+def scalar_admission_rate(n_requests: int = 2000) -> float:
+    pool = TokenPool(PoolSpec(
+        name="p", model="m", scaling=ScalingBounds(1, 1),
+        per_replica=Resources(1e9, 1e12, 1e6)))
+    for i in range(16):
+        pool.add_entitlement(EntitlementSpec(
+            name=f"e{i}", tenant_id=f"t{i}", pool="p",
+            qos=QoS(ServiceClass.ELASTIC, 1000.0),
+            baseline=Resources(1e6, 0.0, 1e4)))
+    ctrl = AdmissionController(pool)
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        ctrl.decide(AdmissionRequest(f"e{i % 16}", 64, 64,
+                                     arrival_s=i * 1e-4,
+                                     request_id=f"r{i}"))
+    return n_requests / (time.perf_counter() - t0)
+
+
+def vectorized_admission_rate(n_requests: int = 65536,
+                              n_entitlements: int = 4096) -> float:
+    rng = np.random.RandomState(0)
+    arr = PoolArrays(
+        class_code=jnp.asarray(rng.randint(0, 5, n_entitlements),
+                               jnp.int32),
+        bound=jnp.ones(n_entitlements, bool),
+        baseline_tps=jnp.asarray(rng.uniform(10, 100, n_entitlements),
+                                 jnp.float32),
+        baseline_kv=jnp.zeros(n_entitlements, jnp.float32),
+        baseline_conc=jnp.full(n_entitlements, 64.0, jnp.float32),
+        slo_ms=jnp.asarray(rng.uniform(100, 30000, n_entitlements),
+                           jnp.float32),
+        burst=jnp.zeros(n_entitlements, jnp.float32),
+        debt=jnp.zeros(n_entitlements, jnp.float32))
+    req_ent = jnp.asarray(rng.randint(0, n_entitlements, n_requests),
+                          jnp.int32)
+    req_tok = jnp.full(n_requests, 128.0, jnp.float32)
+    req_kv = jnp.zeros(n_requests, jnp.float32)
+    args = dict(bucket_level=jnp.full(n_entitlements, 1e6, jnp.float32),
+                in_flight=jnp.zeros(n_entitlements, jnp.int32),
+                kv_in_use=jnp.zeros(n_entitlements, jnp.float32),
+                pool_in_flight=jnp.int32(0),
+                pool_conc_cap=jnp.float32(1e6),
+                running_min_priority=jnp.float32(np.inf),
+                pool_avg_slo=jnp.float32(1000.0))
+    admit_quantum(arr, req_ent=req_ent, req_tokens=req_tok,
+                  req_kv=req_kv, **args)[0].block_until_ready()
+    t0 = time.perf_counter()
+    out = admit_quantum(arr, req_ent=req_ent, req_tokens=req_tok,
+                        req_kv=req_kv, **args)
+    out[0].block_until_ready()
+    return n_requests / (time.perf_counter() - t0)
+
+
+def vectorized_tick_us(n_entitlements: int = 100_000) -> float:
+    rng = np.random.RandomState(0)
+    arr = PoolArrays(
+        class_code=jnp.asarray(rng.randint(0, 5, n_entitlements),
+                               jnp.int32),
+        bound=jnp.ones(n_entitlements, bool),
+        baseline_tps=jnp.asarray(rng.uniform(10, 100, n_entitlements),
+                                 jnp.float32),
+        baseline_kv=jnp.zeros(n_entitlements, jnp.float32),
+        baseline_conc=jnp.full(n_entitlements, 8.0, jnp.float32),
+        slo_ms=jnp.asarray(rng.uniform(100, 30000, n_entitlements),
+                           jnp.float32),
+        burst=jnp.zeros(n_entitlements, jnp.float32),
+        debt=jnp.zeros(n_entitlements, jnp.float32))
+    zero = jnp.zeros(n_entitlements, jnp.float32)
+    demand = jnp.asarray(rng.uniform(0, 200, n_entitlements), jnp.float32)
+    tick_batch(arr, jnp.float32(1e7), zero, zero, zero,
+               demand)[1].block_until_ready()
+    t0 = time.perf_counter()
+    reps = 20
+    for _ in range(reps):
+        out = tick_batch(arr, jnp.float32(1e7), zero, zero, zero, demand)
+    out[1].block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main() -> None:
+    s = scalar_admission_rate()
+    v = vectorized_admission_rate()
+    t = vectorized_tick_us()
+    print(f"admission_scalar,{1e6 / s:.1f},decisions/s={s:.0f}")
+    print(f"admission_vectorized,{1e6 / v:.3f},decisions/s={v:.0f}")
+    print(f"tick_vectorized_100k_entitlements,{t:.0f},us_per_tick")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,150 @@
+"""Experiment 2 — SLO-aware fair share (paper §5.3, Fig. 5/6, Table 2).
+
+Scenario: "A GPU node fails during peak hours.  Two production services
+share the surviving capacity: a latency-critical coding assistant and a
+batch synthetic-data pipeline.  After recovery, an analytics report
+generator joins to diagnose what occurred."
+
+Three ELASTIC entitlements (5 slots each):
+  elastic-copilot   500 ms SLO   (w ≈ 93.8 with ℓ̄* = 15 250 ms)
+  elastic-synth     30 s SLO     (w ≈ 20.3)  →  4.6× priority gap
+  elastic-reports   5 s SLO      (w ≈ 60), joins at t = 210 s
+Pool: 2 replicas × 8 slots (= the paper's 16 slots / 240 tok/s); one
+replica FAILS at t = 30 s (capacity halves to 8) and recovers at 120 s.
+α_slo = 2.0, α_debt = 4.0, γ_d = 0.7 — the paper's coefficients.
+
+Claims validated:
+  C1  priority weights match the paper exactly (93.8 / 20.3 / ~60);
+  C2  during the outage copilot keeps the larger share; synth absorbs
+      the low-priority denials (paper: 0 vs 317);
+  C3  both accumulate debt, synth faster (paper peaks 0.775 vs 0.607);
+      the debt narrows the priority gap (4.6× → 3.9× in the paper);
+  C4  after recovery debt decays to ~0 (paper: within ~50 s);
+  C5  reports joins with zero debt and competes on its SLO term only.
+"""
+from __future__ import annotations
+
+from repro.core import PriorityCoefficients, ServiceClass
+from repro.serving import ServingSimulator, Workload
+
+
+def build() -> ServingSimulator:
+    workloads = [
+        Workload(name="elastic-copilot",
+                 service_class=ServiceClass.ELASTIC, slots=5,
+                 slo_ms=500.0, rate_rps=2.33, in_tokens=32,
+                 out_tokens=32, max_retries=2),
+        Workload(name="elastic-synth",
+                 service_class=ServiceClass.ELASTIC, slots=5,
+                 slo_ms=30000.0, rate_rps=2.33, in_tokens=64,
+                 out_tokens=64, max_retries=2),
+        Workload(name="elastic-reports",
+                 service_class=ServiceClass.ELASTIC, slots=5,
+                 slo_ms=5000.0, rate_rps=0.67, in_tokens=80,
+                 out_tokens=96, start_s=210.0, max_retries=2),
+    ]
+    sim = ServingSimulator(
+        workloads, replica_slots=8, replica_tps=120.0, n_replicas=2,
+        admission=True,
+        coeff=PriorityCoefficients(alpha_slo=2.0, alpha_burst=1.0,
+                                   alpha_debt=4.0, gamma_debt=0.7),
+        fixed_avg_slo_ms=15250.0,
+        # tokens-per-minute bucket semantics (paper cites TPM quotas):
+        # the 90 s outage is gated by the priority threshold (check 5),
+        # not by budget exhaustion
+        bucket_window_s=60.0)
+    sim.at(30.0, "fail_replica", idx=1)       # outage: 16 → 8 slots
+    sim.at(120.0, "recover_replica", idx=1)   # recovery
+    return sim
+
+
+def run(duration: float = 300.0) -> dict:
+    sim = build()
+    sim.run(duration)
+    res = sim.summary()
+    hist = sim.pool.history
+
+    # C1: no-debt/no-burst weights from the pool's own Eq. 1
+    w0 = {}
+    for n in ("elastic-copilot", "elastic-synth", "elastic-reports"):
+        st = sim.pool.status[n]
+        saved = (st.burst, st.debt)
+        st.burst = st.debt = 0.0
+        w0[n] = sim.pool.priority(n)
+        st.burst, st.debt = saved
+
+    # C3: peak debts + minimum priority gap during the outage
+    def series(ent, field):
+        return [(h.t, getattr(h, field).get(ent, 0.0)) for h in hist]
+
+    debt_c = series("elastic-copilot", "debts")
+    debt_s = series("elastic-synth", "debts")
+    peak_c = max(v for _, v in debt_c)
+    peak_s = max(v for _, v in debt_s)
+    gaps = [(h.t, h.priorities["elastic-copilot"]
+             / max(h.priorities["elastic-synth"], 1e-9))
+            for h in hist if 30 <= h.t <= 120]
+    min_gap = min(g for _, g in gaps)
+
+    # C4: debt decay time after recovery
+    decay_t = None
+    for t, v in debt_s:
+        if t > 125 and v < 0.05:
+            decay_t = t - 120.0
+            break
+
+    # C2: in-flight shares during the outage
+    def share(ent):
+        pts = [p for p in sim.timeline if 40 <= p.t <= 120 and p.running]
+        return (sum(p.per_ent_running.get(ent, 0) for p in pts)
+                / max(sum(p.running for p in pts), 1))
+
+    return {
+        "weights_no_debt": w0,
+        "denied_low_priority": {
+            n: sim.pool.status[n].denied_low_priority
+            for n in sim.workloads},
+        "successful": {n: res["per_entitlement"][n]["finished"]
+                       for n in sim.workloads},
+        "peak_debt": {"copilot": peak_c, "synth": peak_s,
+                      "reports": max(v for _, v in series(
+                          "elastic-reports", "debts"))},
+        "min_priority_gap_outage": min_gap,
+        "initial_priority_gap": w0["elastic-copilot"]
+        / w0["elastic-synth"],
+        "debt_decay_s_after_recovery": decay_t,
+        "outage_share": {"copilot": share("elastic-copilot"),
+                         "synth": share("elastic-synth")},
+        "per_entitlement": res["per_entitlement"],
+    }
+
+
+def main() -> None:
+    r = run()
+    w = r["weights_no_debt"]
+    print("experiment2,metric,value,paper_claim")
+    print(f"experiment2,w_copilot,{w['elastic-copilot']:.1f},93.8")
+    print(f"experiment2,w_synth,{w['elastic-synth']:.1f},20.3")
+    print(f"experiment2,w_reports,{w['elastic-reports']:.1f},~60")
+    print(f"experiment2,initial_gap,{r['initial_priority_gap']:.2f},4.6x")
+    print(f"experiment2,min_gap_during_outage,"
+          f"{r['min_priority_gap_outage']:.2f},3.9x")
+    d = r["denied_low_priority"]
+    print(f"experiment2,denials_copilot,{d['elastic-copilot']},0")
+    print(f"experiment2,denials_synth,{d['elastic-synth']},317")
+    print(f"experiment2,denials_reports,{d['elastic-reports']},22")
+    s = r["successful"]
+    print(f"experiment2,success_copilot,{s['elastic-copilot']},700")
+    print(f"experiment2,success_synth,{s['elastic-synth']},381")
+    print(f"experiment2,success_reports,{s['elastic-reports']},60")
+    p = r["peak_debt"]
+    print(f"experiment2,peak_debt_copilot,{p['copilot']:.3f},0.607")
+    print(f"experiment2,peak_debt_synth,{p['synth']:.3f},0.775")
+    print(f"experiment2,debt_decay_s,{r['debt_decay_s_after_recovery']},~50")
+    o = r["outage_share"]
+    print(f"experiment2,outage_share_copilot,{o['copilot']:.2f},5-7 of 8")
+    print(f"experiment2,outage_share_synth,{o['synth']:.2f},2-3 of 8")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Kernel micro-bench: interpret-mode correctness-rate + XLA reference
+timings (wall-clock kernels need real TPU; CPU numbers are for the
+oracle path and regression tracking)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import reference_attention
+from repro.kernels.paged_attention import reference_paged_attention
+
+
+def _time(fn, *args, reps=5) -> float:
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) \
+        else fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    (out[0] if isinstance(out, tuple) else out).block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def main() -> None:
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    B, H, S, dh = 1, 8, 1024, 64
+    q = jax.random.normal(ks[0], (B, H, S, dh), jnp.float32)
+    k = jax.random.normal(ks[1], (B, 2, S, dh), jnp.float32)
+    v = jax.random.normal(ks[2], (B, 2, S, dh), jnp.float32)
+    ref = jax.jit(lambda a, b, c: reference_attention(a, b, c,
+                                                      causal=True))
+    us = _time(ref, q, k, v)
+    print(f"flash_attention_ref_xla_{B}x{H}x{S}x{dh},{us:.0f},us_per_call")
+
+    qd = jax.random.normal(ks[0], (8, 8, 64), jnp.float32)
+    kp = jax.random.normal(ks[1], (64, 16, 2, 64), jnp.float32)
+    vp = jax.random.normal(ks[2], (64, 16, 2, 64), jnp.float32)
+    bt = jnp.tile(jnp.arange(8, dtype=jnp.int32)[:, None], (1, 8))
+    cl = jnp.full((8,), 100, jnp.int32)
+    refp = jax.jit(lambda a, b, c, d, e: reference_paged_attention(
+        a, b, c, d, e))
+    us = _time(refp, qd, kp, vp, bt, cl)
+    print(f"paged_attention_ref_xla_b8_p8x16,{us:.0f},us_per_call")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,87 @@
+"""Benchmark harness — one entry per paper table/figure + the framework
+benches.  Prints ``name,value,details`` CSV rows.
+
+  experiment1   paper §5.2 Figs 2–4 (cross-class protection)
+  experiment2   paper §5.3 Fig 5/6 + Table 2 (SLO fair share, debt)
+  admission     control-plane throughput (scalar vs vectorized)
+  kernels       kernel/oracle micro-timings
+  roofline      per-cell roofline table from dry-run artifacts (if
+                benchmarks/artifacts/dryrun is populated)
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+
+def _section(name):
+    print(f"# --- {name} " + "-" * max(0, 60 - len(name)))
+
+
+def main() -> None:
+    failures = []
+
+    _section("experiment1: cross-class protection (paper Figs 2-4)")
+    try:
+        from benchmarks.experiment1_protection import main as e1
+        e1()
+    except Exception:                              # noqa: BLE001
+        failures.append("experiment1")
+        traceback.print_exc()
+
+    _section("experiment2: SLO-aware fair share (paper Fig 5/6, Tab 2)")
+    try:
+        from benchmarks.experiment2_fairshare import main as e2
+        e2()
+    except Exception:                              # noqa: BLE001
+        failures.append("experiment2")
+        traceback.print_exc()
+
+    _section("admission throughput (scalar vs vectorized control plane)")
+    try:
+        from benchmarks.admission_throughput import main as adm
+        adm()
+    except Exception:                              # noqa: BLE001
+        failures.append("admission")
+        traceback.print_exc()
+
+    _section("kernel micro-bench")
+    try:
+        from benchmarks.kernel_bench import main as kb
+        kb()
+    except Exception:                              # noqa: BLE001
+        failures.append("kernels")
+        traceback.print_exc()
+
+    _section("roofline (from dry-run artifacts)")
+    art = os.path.join(os.path.dirname(__file__), "artifacts", "dryrun")
+    if os.path.isdir(art) and os.listdir(art):
+        try:
+            from repro.launch.roofline import analyze, load_artifacts
+            print("arch,shape,mesh,chips,compute_s,memory_s,"
+                  "collective_s,dominant,useful_ratio")
+            for a in load_artifacts(art):
+                r = analyze(a)
+                if r is None:
+                    print(f"{a['arch']},{a['shape']},{a['mesh']},,,,,SKIP,")
+                else:
+                    print(f"{r.arch},{r.shape},{r.mesh},{r.chips},"
+                          f"{r.compute_s:.3e},{r.memory_s:.3e},"
+                          f"{r.collective_s:.3e},{r.dominant},"
+                          f"{r.useful_ratio:.3f}")
+        except Exception:                          # noqa: BLE001
+            failures.append("roofline")
+            traceback.print_exc()
+    else:
+        print("roofline,skipped,no dry-run artifacts "
+              "(run benchmarks/run_dryrun_sweep.sh)")
+
+    if failures:
+        print(f"# FAILURES: {failures}", file=sys.stderr)
+        sys.exit(1)
+    print("# all benchmarks completed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""End-to-end serving driver: a reduced qwen3-8b behind the gateway
+with two tenants (guaranteed + spot), continuous batching engine.
+
+    PYTHONPATH=src python examples/serve_multitenant.py
+(thin wrapper over repro.launch.serve)
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0]] + sys.argv[1:]
+    main()

@@ -1,0 +1,15 @@
+"""End-to-end training driver: train a ~100M-param LM for a few hundred
+steps on synthetic structured data; loss must fall substantially.
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+(thin wrapper over repro.launch.train)
+"""
+import sys
+
+from repro.launch.train import main
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "tinyllama-1.1b",
+                "--reduce", "100m", "--steps", "300",
+                "--seq-len", "256", "--batch", "8"] + sys.argv[1:]
+    main()

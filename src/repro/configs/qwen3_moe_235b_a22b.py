@@ -1,0 +1,23 @@
+"""qwen3-moe-235b-a22b [moe] — 128 experts top-8
+[hf:Qwen/Qwen3-30B-A3B; hf]."""
+from repro.models.config import ArchConfig
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    num_layers=94,
+    d_model=4096,
+    num_heads=64,
+    num_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,                    # per-expert ffn
+    vocab_size=151936,
+    max_seq_len=32768,
+    pattern=("global",),
+    mlp_kind="swiglu",
+    num_experts=128,
+    experts_per_token=8,
+    norm_topk_prob=True,
+    rope_theta=1000000.0,
+    source="hf:Qwen/Qwen3-30B-A3B; hf",
+)

@@ -1,0 +1,57 @@
+"""Token pools — the paper's control-plane contribution.
+
+Public API surface:
+
+- types: ServiceClass, Resources, QoS, EntitlementSpec, PoolSpec, ...
+- priority: Eq. (1)-(3) scalar math
+- pool: TokenPool controller (allocation, reclamation, debt tick)
+- admission: AdmissionController (the §4.3 five-check pipeline)
+- virtual_node: VirtualNodeProvider (scheduler-as-admission, §4.1)
+- autoscaler: entitlement-driven capacity planning
+- vectorized: jit-compiled batch control plane (beyond-paper scale)
+- ledger / state: token buckets and the Redis-contract state store
+"""
+from repro.core.admission import AdmissionController
+from repro.core.autoscaler import Autoscaler, AutoscalerConfig, ScaleDecision
+from repro.core.ledger import Charge, Ledger, TokenBucket
+from repro.core.pool import InFlight, TickRecord, TokenPool, waterfill
+from repro.core.priority import (
+    burst_overconsumption,
+    burst_update,
+    debt_update,
+    pool_average_slo,
+    priority_breakdown,
+    priority_weight,
+    service_gap,
+)
+from repro.core.state import CASConflict, StateStore
+from repro.core.types import (
+    AdmissionDecision,
+    AdmissionRequest,
+    DenyReason,
+    EntitlementSpec,
+    EntitlementState,
+    EntitlementStatus,
+    PoolSpec,
+    PriorityCoefficients,
+    QoS,
+    Resources,
+    ScalingBounds,
+    ServiceClass,
+    kv_bytes_per_token,
+    max_concurrency,
+)
+from repro.core.virtual_node import LeasePod, VirtualNode, VirtualNodeProvider
+
+__all__ = [
+    "AdmissionController", "AdmissionDecision", "AdmissionRequest",
+    "Autoscaler", "AutoscalerConfig", "CASConflict", "Charge", "DenyReason",
+    "EntitlementSpec", "EntitlementState", "EntitlementStatus", "InFlight",
+    "LeasePod", "Ledger", "PoolSpec", "PriorityCoefficients", "QoS",
+    "Resources", "ScaleDecision", "ScalingBounds", "ServiceClass",
+    "StateStore", "TickRecord", "TokenBucket", "TokenPool", "VirtualNode",
+    "VirtualNodeProvider", "burst_overconsumption", "burst_update",
+    "debt_update", "kv_bytes_per_token", "max_concurrency",
+    "pool_average_slo", "priority_breakdown", "priority_weight",
+    "service_gap", "waterfill",
+]

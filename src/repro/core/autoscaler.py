@@ -1,0 +1,114 @@
+"""Autoscaler — entitlement-driven capacity planning (paper Fig. 1,
+"Dynamo planner" role).
+
+Token pools authorize *both* admission and autoscaling from the same
+capacity model: the desired replica count is derived from the very
+entitlement/demand signals that admission uses, so what is promised and
+what is provisioned stay consistent.
+
+Policy (deterministic, hysteresis-damped):
+
+  desired = ceil( max(reserved_baselines, demand_ewma · headroom)
+                  / per_replica_tps )
+  clamped to [minReplicas, maxReplicas]
+
+  - ``reserved_baselines`` = Σ baselines of bound dedicated/guaranteed/
+    elastic entitlements: the pool must always be able to serve its
+    promises (paper: entitlements authorize autoscaling).
+  - ``demand_ewma`` tracks total admitted + denied token demand, so
+    denial pressure from burstable classes (spot backfill) can raise
+    capacity up to the cap — burst is satisfied by *reallocating unused
+    tokens first*, and only sustained unmet demand triggers scaling.
+  - scale-down requires ``cooldown_ticks`` consecutive low-demand ticks
+    (anti-flap); scale-up is immediate (protecting SLOs beats cost).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from repro.core.pool import TokenPool
+from repro.core.types import PROTECTED_CLASSES, EntitlementState, ServiceClass
+
+
+@dataclasses.dataclass
+class AutoscalerConfig:
+    headroom: float = 1.2          # demand multiplier before scaling
+    demand_ewma: float = 0.5       # smoothing of the demand signal
+    cooldown_ticks: int = 5        # consecutive low ticks before shrink
+
+
+@dataclasses.dataclass
+class ScaleDecision:
+    current: int
+    desired: int
+    reserved_tps: float
+    demand_tps: float
+    reason: str
+
+
+class Autoscaler:
+    def __init__(self, pool: TokenPool,
+                 config: AutoscalerConfig = AutoscalerConfig()) -> None:
+        self.pool = pool
+        self.config = config
+        self._demand = 0.0
+        self._low_ticks = 0
+
+    def reserved_tps(self) -> float:
+        total = 0.0
+        for name, espec in self.pool.entitlements.items():
+            st = self.pool.status[name]
+            if st.state != EntitlementState.BOUND:
+                continue
+            if espec.qos.service_class in PROTECTED_CLASSES or \
+                    espec.qos.service_class is ServiceClass.ELASTIC:
+                total += espec.baseline.tokens_per_second
+        return total
+
+    def observe_demand(self, demand_tps: float) -> None:
+        g = self.config.demand_ewma
+        self._demand = g * self._demand + (1 - g) * demand_tps
+
+    def plan(self) -> ScaleDecision:
+        pool = self.pool
+        per_replica = pool.spec.per_replica.tokens_per_second
+        reserved = self.reserved_tps()
+        need_tps = max(reserved, self._demand * self.config.headroom)
+        desired = max(1, math.ceil(need_tps / max(per_replica, 1e-9)))
+        lo = pool.spec.scaling.min_replicas
+        hi = pool.spec.scaling.max_replicas
+        desired = min(hi, max(lo, desired))
+
+        current = pool.replicas
+        if desired > current:
+            self._low_ticks = 0
+            reason = "scale_up:demand" if self._demand * self.config.headroom \
+                > reserved else "scale_up:reserved"
+        elif desired < current:
+            self._low_ticks += 1
+            if self._low_ticks < self.config.cooldown_ticks:
+                desired = current        # hold during cooldown
+                reason = "hold:cooldown"
+            else:
+                reason = "scale_down"
+                self._low_ticks = 0
+        else:
+            self._low_ticks = 0
+            reason = "steady"
+        return ScaleDecision(current=current, desired=desired,
+                             reserved_tps=reserved,
+                             demand_tps=self._demand, reason=reason)
+
+    def step(self) -> ScaleDecision:
+        """Observe current pool demand, plan, and apply."""
+        total_demand = sum(self.pool._demand_tps.values())
+        self.observe_demand(total_demand)
+        decision = self.plan()
+        if decision.desired != decision.current:
+            self.pool.set_replicas(decision.desired)
+            # capacity change flows into the virtual node so new
+            # entitlements are admitted against updated entitleable
+            # capacity only if maxReplicas changed — runtime capacity
+            # is tracked by the pool itself.
+        return decision

@@ -1,0 +1,139 @@
+"""Token-throughput ledger: per-entitlement token budgets.
+
+The paper's admission check (4) requires that "the request's token
+budget (input tokens plus max_tokens) must fit within the entitlement's
+remaining throughput allocation" (§4.3).  We realise the throughput
+entitlement λ_e (tokens/second) as a token bucket:
+
+  - the bucket refills continuously at the entitlement's *effective*
+    rate λ̂_e (which the pool controller adjusts: shrunk under
+    contention, grown by work-conserving backfill);
+  - bucket capacity is ``burst_window_s`` seconds of the rate, so short
+    bursts above λ are fundable from accumulated idle credit, matching
+    the paper's "burst capacity is satisfied by reallocating unused
+    tokens before triggering scaling";
+  - admission *charges* the nominal cost n_in + n_out_max up front and
+    the completion callback *refunds* the unused portion
+    (max_tokens − actual output), closing the admission/execution gap.
+
+Deterministic; time is an explicit argument.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class TokenBucket:
+    rate_tps: float                 # current refill rate λ̂_e
+    burst_window_s: float = 4.0     # bucket capacity = rate · window
+    level: float = 0.0              # current tokens available
+    last_refill_s: float = 0.0
+
+    def capacity(self) -> float:
+        return self.rate_tps * self.burst_window_s
+
+    def refill(self, now: float) -> None:
+        dt = max(0.0, now - self.last_refill_s)
+        self.level = min(self.capacity(), self.level + dt * self.rate_tps)
+        self.last_refill_s = now
+
+    def set_rate(self, rate_tps: float, now: float) -> None:
+        """Adjust the refill rate (pool shrink/backfill).  Refill first so
+        credit accrued at the old rate is preserved, then clamp to the
+        new capacity."""
+        self.refill(now)
+        self.rate_tps = max(0.0, rate_tps)
+        self.level = min(self.level, self.capacity())
+
+    def can_afford(self, tokens: float, now: float) -> bool:
+        self.refill(now)
+        return self.level >= tokens
+
+    def charge(self, tokens: float, now: float) -> bool:
+        self.refill(now)
+        if self.level < tokens:
+            return False
+        self.level -= tokens
+        return True
+
+    def refund(self, tokens: float, now: float) -> None:
+        self.refill(now)
+        self.level = min(self.capacity(), self.level + max(0.0, tokens))
+
+    def time_until_affordable(self, tokens: float, now: float) -> float:
+        """Seconds until ``tokens`` would be available — the Retry-After
+        hint returned with HTTP 429 (paper §4.3)."""
+        self.refill(now)
+        deficit = tokens - self.level
+        if deficit <= 0:
+            return 0.0
+        if self.rate_tps <= 0:
+            return float("inf")
+        return deficit / self.rate_tps
+
+
+@dataclasses.dataclass
+class Charge:
+    """Record of an admission-time charge, so completion can refund."""
+
+    request_id: str
+    entitlement: str
+    charged_tokens: float
+    input_tokens: int
+    max_tokens: int
+    admitted_at: float
+
+
+class Ledger:
+    """Per-entitlement token buckets + outstanding charges."""
+
+    def __init__(self, burst_window_s: float = 4.0) -> None:
+        self._buckets: dict[str, TokenBucket] = {}
+        self._charges: dict[str, Charge] = {}
+        self.burst_window_s = burst_window_s
+
+    def ensure(self, entitlement: str, rate_tps: float, now: float) -> TokenBucket:
+        b = self._buckets.get(entitlement)
+        if b is None:
+            b = TokenBucket(rate_tps=rate_tps,
+                            burst_window_s=self.burst_window_s,
+                            level=rate_tps * self.burst_window_s,
+                            last_refill_s=now)
+            self._buckets[entitlement] = b
+        return b
+
+    def bucket(self, entitlement: str) -> TokenBucket:
+        return self._buckets[entitlement]
+
+    def set_rate(self, entitlement: str, rate_tps: float, now: float) -> None:
+        self.ensure(entitlement, rate_tps, now).set_rate(rate_tps, now)
+
+    def charge(self, charge: Charge, now: float) -> bool:
+        b = self._buckets[charge.entitlement]
+        if not b.charge(charge.charged_tokens, now):
+            return False
+        self._charges[charge.request_id] = charge
+        return True
+
+    def settle(self, request_id: str, actual_output_tokens: int,
+               now: float) -> float:
+        """Completion callback: refund the unused reservation.
+
+        Returns the *actual* token cost (input + actual output)."""
+        ch = self._charges.pop(request_id, None)
+        if ch is None:
+            return 0.0
+        actual = ch.input_tokens + actual_output_tokens
+        refund = max(0.0, ch.charged_tokens - actual)
+        self._buckets[ch.entitlement].refund(refund, now)
+        return float(actual)
+
+    def cancel(self, request_id: str, now: float) -> None:
+        """Request failed/evicted before producing tokens: full refund."""
+        ch = self._charges.pop(request_id, None)
+        if ch is not None:
+            self._buckets[ch.entitlement].refund(ch.charged_tokens, now)
+
+    def retry_after(self, entitlement: str, tokens: float, now: float) -> float:
+        return self._buckets[entitlement].time_until_affordable(tokens, now)

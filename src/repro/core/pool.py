@@ -1,0 +1,458 @@
+"""TokenPool controller — allocation, reclamation, debt accounting.
+
+Realises paper §3–§4: a pool aggregates backend replicas into capacity
+(Λ_p tokens/s, X_p KV bytes, R_p concurrency); entitlements hold
+baselines (λ_e, χ_e, r_e) with a service class; every accounting tick
+the controller
+
+  1. measures per-entitlement usage (tokens completed, KV resident,
+     in-flight sequences),
+  2. updates burst intensity b_e (Eq. 3 EWMA),
+  3. computes effective allocations λ̂_e by priority-weighted
+     water-filling with the Table-1 protection ordering
+     (dedicated/guaranteed reserved even when idle → elastic baselines,
+     shrunk under scarcity → work-conserving backfill of surplus to
+     burst-eligible classes),
+  4. updates service debt d_e (Eq. 2) for debt-bearing classes,
+  5. pushes λ̂_e into the token-bucket ledger that funds admission.
+
+Entitlement *creation* is admitted through the virtual-node scheduler
+(`core.virtual_node`) against the pool's entitleable capacity
+(per-replica × maxReplicas): a pool never promises more than it could
+ever provision.  Runtime capacity (per-replica × live replicas) is what
+allocation and admission run against, so replica failure shows up as
+scarcity — shrinking elastic tenants and accruing debt — exactly the
+paper's Experiment 2.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import priority as prio
+from repro.core.ledger import Charge, Ledger
+from repro.core.types import (
+    BURST_CLASSES,
+    DEBT_CLASSES,
+    PROTECTED_CLASSES,
+    AdmissionRequest,
+    EntitlementSpec,
+    EntitlementState,
+    EntitlementStatus,
+    PoolSpec,
+    Resources,
+    ServiceClass,
+)
+from repro.core.virtual_node import LeasePod, VirtualNodeProvider
+
+
+@dataclasses.dataclass
+class InFlight:
+    """One admitted, not-yet-completed request."""
+
+    request_id: str
+    entitlement: str
+    priority: float
+    kv_bytes: float
+    charged_tokens: int
+    admitted_at: float
+    resident: bool = False       # dispatched to a decode worker
+
+
+@dataclasses.dataclass
+class TickRecord:
+    """Per-tick observability snapshot (drives the experiment figures)."""
+
+    t: float
+    capacity_tps: float
+    allocations: dict[str, float]
+    priorities: dict[str, float]
+    debts: dict[str, float]
+    bursts: dict[str, float]
+    in_flight: dict[str, int]
+    demand_tps: dict[str, float]
+
+
+def waterfill(capacity: float, want: dict[str, float],
+              weight: dict[str, float]) -> dict[str, float]:
+    """Priority-weighted progressive water-filling.
+
+    Distributes ``capacity`` across keys proportionally to ``weight``,
+    capping each key at ``want[key]`` and re-distributing the excess to
+    still-unsatisfied keys.  Work-conserving: either every want is met
+    or the full capacity is used.
+    """
+    alloc = {k: 0.0 for k in want}
+    remaining = max(0.0, capacity)
+    active = {k for k, w in want.items() if w > 1e-12}
+    while remaining > 1e-9 and active:
+        total_w = sum(weight[k] for k in active)
+        if total_w <= 0:
+            # equal split among zero-weight entitlements
+            share = {k: remaining / len(active) for k in active}
+        else:
+            share = {k: remaining * weight[k] / total_w for k in active}
+        done = set()
+        used = 0.0
+        for k in list(active):
+            room = want[k] - alloc[k]
+            take = min(room, share[k])
+            alloc[k] += take
+            used += take
+            if alloc[k] >= want[k] - 1e-12:
+                done.add(k)
+        remaining -= used
+        if not done:        # all shares landed below caps → finished
+            break
+        active -= done
+    return alloc
+
+
+class TokenPool:
+    """The TokenPool controller (one instance per pool CRD)."""
+
+    def __init__(self, spec: PoolSpec,
+                 provider: Optional[VirtualNodeProvider] = None,
+                 now: float = 0.0) -> None:
+        self.spec = spec
+        self.provider = provider or VirtualNodeProvider()
+        self.replicas = spec.scaling.min_replicas
+        self.entitlements: dict[str, EntitlementSpec] = {}
+        self.status: dict[str, EntitlementStatus] = {}
+        self.ledger = Ledger(burst_window_s=spec.bucket_window_s)
+        self.in_flight: dict[str, InFlight] = {}
+        self.history: list[TickRecord] = []
+        self._last_tick = now
+        self._demand_window: dict[str, float] = {}
+        self._demand_tps: dict[str, float] = {}
+        # Entitleable capacity: what may ever be promised (maxReplicas).
+        self.provider.create_node(spec.name, self.entitleable_capacity())
+
+    # -- capacity -------------------------------------------------------------
+    def entitleable_capacity(self) -> Resources:
+        return self.spec.per_replica.scale(self.spec.scaling.max_replicas)
+
+    def capacity(self) -> Resources:
+        """Runtime capacity from live replicas."""
+        return self.spec.per_replica.scale(self.replicas)
+
+    def set_replicas(self, n: int) -> None:
+        """Autoscaler / failure-injection entry point."""
+        self.replicas = max(0, n)
+
+    # -- entitlement lifecycle --------------------------------------------------
+    def add_entitlement(self, espec: EntitlementSpec, now: float = 0.0
+                        ) -> EntitlementState:
+        self.entitlements[espec.name] = espec
+        st = EntitlementStatus(created_at=now)
+        self.status[espec.name] = st
+        # Lease request: protected + elastic reserve their baseline on
+        # the virtual node; spot/preemptible request nothing.
+        reserve = (espec.baseline
+                   if espec.qos.service_class not in
+                   (ServiceClass.SPOT, ServiceClass.PREEMPTIBLE)
+                   else Resources.zero())
+        lease = LeasePod(
+            name=f"lease-{espec.name}",
+            entitlement=espec.name,
+            request=reserve,
+            protection_weight=prio.CLASS_WEIGHT[espec.qos.service_class],
+        )
+        bound = self.provider.submit(self.spec.name, lease)
+        st.state = EntitlementState.BOUND if bound else EntitlementState.DEGRADED
+        # Fund the bucket at baseline immediately; ticks refine it.
+        self.ledger.ensure(espec.name, espec.baseline.tokens_per_second, now)
+        self._demand_window.setdefault(espec.name, 0.0)
+        self._demand_tps.setdefault(espec.name, 0.0)
+        return st.state
+
+    def remove_entitlement(self, name: str) -> None:
+        self.provider.delete(f"lease-{name}")
+        self.entitlements.pop(name, None)
+        self.status.pop(name, None)
+
+    def expire_entitlements(self, now: float) -> None:
+        for name, espec in self.entitlements.items():
+            st = self.status[name]
+            if (espec.ttl_s is not None
+                    and now - st.created_at >= espec.ttl_s
+                    and st.state != EntitlementState.EXPIRED):
+                st.state = EntitlementState.EXPIRED
+                self.provider.delete(f"lease-{name}")
+
+    # -- priority --------------------------------------------------------------
+    def pool_avg_slo(self) -> float:
+        if self.spec.fixed_avg_slo_ms is not None:
+            return self.spec.fixed_avg_slo_ms
+        targets = [e.qos.slo_target_ms for e in self.entitlements.values()
+                   if self.status[e.name].state == EntitlementState.BOUND]
+        return prio.pool_average_slo(targets)
+
+    def priority(self, name: str) -> float:
+        espec = self.entitlements[name]
+        st = self.status[name]
+        return prio.priority_weight(
+            espec.qos.service_class,
+            espec.qos.slo_target_ms,
+            self.pool_avg_slo(),
+            st.burst,
+            st.debt,
+            self.spec.coefficients,
+        )
+
+    # -- in-flight bookkeeping (called by admission / completion) -----------------
+    def register_admit(self, rec: InFlight, demand_tokens: float) -> None:
+        st = self.status[rec.entitlement]
+        st.in_flight += 1
+        st.kv_bytes_in_use += rec.kv_bytes
+        st.admitted_total += 1
+        self.in_flight[rec.request_id] = rec
+        self._demand_window[rec.entitlement] = (
+            self._demand_window.get(rec.entitlement, 0.0) + demand_tokens)
+
+    def register_deny(self, entitlement: str, demand_tokens: float,
+                      low_priority: bool) -> None:
+        st = self.status[entitlement]
+        st.denied_total += 1
+        if low_priority:
+            st.denied_low_priority += 1
+        # Denied demand still counts as demand (drives backfill/scaling).
+        self._demand_window[entitlement] = (
+            self._demand_window.get(entitlement, 0.0) + demand_tokens)
+
+    def on_start(self, request_id: str) -> None:
+        """Backend callback: the request acquired a decode slot (its KV
+        is now resident) — this is what §3.1's concurrency r counts."""
+        rec = self.in_flight.get(request_id)
+        if rec is None or rec.resident:
+            return
+        rec.resident = True
+        self.status[rec.entitlement].resident += 1
+
+    def on_complete(self, request_id: str, actual_output_tokens: int,
+                    now: float) -> None:
+        """Gateway completion callback (paper §4.3): settle the charge,
+        update usage counters that feed burst/debt at the next tick."""
+        rec = self.in_flight.pop(request_id, None)
+        if rec is None:
+            return
+        st = self.status[rec.entitlement]
+        st.in_flight = max(0, st.in_flight - 1)
+        if rec.resident:
+            st.resident = max(0, st.resident - 1)
+        st.kv_bytes_in_use = max(0.0, st.kv_bytes_in_use - rec.kv_bytes)
+        st.completed_total += 1
+        actual = self.ledger.settle(request_id, actual_output_tokens, now)
+        st.window_tokens += actual
+        st.tokens_total += actual
+
+    def on_evict(self, request_id: str, now: float) -> None:
+        """Request terminated before completion (preemption/failure)."""
+        rec = self.in_flight.pop(request_id, None)
+        if rec is None:
+            return
+        st = self.status[rec.entitlement]
+        st.in_flight = max(0, st.in_flight - 1)
+        if rec.resident:
+            st.resident = max(0, st.resident - 1)
+        st.kv_bytes_in_use = max(0.0, st.kv_bytes_in_use - rec.kv_bytes)
+        self.ledger.cancel(request_id, now)
+
+    # -- contention & reclamation -------------------------------------------------
+    def pool_in_flight(self) -> int:
+        return len(self.in_flight)
+
+    def total_resident(self) -> int:
+        return sum(st.resident for st in self.status.values())
+
+    def has_free_slots(self) -> bool:
+        return self.total_resident() < self.capacity().concurrency
+
+    def contended(self) -> bool:
+        """Demand exceeds supply: more admitted requests in flight than
+        the pool has decode slots — i.e. someone is *waiting*.  A pool
+        running at exactly full occupancy with an empty queue is busy,
+        not contended (paper Exp. 1 phase 1: spot fills the pool)."""
+        return self.pool_in_flight() > self.capacity().concurrency
+
+    def admission_threshold(self) -> float:
+        """Min priority among currently-admitted requests (paper §4.3),
+        evaluated at the owners' LIVE priorities: debt and burst evolve
+        after admission, and the threshold must reflect what those
+        tenants are entitled to *now* — otherwise a tenant whose debt is
+        rising would strictly exceed its own older snapshots and push
+        unbounded work into a contended pool.
+
+        Only meaningful when contended; returns 0.0 (admit-all) otherwise."""
+        if not self.contended() or not self.in_flight:
+            return 0.0
+        ents = {r.entitlement for r in self.in_flight.values()}
+        return min(self.priority(e) for e in ents
+                   if e in self.entitlements)
+
+    def reclaim_preemptible(self) -> list[str]:
+        """Table-1 eviction: returns request ids of preemptible in-flight
+        requests to terminate (KV reclaimed, pod killed).  The caller
+        (engine) performs the kill and then `on_evict`s each."""
+        victims = []
+        for rec in self.in_flight.values():
+            espec = self.entitlements.get(rec.entitlement)
+            if espec and espec.qos.service_class == ServiceClass.PREEMPTIBLE:
+                victims.append(rec.request_id)
+        return victims
+
+    # -- the accounting tick ------------------------------------------------------
+    def tick(self, now: float) -> TickRecord:
+        dt = max(1e-9, now - self._last_tick)
+        self._last_tick = now
+        self.expire_entitlements(now)
+        cap = self.capacity()
+        names = [n for n in self.entitlements]
+        coeff = self.spec.coefficients
+        avg_slo = self.pool_avg_slo()
+
+        # 1. measure usage + demand
+        measured: dict[str, float] = {}
+        for n in names:
+            st = self.status[n]
+            st.measured_tps = st.window_tokens / dt
+            measured[n] = st.measured_tps
+            st.window_tokens = 0.0
+            inst_demand = self._demand_window.get(n, 0.0) / dt
+            # demand signal: EWMA for stability, floored by live usage
+            self._demand_tps[n] = max(
+                0.5 * self._demand_tps.get(n, 0.0) + 0.5 * inst_demand,
+                measured[n])
+            self._demand_window[n] = 0.0
+
+        # 2. burst intensity (Eq. 3 EWMA) — must precede priority calc
+        for n in names:
+            espec, st = self.entitlements[n], self.status[n]
+            usage = Resources(measured[n], st.kv_bytes_in_use,
+                              float(st.resident))
+            delta = prio.burst_overconsumption(usage, espec.baseline)
+            st.burst = prio.burst_update(st.burst, delta, coeff.gamma_burst)
+
+        # 3. priority weights (Eq. 1) with updated burst, previous debt
+        weights = {}
+        for n in names:
+            espec, st = self.entitlements[n], self.status[n]
+            weights[n] = prio.priority_weight(
+                espec.qos.service_class, espec.qos.slo_target_ms, avg_slo,
+                st.burst, st.debt, coeff)
+
+        # 4. allocation: protected reserved → elastic baselines → backfill
+        alloc = self._allocate_tps(cap.tokens_per_second, names, weights)
+
+        # 5. debt update (Eq. 2) for debt-bearing classes
+        for n in names:
+            espec, st = self.entitlements[n], self.status[n]
+            if espec.qos.service_class in DEBT_CLASSES:
+                # Underservice only counts when there is demand to serve:
+                # an idle elastic entitlement is not "underserved", and
+                # demand below baseline is not a gap either.  Service
+                # above baseline (backfill burst) accrues credit.
+                demand = self._demand_tps[n]
+                base = espec.baseline.tokens_per_second
+                if demand <= 1e-9 or base <= 0.0:
+                    gap = 0.0
+                else:
+                    # debt tracks DELIVERED service ("underserved over
+                    # time", §3.3): the measured completion rate,
+                    # floored by the demand-capped funding (a tenant
+                    # whose work is still in flight is not underserved
+                    # by more than its funding shortfall).
+                    served = max(measured[n], min(alloc[n], demand))
+                    entitled_now = min(base, max(demand, served))
+                    gap = (entitled_now - served) / base
+                gap = min(coeff.gap_clip, max(-coeff.gap_clip, gap))
+                st.debt = min(coeff.debt_max, max(
+                    coeff.debt_min,
+                    prio.debt_update(st.debt, gap, coeff.gamma_debt)))
+
+        # 6. fund the ledger at effective rates
+        for n in names:
+            st = self.status[n]
+            st.effective = Resources(alloc[n], st.effective.kv_bytes,
+                                     st.effective.concurrency)
+            self.ledger.set_rate(n, alloc[n], now)
+
+        rec = TickRecord(
+            t=now,
+            capacity_tps=cap.tokens_per_second,
+            allocations=dict(alloc),
+            priorities=dict(weights),
+            debts={n: self.status[n].debt for n in names},
+            bursts={n: self.status[n].burst for n in names},
+            in_flight={n: self.status[n].in_flight for n in names},
+            demand_tps=dict(self._demand_tps),
+        )
+        self.history.append(rec)
+        return rec
+
+    def _allocate_tps(self, capacity: float, names: list[str],
+                      weights: dict[str, float]) -> dict[str, float]:
+        """Funding allocation with work conservation.
+
+        Protected classes are FUNDED at baseline unconditionally (their
+        buckets can always admit up to baseline — "never reclaimed");
+        but surplus for backfill is computed against their *active use*
+        min(baseline, demand), so idle reserved capacity is borrowable
+        by lower classes and reclaimed within one accounting tick when
+        the protected tenant returns (the paper's Exp. 1 squeeze).
+        """
+        alloc = {n: 0.0 for n in names}
+        live = [n for n in names
+                if self.status[n].state == EntitlementState.BOUND]
+
+        def demand(n: str) -> float:
+            return self._demand_tps.get(n, 0.0)
+
+        # (a) protected: fund at baseline; emergency-scale only if the
+        #     *active* protected use exceeds runtime capacity.
+        protected = [n for n in live
+                     if self.entitlements[n].qos.service_class
+                     in PROTECTED_CLASSES]
+        base_p = {n: self.entitlements[n].baseline.tokens_per_second
+                  for n in protected}
+        active_p = {n: min(base_p[n], demand(n)) for n in protected}
+        total_active_p = sum(active_p.values())
+        if total_active_p > capacity and total_active_p > 0:
+            scale = capacity / total_active_p
+            for n in protected:
+                alloc[n] = base_p[n] * scale
+            return alloc           # nothing left for anyone else
+        for n in protected:
+            alloc[n] = base_p[n]
+        remaining = max(0.0, capacity - total_active_p)
+
+        # (b) elastic baselines (demand-capped) — weighted water-fill
+        #     under scarcity; an idle elastic strands nothing.
+        elastic = [n for n in live
+                   if self.entitlements[n].qos.service_class
+                   == ServiceClass.ELASTIC]
+        want_e = {n: min(self.entitlements[n].baseline.tokens_per_second,
+                         demand(n))
+                  for n in elastic}
+        fill = waterfill(remaining, want_e,
+                         {n: weights[n] for n in elastic})
+        for n in elastic:
+            alloc[n] = fill[n]
+        remaining = max(0.0, remaining - sum(fill.values()))
+
+        # (c) work-conserving backfill of surplus to burst-eligible
+        #     classes with unmet demand (incl. spot/preemptible which
+        #     have no baseline, and dedicated bursting above baseline).
+        burst_ok = [n for n in live
+                    if self.entitlements[n].qos.service_class
+                    in BURST_CLASSES]
+        want_b = {}
+        for n in burst_ok:
+            used = (active_p[n] if n in active_p
+                    else min(alloc[n], demand(n)))
+            want_b[n] = max(0.0, demand(n) - used)
+        fill = waterfill(remaining, want_b,
+                         {n: weights[n] for n in burst_ok})
+        for n in burst_ok:
+            alloc[n] += fill[n]
+        return alloc

@@ -1,0 +1,8 @@
+from repro.distributed.sharding import (
+    ShardingPlan,
+    cache_pspecs,
+    make_plan,
+    param_pspecs,
+)
+
+__all__ = ["ShardingPlan", "cache_pspecs", "make_plan", "param_pspecs"]

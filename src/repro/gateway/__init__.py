@@ -1,0 +1,3 @@
+from repro.gateway.gateway import Gateway, GatewayResponse
+
+__all__ = ["Gateway", "GatewayResponse"]

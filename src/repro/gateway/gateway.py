@@ -1,0 +1,85 @@
+"""AI Gateway: the admission boundary (paper Fig. 1, LiteLLM role).
+
+Responsibilities (paper §4.3):
+  - resolve the inference key to an entitlement (auth);
+  - run the admission pipeline BEFORE the request reaches a backend;
+  - on rejection return 429 + Retry-After;
+  - on completion, post actual token consumption back to the auth
+    service (the callback that closes admission ↔ execution accounting).
+
+State lives in the StateStore (Redis contract): key → entitlement
+mapping and per-entitlement counters, so a real deployment can point
+this class at an actual Redis.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import (
+    AdmissionController,
+    AdmissionRequest,
+    StateStore,
+    TokenPool,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class GatewayResponse:
+    status: int                      # 200 admitted / 401 / 429
+    request_id: str
+    retry_after_s: Optional[float] = None
+    reason: Optional[str] = None
+    priority: float = 0.0
+
+
+class Gateway:
+    def __init__(self, pool: TokenPool,
+                 store: Optional[StateStore] = None) -> None:
+        self.pool = pool
+        self.controller = AdmissionController(pool)
+        self.store = store or StateStore()
+
+    # -- key management ---------------------------------------------------------
+    def register_key(self, api_key: str, entitlement: str) -> None:
+        self.store.set(f"key:{api_key}", entitlement)
+
+    def resolve(self, api_key: str, now: float = 0.0) -> Optional[str]:
+        return self.store.get(f"key:{api_key}", now)
+
+    # -- request path --------------------------------------------------------------
+    def handle(self, api_key: str, request_id: str, input_tokens: int,
+               max_tokens: Optional[int], now: float,
+               kv_bytes_per_token: float = 0.0) -> GatewayResponse:
+        ent = self.resolve(api_key, now)
+        if ent is None:
+            return GatewayResponse(status=401, request_id=request_id,
+                                   reason="unknown_key")
+        decision = self.controller.decide(AdmissionRequest(
+            entitlement=ent, input_tokens=input_tokens,
+            max_tokens=max_tokens, arrival_s=now, request_id=request_id,
+            kv_bytes_per_token=kv_bytes_per_token))
+        if not decision.admitted:
+            self.store.incr(f"denials:{ent}", 1.0, now)
+            return GatewayResponse(
+                status=429, request_id=request_id,
+                retry_after_s=decision.retry_after_s,
+                reason=decision.reason.value if decision.reason else None,
+                priority=decision.priority)
+        self.store.incr(f"admits:{ent}", 1.0, now)
+        return GatewayResponse(status=200, request_id=request_id,
+                               priority=decision.priority)
+
+    # -- completion callback ----------------------------------------------------------
+    def on_complete(self, request_id: str, actual_output_tokens: int,
+                    latency_s: float, now: float) -> None:
+        rec = self.pool.in_flight.get(request_id)
+        self.pool.on_complete(request_id, actual_output_tokens, now)
+        if rec is not None:
+            self.store.incr(f"tokens:{rec.entitlement}",
+                            float(actual_output_tokens), now)
+            self.store.set(f"last_latency:{rec.entitlement}", latency_s,
+                           now)
+
+    def on_failure(self, request_id: str, now: float) -> None:
+        self.pool.on_evict(request_id, now)

@@ -1,0 +1,6 @@
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ops import flash_attention_bshd
+from repro.kernels.flash_attention.ref import reference_attention
+
+__all__ = ["flash_attention", "flash_attention_bshd",
+           "reference_attention"]

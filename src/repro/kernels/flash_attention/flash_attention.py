@@ -1,0 +1,126 @@
+"""Flash attention (prefill) — Pallas TPU kernel.
+
+TPU adaptation of the FlashAttention tiling: the grid's last dimension
+iterates K/V blocks *sequentially* while VMEM scratch carries the
+running (m, l, acc) online-softmax state — the TPU idiom for the CUDA
+kernel's shared-memory loop.  Block shapes are MXU-aligned (q/k blocks
+multiples of the 128-lane tile; dh is the contraction minor dim).
+
+Supports: causal masking, sliding windows (gemma2 local layers), logit
+soft-capping (gemma2), and GQA via the q-head → kv-head index map
+(kv blocks are fetched once per q-head group position — no repeated-KV
+materialisation in HBM).
+
+Layouts: q (B, H, S, dh) · k/v (B, H_kv, S, dh) → out (B, H, S, dh).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.38e38
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref,
+                  m_scratch, l_scratch, acc_scratch,
+                  *, block_q: int, block_k: int, n_k: int,
+                  causal: bool, window: int | None,
+                  softcap: float | None, scale: float):
+    iq = pl.program_id(2)
+    ik = pl.program_id(3)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (bq, dh)
+    k = k_ref[0, 0].astype(jnp.float32)            # (bk, dh)
+    v = v_ref[0, 0].astype(jnp.float32)            # (bk, dh)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scratch[...]                        # (bq, 1)
+    l_prev = l_scratch[...]
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    # guard fully-masked rows (exp(NEG_INF - NEG_INF) would be 1)
+    p = jnp.exp(s - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.where(m_prev > NEG_INF / 2,
+                      jnp.exp(m_prev - m_new), 0.0)
+    l_new = alpha * l_prev + jnp.sum(p, axis=1, keepdims=True)
+    acc_scratch[...] = (acc_scratch[...] * alpha
+                        + jax.lax.dot_general(
+                            p, v, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32))
+    m_scratch[...] = m_new
+    l_scratch[...] = l_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_scratch[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_scratch[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int | None = None,
+                    softcap: float | None = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q (B,H,S,dh) · k,v (B,H_kv,S,dh) → (B,H,S,dh)."""
+    B, H, S, dh = q.shape
+    _, H_kv, Sk, _ = k.shape
+    assert H % H_kv == 0
+    group = H // H_kv
+    block_q = min(block_q, S)
+    block_k = min(block_k, Sk)
+    assert S % block_q == 0 and Sk % block_k == 0
+    n_q, n_k = S // block_q, Sk // block_k
+    scale = 1.0 / (dh ** 0.5)
+
+    grid = (B, H, n_q, n_k)
+    kernel = functools.partial(
+        _flash_kernel, block_q=block_q, block_k=block_k, n_k=n_k,
+        causal=causal, window=window, softcap=softcap, scale=scale)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh),
+                         lambda b, h, iq, ik: (b, h, iq, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b, h, iq, ik, g=group: (b, h // g, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda b, h, iq, ik: (b, h, iq, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),   # running sum l
+            pltpu.VMEM((block_q, dh), jnp.float32),  # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,28 @@
+"""Jitted public wrapper: picks the Pallas kernel on TPU, interpret
+mode elsewhere (CPU validation), with layout adaptation from the model
+stack's (B, S, H, dh) to the kernel's (B, H, S, dh)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "block_q", "block_k"))
+def flash_attention_bshd(q, k, v, *, causal=True, window=None,
+                         softcap=None, block_q=128, block_k=128):
+    """Model-layout entry point: q (B,S,H,dh), k/v (B,Sk,H_kv,dh)."""
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    out = flash_attention(qt, kt, vt, causal=causal, window=window,
+                          softcap=softcap, block_q=block_q,
+                          block_k=block_k, interpret=not _on_tpu())
+    return out.transpose(0, 2, 1, 3)

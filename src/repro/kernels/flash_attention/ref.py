@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int | None = None,
+                        softcap: float | None = None) -> jax.Array:
+    """q (B,H,S,dh) · k,v (B,H_kv,Sk,dh) → (B,H,S,dh), fp32 softmax."""
+    B, H, S, dh = q.shape
+    H_kv, Sk = k.shape[1], k.shape[2]
+    group = H // H_kv
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((S, Sk), bool)
+    if causal:
+        mask = mask & (k_pos <= q_pos)
+    if window is not None:
+        mask = mask & (q_pos - k_pos < window)
+    s = jnp.where(mask[None, None], s, -2.38e38)
+    p = jax.nn.softmax(s, axis=-1)
+    # fully-masked rows → zero output (kernel convention)
+    any_valid = mask.any(axis=-1)[None, None, :, None]
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    out = jnp.where(any_valid, out, 0.0)
+    return out.astype(q.dtype)

@@ -1,0 +1,6 @@
+from repro.kernels.paged_attention.ops import paged_decode_attention
+from repro.kernels.paged_attention.paged_attention import paged_attention
+from repro.kernels.paged_attention.ref import reference_paged_attention
+
+__all__ = ["paged_attention", "paged_decode_attention",
+           "reference_paged_attention"]

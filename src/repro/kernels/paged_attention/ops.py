@@ -1,0 +1,20 @@
+"""Jitted wrapper for paged decode attention (TPU kernel / interpret)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.paged_attention import paged_attention
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("softcap",))
+def paged_decode_attention(q, k_pages, v_pages, block_tables,
+                           context_lens, *, softcap=None):
+    return paged_attention(q, k_pages, v_pages, block_tables,
+                           context_lens, softcap=softcap,
+                           interpret=not _on_tpu())

@@ -1,0 +1,130 @@
+"""Paged attention (single-token decode) — Pallas TPU kernel.
+
+vLLM's PagedAttention re-thought for TPU: instead of warp-level pointer
+chasing through a block table in L2, the block table rides in scalar
+memory (``PrefetchScalarGridSpec``) and *drives the BlockSpec index
+maps* — each grid step DMAs exactly one KV page HBM→VMEM while the MXU
+consumes the previous one (the pipelined-prefetch TPU idiom).  Pages
+are token-major and lane-aligned (page_tokens × dh tiles).
+
+Inputs:
+  q            (B, H, dh)           one decode token per sequence
+  k_pages      (P, T, H_kv, dh)     the physical page pool
+  v_pages      (P, T, H_kv, dh)
+  block_tables (B, max_pages) int32 page ids, -1 padded
+  context_lens (B,) int32           valid tokens per sequence
+Output: (B, H, dh).
+
+Grid (B, H_kv, max_pages): the page dimension iterates sequentially
+with (m, l, acc) online-softmax scratch carried in VMEM; the whole
+q-head GROUP for one kv head (G = H/H_kv rows) is processed per step so
+GQA costs one page fetch for all its q heads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -2.38e38
+
+
+def _paged_kernel(block_tables_ref, context_lens_ref,   # scalar prefetch
+                  q_ref, k_ref, v_ref, o_ref,
+                  m_scratch, l_scratch, acc_scratch,
+                  *, page_tokens: int, n_pages: int, scale: float,
+                  softcap: float | None):
+    b = pl.program_id(0)
+    ip = pl.program_id(2)
+
+    @pl.when(ip == 0)
+    def _init():
+        m_scratch[...] = jnp.full_like(m_scratch, NEG_INF)
+        l_scratch[...] = jnp.zeros_like(l_scratch)
+        acc_scratch[...] = jnp.zeros_like(acc_scratch)
+
+    ctx = context_lens_ref[b]
+    page_id = block_tables_ref[b, ip]
+    valid_page = page_id >= 0
+
+    q = q_ref[0, 0].astype(jnp.float32)             # (G, dh)
+    k = k_ref[0, :, 0, :].astype(jnp.float32)       # (T, dh)
+    v = v_ref[0, :, 0, :].astype(jnp.float32)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+
+    tok_pos = ip * page_tokens + jax.lax.broadcasted_iota(
+        jnp.int32, s.shape, 1)
+    mask = (tok_pos < ctx) & valid_page
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scratch[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.where(mask, jnp.exp(s - m_new), 0.0)
+    alpha = jnp.where(m_prev > NEG_INF / 2,
+                      jnp.exp(m_prev - m_new), 0.0)
+    l_scratch[...] = alpha * l_scratch[...] + jnp.sum(
+        p, axis=1, keepdims=True)
+    acc_scratch[...] = acc_scratch[...] * alpha + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_scratch[...] = m_new
+
+    @pl.when(ip == n_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_scratch[...], 1e-30)
+        o_ref[0, 0] = (acc_scratch[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                    block_tables: jax.Array, context_lens: jax.Array, *,
+                    softcap: float | None = None,
+                    interpret: bool = False) -> jax.Array:
+    B, H, dh = q.shape
+    P, T, H_kv, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    assert H % H_kv == 0
+    G = H // H_kv
+    scale = 1.0 / (dh ** 0.5)
+    q_grouped = q.reshape(B, H_kv, G, dh)
+
+    grid = (B, H_kv, max_pages)
+    kernel = functools.partial(
+        _paged_kernel, page_tokens=T, n_pages=max_pages, scale=scale,
+        softcap=softcap)
+
+    def q_map(b, h, ip, bt, cl):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, ip, bt, cl):
+        # the scalar-prefetched block table drives the page DMA; padded
+        # (-1) entries clamp to page 0 and are masked in the kernel
+        return (jnp.maximum(bt[b, ip], 0), 0, h, 0)
+
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, G, dh), q_map),
+                pl.BlockSpec((1, T, 1, dh), kv_map),
+                pl.BlockSpec((1, T, 1, dh), kv_map),
+            ],
+            out_specs=pl.BlockSpec((1, 1, G, dh), q_map),
+            scratch_shapes=[
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, 1), jnp.float32),
+                pltpu.VMEM((G, dh), jnp.float32),
+            ],
+        ),
+        out_shape=jax.ShapeDtypeStruct((B, H_kv, G, dh), q.dtype),
+        interpret=interpret,
+    )(block_tables, context_lens, q_grouped, k_pages, v_pages)
+    return out.reshape(B, H, dh)

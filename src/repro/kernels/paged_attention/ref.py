@@ -1,0 +1,39 @@
+"""Pure-jnp oracle for paged decode attention: gathers pages into a
+dense KV per sequence and runs masked softmax attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def reference_paged_attention(q, k_pages, v_pages, block_tables,
+                              context_lens, *, softcap=None):
+    """q (B,H,dh); pages (P,T,H_kv,dh); tables (B,max_pages);
+    lens (B,) → (B,H,dh)."""
+    B, H, dh = q.shape
+    P, T, H_kv, _ = k_pages.shape
+    max_pages = block_tables.shape[1]
+    group = H // H_kv
+
+    safe = jnp.maximum(block_tables, 0)              # (B, max_pages)
+    k = k_pages[safe]                                # (B,mp,T,H_kv,dh)
+    v = v_pages[safe]
+    k = k.reshape(B, max_pages * T, H_kv, dh)
+    v = v.reshape(B, max_pages * T, H_kv, dh)
+    k = jnp.repeat(k, group, axis=2)
+    v = jnp.repeat(v, group, axis=2)
+
+    scale = 1.0 / (dh ** 0.5)
+    s = jnp.einsum("bhd,bkhd->bhk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = jnp.arange(max_pages * T)[None, :]
+    page_ok = (block_tables >= 0)[:, :, None]        # (B,mp,1)
+    page_ok = jnp.broadcast_to(page_ok, (B, max_pages, T)) \
+        .reshape(B, max_pages * T)
+    mask = (pos < context_lens[:, None]) & page_ok   # (B, K)
+    s = jnp.where(mask[:, None, :], s, -2.38e38)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhk,bkhd->bhd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

@@ -1,0 +1,448 @@
+"""Multi-pod dry-run: prove every (architecture × shape × mesh) cell
+lowers AND compiles under the production sharding — without hardware.
+
+MUST set the host-device count before ANY other import (jax locks the
+device count on first backend init):
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("REPRO_EXTRA_XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import dataclasses
+import json
+import re
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ASSIGNED, get_config
+from repro.distributed.sharding import cache_pspecs, make_plan, param_pspecs
+from repro.launch.mesh import make_production_mesh
+from repro.models import SHAPES, build_model
+from repro.models.config import ArchConfig, ShapeSpec
+from repro.training.loss import lm_loss
+from repro.training.optimizer import OptimizerConfig, adamw_init, adamw_update
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__),
+                            "..", "..", "..", "benchmarks", "artifacts",
+                            "dryrun")
+
+#: long_500k applicability (DESIGN.md §5): bounded-state archs only
+LONG_OK = {"gemma2-9b", "gemma2-2b", "xlstm-350m", "recurrentgemma-2b"}
+
+COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*?\s+f(?:32|16)?\S*\s", re.IGNORECASE)
+
+
+def cell_applicable(arch: str, shape: ShapeSpec) -> tuple[bool, str]:
+    if shape.name == "long_500k" and arch not in LONG_OK:
+        return False, ("SKIP: pure full-attention KV at 524288 ctx "
+                       "(see DESIGN.md §Arch-applicability)")
+    return True, ""
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input — weak-type
+    correct, shardable, no device allocation."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    f32 = jnp.float32
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        specs = {"tokens": sds((B, S), i32), "targets": sds((B, S), i32)}
+        if cfg.is_encoder_decoder:
+            specs["extra_embed"] = sds((B, S, cfg.d_model), f32)
+        elif cfg.num_vision_tokens:
+            specs["extra_embed"] = sds((B, cfg.num_vision_tokens,
+                                        cfg.d_model), f32)
+        return specs
+    if shape.kind == "prefill":
+        specs = {"tokens": sds((B, S), i32)}
+        if cfg.is_encoder_decoder:
+            specs["extra_embed"] = sds((B, S, cfg.d_model), f32)
+        elif cfg.num_vision_tokens:
+            specs["extra_embed"] = sds((B, cfg.num_vision_tokens,
+                                        cfg.d_model), f32)
+        return specs
+    # decode: one new token against an S-token KV cache
+    return {"token": sds((B, 1), i32), "cur_index": sds((), i32)}
+
+
+def batch_pspec(plan, specs: dict) -> dict:
+    P = jax.sharding.PartitionSpec
+    out = {}
+    for k, v in specs.items():
+        if v.ndim == 0 or v.shape[0] % plan.dp_size != 0:
+            out[k] = P(*([None] * v.ndim))
+        else:
+            out[k] = P(plan.dp, *([None] * (v.ndim - 1)))
+    return out
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict:
+    """Sum per-device operand bytes of every collective op in the
+    post-SPMD HLO.  Returns totals by collective kind."""
+    dtype_bytes = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+                   "f64": 8, "s8": 1, "u8": 1, "pred": 1, "s64": 8,
+                   "f8e4m3fn": 1, "f8e5m2": 1, "u64": 8, "s16": 2,
+                   "u16": 2}
+    kinds = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+    totals = {k: 0.0 for k in kinds}
+    counts = {k: 0 for k in kinds}
+    shape_re = re.compile(r"(f32|bf16|f16|f64|s32|u32|s8|u8|pred|s64|"
+                          r"u64|s16|u16|f8e4m3fn|f8e5m2)\[([0-9,]*)\]")
+    for line in hlo.splitlines():
+        stripped = line.strip()
+        # match op lines like:  %x = bf16[...] all-gather(...)
+        m = re.search(r"=\s+(?:\([^)]*\)|\S+)\s+"
+                      r"(all-gather|all-reduce|reduce-scatter|"
+                      r"all-to-all|collective-permute)", stripped)
+        if not m:
+            continue
+        kind = m.group(1)
+        # operand bytes: shapes on the RHS result (covers tuple results)
+        rhs = stripped.split("=", 1)[1]
+        total = 0.0
+        for dt, dims in shape_re.findall(rhs.split(kind)[0] + " "):
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    if d:
+                        n *= int(d)
+            total += n * dtype_bytes.get(dt, 4)
+        totals[kind] += total
+        counts[kind] += 1
+    return {"bytes_by_kind": totals,
+            "counts": counts,
+            "total_bytes": sum(totals.values())}
+
+
+def build_step(model, plan, shape: ShapeSpec, specs: dict,
+               scan_unroll: int = 1, rt_overrides: dict = None):
+    """Returns (fn, example_args, in_shardings, donate, out_shardings)
+    for the cell's step.  ``pin_out_shardings`` (a harness-level §Perf
+    option) pins outputs — notably the updated KV cache — to the input
+    layout; leaving them unspecified lets XLA replicate outputs, which
+    shows up as full-cache all-gathers in serve_step."""
+    rt_overrides = dict(rt_overrides or {})
+    pin_out = rt_overrides.pop("pin_out_shardings", False)
+    cfg = model.cfg
+    rt = plan.runtime(remat="full" if shape.kind == "train" else "none",
+                      scan_unroll=scan_unroll, **rt_overrides)
+    P = jax.sharding.PartitionSpec
+    named = lambda spec: jax.sharding.NamedSharding(plan.mesh, spec)  # noqa
+
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_spec = param_pspecs(plan, params_shape)
+
+    if shape.kind == "train":
+        opt_shape = jax.eval_shape(adamw_init, params_shape)
+        o_spec = jax.tree.map(
+            lambda _: None, opt_shape,
+            is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+        # moments inherit the param sharding; step counter replicated
+        o_spec = type(opt_shape)(
+            step=P(), mu=p_spec, nu=p_spec)
+        ocfg = OptimizerConfig()
+
+        def train_step(params, opt_state, batch):
+            def loss_fn(p):
+                logits = model.forward_train(
+                    p, batch["tokens"], rt=rt,
+                    extra_embed=batch.get("extra_embed"))
+                tgt = batch["targets"]
+                logits = logits[:, -tgt.shape[1]:, :]
+                loss, metrics = lm_loss(logits, tgt)
+                return loss, metrics
+
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            new_params, new_opt, om = adamw_update(params, grads,
+                                                   opt_state, ocfg)
+            return new_params, new_opt, {**metrics, **om}
+
+        b_spec = batch_pspec(plan, specs)
+        in_shardings = (jax.tree.map(named, p_spec),
+                        jax.tree.map(named, o_spec),
+                        jax.tree.map(named, b_spec))
+        args = (params_shape, opt_shape, specs)
+        out_sh = None
+        if pin_out:
+            metrics_spec = {k: named(P()) for k in
+                            ("loss", "accuracy", "tokens", "lr",
+                             "grad_norm", "step")}
+            out_sh = (jax.tree.map(named, p_spec),
+                      type(opt_shape)(step=named(P()),
+                                      mu=jax.tree.map(named, p_spec),
+                                      nu=jax.tree.map(named, p_spec)),
+                      metrics_spec)
+        return train_step, args, in_shardings, (0, 1), out_sh
+
+    if shape.kind == "prefill":
+        cache_shape = jax.eval_shape(
+            lambda: model.init_cache(shape.global_batch, shape.seq_len,
+                                     rt))
+        c_spec = cache_pspecs(plan, cache_shape)
+
+        def prefill_step(params, cache, batch):
+            logits, new_cache = model.prefill(
+                params, batch["tokens"], cache, rt,
+                extra_embed=batch.get("extra_embed"))
+            return logits, new_cache
+
+        b_spec = batch_pspec(plan, specs)
+        in_shardings = (jax.tree.map(named, p_spec),
+                        jax.tree.map(named, c_spec),
+                        jax.tree.map(named, b_spec))
+        args = (params_shape, cache_shape, specs)
+        out_sh = None
+        if pin_out:
+            B = shape.global_batch
+            logit_spec = P(plan.dp if B % plan.dp_size == 0 else None,
+                           None, plan.tp_axis)
+            out_sh = (named(logit_spec), jax.tree.map(named, c_spec))
+        return prefill_step, args, in_shardings, (1,), out_sh
+
+    # decode
+    cache_shape = jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len, rt))
+    c_spec = cache_pspecs(plan, cache_shape)
+
+    def serve_step(params, cache, batch):
+        logits, new_cache = model.decode_step(
+            params, batch["token"], cache, batch["cur_index"], rt)
+        return logits, new_cache
+
+    b_spec = batch_pspec(plan, specs)
+    in_shardings = (jax.tree.map(named, p_spec),
+                    jax.tree.map(named, c_spec),
+                    jax.tree.map(named, b_spec))
+    args = (params_shape, cache_shape, specs)
+    out_sh = None
+    if pin_out:
+        B = shape.global_batch
+        logit_spec = P(plan.dp if B % plan.dp_size == 0 else None,
+                       None, plan.tp_axis)
+        out_sh = (named(logit_spec), jax.tree.map(named, c_spec))
+    return serve_step, args, in_shardings, (1,), out_sh
+
+
+def _compile_costs(cfg, plan_mode, mesh, shape, scan_unroll,
+                   rt_overrides=None) -> dict:
+    """Lower+compile one variant; return raw cost numbers."""
+    model = build_model(cfg)
+    plan = make_plan(cfg, mesh, plan_mode)
+    specs = input_specs(cfg, shape)
+    fn, args, in_shardings, donate, out_sh = build_step(
+        model, plan, shape, specs, scan_unroll, rt_overrides)
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_shardings,
+                          out_shardings=out_sh,
+                          donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    coll = collective_bytes_from_hlo(hlo)
+    out = {
+        "flops": float(cost.get("flops", -1.0)) if cost else -1.0,
+        "bytes_accessed": float(cost.get("bytes accessed", -1.0))
+        if cost else -1.0,
+        "collectives": coll,
+        "hlo_lines": hlo.count("\n"),
+    }
+    if mem is not None:
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "alias_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+    return out
+
+
+def _variant_cfg(cfg, periods: int):
+    """Same architecture, ``periods`` repeats of the layer pattern (no
+    tail) — the probe models for per-period HLO cost extraction."""
+    kw = dict(num_layers=periods * len(cfg.pattern))
+    if cfg.is_encoder_decoder:
+        kw["encoder_layers"] = periods
+        kw["num_layers"] = periods
+    return dataclasses.replace(cfg, **kw)
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             out_dir: str = None, verbose: bool = True,
+             rt_overrides: dict = None, tag: str = "") -> dict:
+    shape = SHAPES[shape_name]
+    ok, why = cell_applicable(arch, shape)
+    result = {"arch": arch, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16",
+              "kind": shape.kind, "rt_overrides": rt_overrides or {},
+              "tag": tag}
+    if not ok:
+        result["status"] = "skip"
+        result["reason"] = why
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+            name = f"{arch}__{shape_name}__{result['mesh']}.json"
+            with open(os.path.join(out_dir, name), "w") as f:
+                json.dump(result, f, indent=1)
+        return result
+
+    cfg = get_config(arch)
+    mode = "train" if shape.kind == "train" else "serve"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+
+    t0 = time.time()
+    full = _compile_costs(cfg, mode, mesh, shape, scan_unroll=1,
+                          rt_overrides=rt_overrides)
+    t_full = time.time() - t0
+
+    # XLA's cost analysis counts a while-loop body ONCE regardless of
+    # trip count, so the layer scan hides (n_periods−1)× the flops.
+    # Probe with 1-period and 2-period (unroll=2) variants: the diff is
+    # exactly one period's body; scale it back in.
+    n_periods = cfg.n_periods if not cfg.is_encoder_decoder \
+        else cfg.num_layers
+    try:
+        c1 = _compile_costs(_variant_cfg(cfg, 1), mode, mesh, shape, 1,
+                            rt_overrides)
+        c2 = _compile_costs(_variant_cfg(cfg, 2), mode, mesh, shape, 2,
+                            rt_overrides)
+        scale_extra = n_periods - 1
+
+        def corrected(key):
+            body = max(0.0, c2[key] - c1[key])
+            return full[key] + scale_extra * body
+
+        flops_c = corrected("flops")
+        bytes_c = corrected("bytes_accessed")
+        coll_body = max(0.0, c2["collectives"]["total_bytes"]
+                        - c1["collectives"]["total_bytes"])
+        coll_c = (full["collectives"]["total_bytes"]
+                  + scale_extra * coll_body)
+        coll_by_kind = {}
+        for k in full["collectives"]["bytes_by_kind"]:
+            body_k = max(0.0, c2["collectives"]["bytes_by_kind"][k]
+                         - c1["collectives"]["bytes_by_kind"][k])
+            coll_by_kind[k] = (full["collectives"]["bytes_by_kind"][k]
+                               + scale_extra * body_k)
+        probes_ok = True
+    except Exception as e:  # noqa: BLE001
+        flops_c, bytes_c, coll_c = (full["flops"],
+                                    full["bytes_accessed"],
+                                    full["collectives"]["total_bytes"])
+        coll_by_kind = full["collectives"]["bytes_by_kind"]
+        probes_ok = False
+        print(f"  probe variants failed ({e!r}); reporting uncorrected",
+              file=sys.stderr)
+
+    result.update({
+        "status": "ok",
+        "compile_s": round(t_full, 2),
+        "flops_raw": full["flops"],
+        "flops": flops_c,
+        "bytes_accessed_raw": full["bytes_accessed"],
+        "bytes_accessed": bytes_c,
+        "collectives": {"total_bytes": coll_c,
+                        "bytes_by_kind": coll_by_kind,
+                        "counts": full["collectives"]["counts"]},
+        "hlo_lines": full["hlo_lines"],
+        "scan_correction": probes_ok,
+        "n_periods": n_periods,
+    })
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes"):
+        if attr in full:
+            result[attr] = full[attr]
+    if verbose:
+        print(f"[{arch} × {shape_name} × {result['mesh']}] "
+              f"compile {result.get('compile_s')}s  "
+              f"flops/dev {flops_c:.3e} (raw {full['flops']:.3e})  "
+              f"coll {coll_c:.3e} B")
+        print("memory_analysis:", {k: result[k] for k in result
+                                   if k.endswith("_in_bytes")})
+        print("cost_analysis: flops=%.4e bytes=%.4e"
+              % (result["flops"], result["bytes_accessed"]))
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        name = f"{arch}__{shape_name}__{result['mesh']}{suffix}.json"
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(result, f, indent=1)
+    return result
+
+
+#: named optimization bundles for --opt (the §Perf hillclimb knobs)
+OPTIMIZATIONS = {
+    "blocked_attn": {"blocked_attn": True},
+    "blocked_attn_2k": {"blocked_attn": True, "attn_block_k": 2048},
+    "blocked_attn_4k": {"blocked_attn": True, "attn_block_k": 4096},
+    "blocked_attn_512": {"blocked_attn": True, "attn_block_k": 512},
+    "int8_kv": {"kv_cache_dtype": "int8"},
+    "onehot_update": {"onehot_cache_update": True},
+    "pin_out": {"pin_out_shardings": True},
+    "gqa_decode": {"grouped_gqa_decode": True},
+    # the combined serve-side bundle
+    "serve_opt": {"grouped_gqa_decode": True,
+                  "onehot_cache_update": True,
+                  "pin_out_shardings": True},
+    "serve_opt_int8": {"grouped_gqa_decode": True,
+                       "onehot_cache_update": True,
+                       "pin_out_shardings": True,
+                       "kv_cache_dtype": "int8"},
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="architecture id (default: all assigned)")
+    ap.add_argument("--shape", default=None,
+                    help="shape cell (default: all four)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--opt", action="append", default=[],
+                    choices=sorted(OPTIMIZATIONS),
+                    help="enable a §Perf optimization bundle")
+    ap.add_argument("--tag", default="",
+                    help="artifact filename suffix (hillclimb runs)")
+    ap.add_argument("--out", default=os.path.normpath(ARTIFACT_DIR))
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ASSIGNED)
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    overrides = {}
+    for o in args.opt:
+        overrides.update(OPTIMIZATIONS[o])
+
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    run_cell(arch, shape, mp, out_dir=args.out,
+                             rt_overrides=overrides, tag=args.tag)
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)[:200]))
+                    print(f"FAIL [{arch} × {shape} × mp={mp}]: {e}",
+                          file=sys.stderr)
+    if failures:
+        print(f"{len(failures)} cell(s) failed", file=sys.stderr)
+        sys.exit(1)
+    print("all cells passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,21 @@
+"""Production meshes.
+
+Defined as FUNCTIONS so importing this module never touches jax device
+state (device count locks on first backend init — the dry-run sets
+XLA_FLAGS before any jax import).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_test_mesh(n_data: int = 2, n_model: int = 4):
+    """Small mesh for CI (requires xla_force_host_platform_device_count)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))

@@ -1,0 +1,175 @@
+"""Roofline analysis from dry-run artifacts (TPU v5e target).
+
+Per (arch × shape × mesh) cell:
+  compute term    = HLO_FLOPs / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes / (chips × HBM_bw)
+  collective term = collective_bytes / (chips × link_bw)
+
+Sources: ``compiled.cost_analysis()`` supplies HLO FLOPs and bytes
+(NOTE: on the CPU-AOT path these are per-PROGRAM = per-device numbers
+for the SPMD executable; we scale per-device × chips for the global
+figure and divide back per the formulas).  Collective bytes are parsed
+from the post-SPMD HLO (per-device operand bytes summed over collective
+ops), multiplied by the ring algo-bandwidth factor 2(n−1)/n ≈ 2 for
+all-reduce and (n−1)/n ≈ 1 for the others.
+
+MODEL_FLOPS: 6·N·D for train (N = non-embedding params; N_active for
+MoE), 2·N·D + attention for prefill, 2·N·B (+ KV reads) per decode
+step.  The ratio MODEL_FLOPS / HLO_FLOPs flags remat/dispatch waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from dataclasses import dataclass
+
+import jax
+
+from repro.configs import get_config
+from repro.models import SHAPES, build_model
+
+PEAK_FLOPS = 197e12          # bf16 / chip (TPU v5e)
+HBM_BW = 819e9               # B/s / chip
+LINK_BW = 50e9               # B/s / link (ICI)
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float
+    hlo_flops_global: float
+    useful_ratio: float
+    bytes_per_device: float
+
+    def row(self) -> str:
+        return (f"{self.arch},{self.shape},{self.mesh},{self.chips},"
+                f"{self.compute_s:.3e},{self.memory_s:.3e},"
+                f"{self.collective_s:.3e},{self.dominant},"
+                f"{self.model_flops:.3e},{self.hlo_flops_global:.3e},"
+                f"{self.useful_ratio:.3f},{self.bytes_per_device:.3e}")
+
+
+def _param_counts(cfg) -> tuple[float, float]:
+    """(total non-embedding params, active non-embedding params)."""
+    model = build_model(cfg)
+    shapes = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    total = 0
+    moe = 0
+    emb = 0
+
+    def walk(path, leaf):
+        nonlocal total, moe, emb
+        keys = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                        for k in path)
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n
+        if "moe/w_" in keys:
+            moe += n
+        if keys.endswith("embed/table"):
+            emb += n
+
+    jax.tree_util.tree_map_with_path(walk, shapes)
+    non_emb = total - emb
+    if cfg.is_moe and cfg.num_experts:
+        frac = cfg.experts_per_token / cfg.num_experts
+        active = non_emb - moe + moe * frac
+    else:
+        active = non_emb
+    return float(non_emb), float(active)
+
+
+def model_flops(cfg, shape) -> float:
+    n_total, n_active = _param_counts(cfg)
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        return 6.0 * n_active * B * S
+    if shape.kind == "prefill":
+        attn_layers = sum(1 for k in (list(cfg.pattern) * cfg.n_periods
+                                      + list(cfg.tail_kinds))
+                          if k in ("global", "local"))
+        attn = (2.0 * 2.0 * B * S * S / 2.0 * cfg.num_heads
+                * cfg.head_dim * attn_layers / max(cfg.num_layers, 1))
+        return 2.0 * n_active * B * S + attn
+    # decode: one token per sequence + attention over the KV history
+    attn_layers = sum(1 for k in (list(cfg.pattern) * cfg.n_periods
+                                  + list(cfg.tail_kinds))
+                      if k in ("global", "local"))
+    kv_read = (2.0 * 2.0 * B * S * cfg.num_heads * cfg.head_dim
+               * attn_layers / max(cfg.num_layers, 1))
+    return 2.0 * n_active * B + kv_read
+
+
+def analyze(artifact: dict) -> Roofline | None:
+    if artifact.get("status") != "ok":
+        return None
+    arch, shape_name = artifact["arch"], artifact["shape"]
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    chips = 512 if artifact["mesh"] == "2x16x16" else 256
+
+    flops_dev = artifact["flops"]            # per-device (SPMD program)
+    bytes_dev = artifact["bytes_accessed"]
+    coll = artifact["collectives"]
+    # ring algo-bandwidth factors
+    ar = coll["bytes_by_kind"].get("all-reduce", 0.0) * 2.0
+    rest = (coll["total_bytes"]
+            - coll["bytes_by_kind"].get("all-reduce", 0.0)) * 1.0
+    coll_dev = ar + rest
+
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / LINK_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    mf = model_flops(cfg, shape)
+    hlo_global = flops_dev * chips
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=artifact["mesh"], chips=chips,
+        compute_s=compute_s, memory_s=memory_s,
+        collective_s=collective_s, dominant=dominant,
+        model_flops=mf, hlo_flops_global=hlo_global,
+        useful_ratio=mf / hlo_global if hlo_global > 0 else 0.0,
+        bytes_per_device=float(artifact.get("argument_size_in_bytes", 0)
+                               + artifact.get("temp_size_in_bytes", 0)))
+
+
+def load_artifacts(directory: str) -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(os.path.join(directory, "*.json"))):
+        with open(path) as f:
+            out.append(json.load(f))
+    return out
+
+
+def main() -> None:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default=os.path.normpath(
+        os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                     "benchmarks", "artifacts", "dryrun")))
+    args = ap.parse_args()
+    print("arch,shape,mesh,chips,compute_s,memory_s,collective_s,"
+          "dominant,model_flops,hlo_flops_global,useful_ratio,"
+          "bytes_per_device")
+    for art in load_artifacts(args.artifacts):
+        r = analyze(art)
+        if r is not None:
+            print(r.row())
+        else:
+            print(f"{art['arch']},{art['shape']},{art['mesh']},,,,,"
+                  f"SKIP,,,,")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Model stack: unified configs + family implementations.
+
+Families: dense GQA (llama / gemma2 local+global softcap), MoE (qwen3),
+xLSTM (mLSTM/sLSTM), RG-LRU hybrid (recurrentgemma), encoder-decoder
+(whisper), VLM backbone (internvl2, stub vision frontend).
+"""
+from repro.models.config import SHAPES, ArchConfig, ShapeSpec
+from repro.models.registry import Model, build_model, param_count
+from repro.models.runtime import LOCAL, Runtime
+
+__all__ = ["ArchConfig", "LOCAL", "Model", "Runtime", "SHAPES",
+           "ShapeSpec", "build_model", "param_count"]

@@ -1,0 +1,330 @@
+"""Attention: GQA with RoPE, full/sliding-window causal masks, gemma2
+logit soft-capping; prefill (writes KV cache) and single-token decode
+(reads dense KV cache) paths.
+
+The dense-KV paths here are the XLA reference used for training, the
+multi-pod dry-run, and as oracles for the Pallas kernels
+(``repro.kernels.flash_attention`` / ``paged_attention``).  A
+``kernel_backend`` switch in the engine selects the Pallas path on real
+TPU hardware.
+
+Shapes: activations (B, S, d); q/k/v (B, S, H, dh); dense KV cache per
+layer (B, S_max, H_kv, dh).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init, softcap
+
+
+def init_attention(key, cfg, dtype) -> dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    d = cfg.d_model
+    return {
+        "wq": dense_init(k1, (d, cfg.num_heads, cfg.head_dim), dtype),
+        "wk": dense_init(k2, (d, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "wv": dense_init(k3, (d, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "wo": dense_init(k4, (cfg.num_heads, cfg.head_dim, d), dtype),
+    }
+
+
+def _repeat_kv(x: jax.Array, groups: int) -> jax.Array:
+    """(B,S,H_kv,dh) → (B,S,H,dh) by repeating each kv head."""
+    if groups == 1:
+        return x
+    return jnp.repeat(x, groups, axis=2)
+
+
+def _mask_bias(q_pos: jax.Array, k_pos: jax.Array, causal: bool,
+               window: int | None, k_valid: jax.Array | None = None
+               ) -> jax.Array:
+    """Additive attention bias (Sq, Sk) in fp32; -inf where masked."""
+    neg = jnp.asarray(-2.38e38, jnp.float32)
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok = ok & (k_pos[None, :] <= q_pos[:, None])
+    if window is not None:
+        ok = ok & (q_pos[:, None] - k_pos[None, :] < window)
+    if k_valid is not None:
+        ok = ok & k_valid[None, :]
+    return jnp.where(ok, 0.0, neg)
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, bias: jax.Array,
+           logit_cap: float | None) -> jax.Array:
+    """q:(B,Sq,H,dh) k,v:(B,Sk,H,dh) bias:(Sq,Sk) or (B,Sq,Sk)
+    → (B,Sq,H,dh).  Softmax in fp32 (bf16 logits lose too much range
+    with softcaps)."""
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    logits = softcap(logits, logit_cap)
+    if bias.ndim == 2:
+        logits = logits + bias[None, None, :, :]
+    else:                                   # per-batch bias (decode)
+        logits = logits + bias[:, None, :, :]
+    weights = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", weights, v)
+
+
+def attend_blocked(q: jax.Array, k: jax.Array, v: jax.Array,
+                   q_pos: jax.Array, causal: bool, window: int | None,
+                   logit_cap: float | None,
+                   block_k: int = 1024) -> jax.Array:
+    """Online-softmax attention, scanning K/V blocks — the XLA-level
+    flash schedule.  Peak temp drops from O(S²) logits to O(S·block_k):
+    this is what makes prefill_32k fit HBM (§Perf hillclimb A).
+
+    Inference-path only (the scan carries (m, l, acc); its backward
+    would store per-block carries — training uses the fused+remat
+    path instead).  q (B,S,H,dh); k,v (B,Sk,H,dh) head-expanded.
+    """
+    B, S, H, dh = q.shape
+    Sk = k.shape[1]
+    bk = min(block_k, Sk)
+    # pad Sk to a block multiple (padded keys masked via k_pos >= Sk)
+    pad = (-Sk) % bk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nk = (Sk + pad) // bk
+    scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    neg = jnp.asarray(-2.38e38, jnp.float32)
+    qf = q.astype(jnp.float32) * scale
+
+    def body(carry, j):
+        m, l, acc = carry
+        kj = jax.lax.dynamic_slice_in_dim(k, j * bk, bk, 1)
+        vj = jax.lax.dynamic_slice_in_dim(v, j * bk, bk, 1)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kj.astype(jnp.float32))
+        s = softcap(s, logit_cap)
+        k_pos = j * bk + jnp.arange(bk)
+        ok = (k_pos[None, :] < Sk) & jnp.ones((S, bk), bool)
+        if causal:
+            ok = ok & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            ok = ok & (q_pos[:, None] - k_pos[None, :] < window)
+        s = jnp.where(ok[None, None], s, neg)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.where(ok[None, None], jnp.exp(s - m_new[..., None]), 0.0)
+        alpha = jnp.where(m > neg / 2, jnp.exp(m - m_new), 0.0)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = (acc * alpha[..., None]
+                   + jnp.einsum("bhqk,bkhd->bhqd", p,
+                                vj.astype(jnp.float32)))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, S), neg, jnp.float32)
+    l0 = jnp.zeros((B, H, S), jnp.float32)
+    acc0 = jnp.zeros((B, H, S, dh), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, acc0),
+                                  jnp.arange(nk))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)   # (B,S,H,dh)
+
+
+#: sequences at or above this use the blocked schedule on no-grad paths
+BLOCKED_ATTN_THRESHOLD = 4096
+
+
+def attention_block(params: dict, x: jax.Array, cfg, kind: str,
+                    positions: jax.Array) -> jax.Array:
+    """Self-attention over full sequences (train / prefill compute).
+
+    kind: "global" (full causal) or "local" (sliding window causal)."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    k = _repeat_kv(k, cfg.num_heads // cfg.num_kv_heads)
+    v = _repeat_kv(v, cfg.num_heads // cfg.num_kv_heads)
+    pos1d = positions[0] if positions.ndim > 1 else positions
+    bias = _mask_bias(pos1d, pos1d, causal=True,
+                      window=cfg.window_size if kind == "local" else None)
+    out = attend(q, k, v, bias, cfg.attn_logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def encoder_attention_block(params: dict, x: jax.Array, cfg,
+                            positions: jax.Array,
+                            blocked: bool = False) -> jax.Array:
+    """Bidirectional self-attention (whisper encoder)."""
+    S = x.shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    k = _repeat_kv(k, cfg.num_heads // cfg.num_kv_heads)
+    v = _repeat_kv(v, cfg.num_heads // cfg.num_kv_heads)
+    pos1d = positions[0] if positions.ndim > 1 else positions
+    if blocked and S >= BLOCKED_ATTN_THRESHOLD:
+        out = attend_blocked(q, k, v, pos1d, causal=False, window=None,
+                             logit_cap=cfg.attn_logit_softcap)
+    else:
+        bias = _mask_bias(pos1d, pos1d, causal=False, window=None)
+        out = attend(q, k, v, bias, cfg.attn_logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def cross_attention_block(params: dict, x: jax.Array, enc_kv: dict, cfg
+                          ) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder K/V."""
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = _repeat_kv(enc_kv["k"], cfg.num_heads // cfg.num_kv_heads)
+    v = _repeat_kv(enc_kv["v"], cfg.num_heads // cfg.num_kv_heads)
+    Sq, Sk = q.shape[1], k.shape[1]
+    bias = jnp.zeros((Sq, Sk), jnp.float32)
+    out = attend(q, k, v, bias, cfg.attn_logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"])
+
+
+def encoder_kv(params: dict, enc_out: jax.Array) -> dict:
+    return {
+        "k": jnp.einsum("bsd,dhk->bshk", enc_out, params["wk"]),
+        "v": jnp.einsum("bsd,dhk->bshk", enc_out, params["wv"]),
+    }
+
+
+# -- KV-cache paths --------------------------------------------------------------
+def kv_cache_len(cfg, kind: str, max_seq: int) -> int:
+    """Windowed layers keep a ring buffer of ``window_size`` slots —
+    this is what bounds gemma2/recurrentgemma KV at 500k context."""
+    if kind == "local":
+        return min(cfg.window_size, max_seq)
+    return max_seq
+
+
+def init_kv_cache(batch: int, max_seq: int, cfg, dtype,
+                  kind: str = "global") -> dict:
+    S = kv_cache_len(cfg, kind, max_seq)
+    return {
+        "k": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, S, cfg.num_kv_heads, cfg.head_dim), dtype),
+    }
+
+
+def prefill_attention(params: dict, x: jax.Array, cfg, kind: str,
+                      positions: jax.Array, cache: dict,
+                      blocked: bool = False,
+                      block_k: int = 1024) -> tuple[jax.Array, dict]:
+    """Full-sequence attention that also writes the KV cache.
+
+    Global layers write [0, S); local layers write the last
+    ``window_size`` tokens into their ring buffer (slot = pos % S_loc).
+    """
+    S = x.shape[1]
+    S_loc = cache["k"].shape[1]
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    def write(buf, new):
+        new = new.astype(buf.dtype)
+        if S <= S_loc:
+            return jax.lax.dynamic_update_slice(buf, new, (0, 0, 0, 0))
+        # ring: last S_loc tokens; token j of the chunk lands in slot
+        # (j + S) % S_loc  (static shift — S, S_loc static at trace time)
+        chunk = new[:, S - S_loc:, :, :]
+        return jnp.roll(chunk, S % S_loc, axis=1)
+
+    new_cache = {"k": write(cache["k"], k), "v": write(cache["v"], v)}
+    kf = _repeat_kv(k, cfg.num_heads // cfg.num_kv_heads)
+    vf = _repeat_kv(v, cfg.num_heads // cfg.num_kv_heads)
+    pos1d = positions[0] if positions.ndim > 1 else positions
+    window = cfg.window_size if kind == "local" else None
+    if blocked and S >= BLOCKED_ATTN_THRESHOLD:
+        # no-grad path: blocked online-softmax keeps temp O(S·block)
+        out = attend_blocked(q, kf, vf, pos1d, causal=True,
+                             window=window,
+                             logit_cap=cfg.attn_logit_softcap,
+                             block_k=block_k)
+    else:
+        bias = _mask_bias(pos1d, pos1d, causal=True, window=window)
+        out = attend(q, kf, vf, bias, cfg.attn_logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), new_cache
+
+
+def decode_attention(params: dict, x: jax.Array, cfg, kind: str,
+                     cache: dict, cur_index: jax.Array,
+                     onehot_update: bool = False,
+                     grouped_gqa: bool = False
+                     ) -> tuple[jax.Array, dict]:
+    """One-token decode: x (B,1,d); reads/updates the KV cache.
+
+    ``cur_index``: position of the new token (context length so far) —
+    a scalar, or a (B,) vector for continuous batching where every
+    sequence sits at a different offset.  Global layers use the linear
+    cache; local layers use the ring buffer — slot s holds absolute
+    position ``cur − ((cur − s) mod S_loc)``, from which the
+    causal+window mask is reconstructed.
+    """
+    B, _, _ = x.shape
+    S_loc = cache["k"].shape[1]
+    cur = jnp.broadcast_to(jnp.asarray(cur_index, jnp.int32), (B,))
+    positions = cur[:, None]                               # (B,1)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    ring = kind == "local"
+    slot = jnp.mod(cur, S_loc) if ring else jnp.minimum(cur, S_loc - 1)
+    if onehot_update:
+        # sharding-preserving write: select along the (possibly
+        # sequence-sharded) S axis — GSPMD keeps it fully local,
+        # whereas a dynamic scatter forces cache replication (§Perf B)
+        hit = (jnp.arange(S_loc)[None, :] == slot[:, None])  # (B,S)
+        sel = hit[:, :, None, None]
+        new_cache = {
+            "k": jnp.where(sel, k.astype(cache["k"].dtype), cache["k"]),
+            "v": jnp.where(sel, v.astype(cache["v"].dtype), cache["v"]),
+        }
+    else:
+        bidx = jnp.arange(B)
+        new_cache = {
+            "k": cache["k"].at[bidx, slot].set(
+                k[:, 0].astype(cache["k"].dtype)),
+            "v": cache["v"].at[bidx, slot].set(
+                v[:, 0].astype(cache["v"].dtype)),
+        }
+    slots = jnp.arange(S_loc)                              # (S,)
+    if ring:
+        k_pos = cur[:, None] - jnp.mod(cur[:, None] - slots[None, :],
+                                       S_loc)              # (B,S)
+    else:
+        k_pos = jnp.broadcast_to(slots[None, :], (B, S_loc))
+    window = cfg.window_size if kind == "local" else None
+    ok = (k_pos <= cur[:, None]) & (k_pos >= 0)
+    if window is not None:
+        ok = ok & (cur[:, None] - k_pos < window)
+    neg = jnp.asarray(-2.38e38, jnp.float32)
+    if grouped_gqa:
+        # §Perf hillclimb: contract against the RAW (B,S,H_kv,dh) cache
+        # by grouping the query heads — no jnp.repeat, so GSPMD never
+        # replicates a sequence-sharded cache to materialise the
+        # broadcast (the long_500k all-gather pathology), and KV is
+        # read once instead of H/H_kv times.
+        Hkv = cfg.num_kv_heads
+        G = cfg.num_heads // Hkv
+        dh = cfg.head_dim
+        qg = q.reshape(B, 1, Hkv, G, dh)
+        scale = 1.0 / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, new_cache["k"],
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, cfg.attn_logit_softcap)
+        s = s + jnp.where(ok, 0.0, neg)[:, None, None, None, :]
+        w = jax.nn.softmax(s, axis=-1).astype(new_cache["v"].dtype)
+        out = jnp.einsum("bkgqs,bskd->bqkgd", w, new_cache["v"])
+        out = out.reshape(B, 1, cfg.num_heads, dh)
+    else:
+        kf = _repeat_kv(new_cache["k"], cfg.num_heads // cfg.num_kv_heads)
+        vf = _repeat_kv(new_cache["v"], cfg.num_heads // cfg.num_kv_heads)
+        bias = jnp.where(ok, 0.0, neg)[:, None, :]         # (B,1,S)
+        out = attend(q, kf, vf, bias, cfg.attn_logit_softcap)
+    return jnp.einsum("bshk,hkd->bsd", out, params["wo"]), new_cache

@@ -1,0 +1,154 @@
+"""Shared neural building blocks (pure-functional, pjit-friendly).
+
+Parameters are plain dict pytrees created by ``init_*`` helpers; forward
+functions take ``(params, x, ...)``.  Norm statistics are computed in
+fp32 regardless of param dtype (standard mixed-precision practice);
+matmuls run in the configured dtype (bf16 target).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# -- init -----------------------------------------------------------------------
+def dense_init(key, shape, dtype, scale: float | None = None):
+    """Truncated-normal fan-in init (matches common LM practice)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.normal(key, shape, jnp.float32)).astype(dtype)
+
+
+# -- norms -----------------------------------------------------------------------
+def init_rmsnorm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}   # gemma-style (1 + scale)
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    normed = xf * jax.lax.rsqrt(var + eps)
+    out = normed * (1.0 + params["scale"].astype(jnp.float32))
+    return out.astype(dt)
+
+
+def init_layernorm(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mean = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mean) * jax.lax.rsqrt(var + eps)
+    out = out * params["scale"].astype(jnp.float32) \
+        + params["bias"].astype(jnp.float32)
+    return out.astype(dt)
+
+
+# -- positional -------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2,
+                                       dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, dh); positions: broadcastable to (..., S)."""
+    dh = x.shape[-1]
+    freqs = rope_freqs(dh, theta)                       # (dh/2,)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (...,S,dh/2)
+    sin = jnp.sin(angles)[..., :, None, :]              # (...,S,1,dh/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin,
+                           x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq_len: int, d_model: int) -> jax.Array:
+    """Whisper-style sinusoidal embeddings (fp32)."""
+    pos = jnp.arange(seq_len, dtype=jnp.float32)[:, None]
+    dim = jnp.arange(0, d_model, 2, dtype=jnp.float32)[None, :]
+    angle = pos / jnp.power(10000.0, dim / d_model)
+    emb = jnp.zeros((seq_len, d_model), jnp.float32)
+    emb = emb.at[:, 0::2].set(jnp.sin(angle))
+    emb = emb.at[:, 1::2].set(jnp.cos(angle))
+    return emb
+
+
+# -- soft capping (gemma2) ----------------------------------------------------------
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x.astype(jnp.float32) / cap)
+
+
+# -- MLPs -----------------------------------------------------------------------------
+def init_mlp(key, d_model: int, d_ff: int, kind: str, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    if kind in ("swiglu", "geglu"):
+        return {
+            "w_gate": dense_init(k1, (d_model, d_ff), dtype),
+            "w_up": dense_init(k2, (d_model, d_ff), dtype),
+            "w_down": dense_init(k3, (d_ff, d_model), dtype),
+        }
+    return {
+        "w_up": dense_init(k1, (d_model, d_ff), dtype),
+        "w_down": dense_init(k2, (d_ff, d_model), dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array, kind: str) -> jax.Array:
+    if kind == "swiglu":
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    elif kind == "geglu":
+        g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        h = jax.nn.gelu(g.astype(jnp.float32),
+                        approximate=True).astype(x.dtype) * u
+    else:  # gelu
+        u = jnp.einsum("...d,df->...f", x, params["w_up"])
+        h = jax.nn.gelu(u.astype(jnp.float32),
+                        approximate=True).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# -- embeddings ----------------------------------------------------------------------
+def init_embedding(key, vocab_padded: int, d_model: int, dtype) -> dict:
+    return {"table": embed_init(key, (vocab_padded, d_model), dtype)}
+
+
+def embed(params: dict, tokens: jax.Array, scale_by_sqrt_dim: bool = False
+          ) -> jax.Array:
+    out = jnp.take(params["table"], tokens, axis=0)
+    if scale_by_sqrt_dim:
+        out = out * jnp.asarray(np.sqrt(out.shape[-1]), out.dtype)
+    return out
+
+
+def unembed(params: dict, x: jax.Array, vocab_size: int,
+            cap: float | None = None) -> jax.Array:
+    """Logits against the (tied) embedding table; padded ids masked."""
+    logits = jnp.einsum("...d,vd->...v", x, params["table"])
+    logits = softcap(logits, cap)
+    padded = logits.shape[-1]
+    if padded > vocab_size:
+        neg = jnp.asarray(-1e9, logits.dtype)
+        mask = jnp.arange(padded) < vocab_size
+        logits = jnp.where(mask, logits, neg)
+    return logits

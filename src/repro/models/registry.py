@@ -1,0 +1,68 @@
+"""Model registry: one uniform interface over every architecture family.
+
+``build_model(cfg)`` returns a ``Model`` whose five methods are the
+entire contract the rest of the framework (engine, trainer, dry-run)
+programs against:
+
+    init(rng)                          → params
+    forward_train(params, batch, rt)   → logits
+    prefill(params, batch, cache, rt)  → (logits, cache)
+    decode_step(params, tok, cache, i, rt) → (logits, cache)
+    init_cache(batch, max_seq, rt)     → cache pytree
+
+``batch`` carries ``tokens`` plus optional ``extra_embed`` (VLM patch /
+audio frame stub embeddings).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro.models import encdec, transformer
+from repro.models.config import ArchConfig
+from repro.models.runtime import LOCAL, Runtime
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable[..., dict]
+    forward_train: Callable[..., jax.Array]
+    prefill: Callable[..., tuple]
+    decode_step: Callable[..., tuple]
+    init_cache: Callable[..., dict]
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    cfg.validate()
+    if cfg.is_encoder_decoder:
+        return Model(
+            cfg=cfg,
+            init=lambda rng: encdec.init_params(rng, cfg),
+            forward_train=lambda p, tokens, rt=LOCAL, extra_embed=None:
+                encdec.forward_train(p, tokens, cfg, rt, extra_embed),
+            prefill=lambda p, tokens, cache, rt=LOCAL, extra_embed=None:
+                encdec.prefill(p, tokens, cfg, cache, rt, extra_embed),
+            decode_step=lambda p, tok, cache, cur, rt=LOCAL:
+                encdec.decode_step(p, tok, cfg, cache, cur, rt),
+            init_cache=lambda batch, max_seq, rt=LOCAL:
+                encdec.init_cache(cfg, batch, max_seq, rt),
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda rng: transformer.init_params(rng, cfg),
+        forward_train=lambda p, tokens, rt=LOCAL, extra_embed=None:
+            transformer.forward_train(p, tokens, cfg, rt, extra_embed),
+        prefill=lambda p, tokens, cache, rt=LOCAL, extra_embed=None:
+            transformer.prefill(p, tokens, cfg, cache, rt, extra_embed),
+        decode_step=lambda p, tok, cache, cur, rt=LOCAL:
+            transformer.decode_step(p, tok, cfg, cache, cur, rt),
+        init_cache=lambda batch, max_seq, rt=LOCAL:
+            transformer.init_cache(cfg, batch, max_seq, rt),
+    )
+
+
+def param_count(params: Any) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))

@@ -1,0 +1,140 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The temporal-mixing block: LN → two linear branches to ``d_rnn``;
+branch A → causal depthwise conv (width 4) → RG-LRU; branch B → GeLU;
+merge (A ⊙ B) → down-proj → residual.
+
+RG-LRU recurrence (per channel, fp32):
+
+  r_t = σ(W_r x_t + b_r)                 recurrence gate
+  i_t = σ(W_i x_t + b_i)                 input gate
+  log a_t = −c · r_t · softplus(Λ)       (a = σ(Λ)^(c·r), c = 8)
+  h_t = a_t · h_{t−1} + √(1 − a_t²) · (i_t ⊙ x_t)
+
+Sequence processing uses ``lax.associative_scan`` (first-order linear
+recurrence is associative) — O(log S) depth, fully parallel: this is
+the sub-quadratic path that makes recurrentgemma's long_500k cell
+feasible.  Decode carries (h, conv buffer) — O(1) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+_C_EXP = 8.0
+
+
+def init_rglru_block(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    dr = cfg.rnn_width or d
+    ks = jax.random.split(key, 7)
+    # Λ init so that a^c spreads over (0.9, 0.999) — Griffin practice
+    u = jax.random.uniform(ks[6], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(u ** (1.0 / _C_EXP) / (1 - u ** (1.0 / _C_EXP)))
+    return {
+        "ln": init_rmsnorm(d),
+        "w_a": dense_init(ks[0], (d, dr), dtype),
+        "w_b": dense_init(ks[1], (d, dr), dtype),
+        "conv_w": dense_init(ks[2], (cfg.conv_width, dr), jnp.float32,
+                             scale=0.5),
+        "conv_b": jnp.zeros((dr,), jnp.float32),
+        "w_r": dense_init(ks[3], (dr, dr), jnp.float32, scale=0.01),
+        "b_r": jnp.zeros((dr,), jnp.float32),
+        "w_i": dense_init(ks[4], (dr, dr), jnp.float32, scale=0.01),
+        "b_i": jnp.zeros((dr,), jnp.float32),
+        "lambda": lam,
+        "w_down": dense_init(ks[5], (dr, d), dtype),
+    }
+
+
+def rglru_state(batch: int, cfg, dtype=jnp.float32) -> dict:
+    dr = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, dr), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, dr), dtype),
+    }
+
+
+def _gates(params: dict, x: jax.Array):
+    """x (..., dr) fp32 → (log_a, beta·input) for the linear recurrence
+    h_t = a·h + b."""
+    r = jax.nn.sigmoid(jnp.einsum("...d,dk->...k", x, params["w_r"])
+                       + params["b_r"])
+    i = jax.nn.sigmoid(jnp.einsum("...d,dk->...k", x, params["w_i"])
+                       + params["b_i"])
+    log_a = -_C_EXP * r * jax.nn.softplus(params["lambda"])
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12))
+    return a, beta * (i * x)
+
+
+def _causal_conv(params: dict, x: jax.Array, carry: jax.Array | None
+                 ) -> jax.Array:
+    """Depthwise causal conv width W.  x (B,S,dr); carry (B,W-1,dr) of
+    trailing context (decode) or None (fresh sequence → zero pad)."""
+    W = params["conv_w"].shape[0]
+    if carry is None:
+        carry = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([carry, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1], :]
+              * params["conv_w"][i].astype(x.dtype)
+              for i in range(W))
+    return out + params["conv_b"].astype(x.dtype)
+
+
+def rglru_sequence(params: dict, x: jax.Array, h0: jax.Array
+                   ) -> tuple[jax.Array, jax.Array]:
+    """x (B,S,dr) fp32 → (h (B,S,dr), h_last).  Associative scan over S
+    of the affine recurrence (a_t, b_t)∘(a_s, b_s) = (a_t a_s, a_t b_s + b_t)."""
+    a, b = _gates(params, x)
+    # fold h0 into the first step: b_0 ← a_0 h0 + b_0
+    b = b.at[:, 0, :].add(a[:, 0, :] * h0)
+
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_r * a_l, a_r * b_l + b_r
+
+    a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h, h[:, -1, :]
+
+
+def rglru_block(params: dict, x: jax.Array, state: dict
+                ) -> tuple[jax.Array, dict]:
+    """Full residual temporal-mixing block over a sequence."""
+    y = rmsnorm(params["ln"], x)
+    xa = jnp.einsum("bsd,dk->bsk", y, params["w_a"]).astype(jnp.float32)
+    xb = jnp.einsum("bsd,dk->bsk", y, params["w_b"]).astype(jnp.float32)
+    conv_out = _causal_conv(params, xa, None)
+    h, h_last = rglru_sequence(params, conv_out, state["h"])
+    merged = (h * jax.nn.gelu(xb, approximate=True)).astype(x.dtype)
+    out = jnp.einsum("bsk,kd->bsd", merged, params["w_down"])
+    new_state = {
+        "h": h_last,
+        "conv": xa[:, -(params["conv_w"].shape[0] - 1):, :]
+        if xa.shape[1] >= params["conv_w"].shape[0] - 1 else
+        jnp.concatenate([state["conv"], xa], axis=1)[
+            :, -(params["conv_w"].shape[0] - 1):, :],
+    }
+    return x + out, new_state
+
+
+def rglru_decode_step(params: dict, x: jax.Array, state: dict
+                      ) -> tuple[jax.Array, dict]:
+    """One-token step: x (B,1,d); carries (h, conv buffer)."""
+    y = rmsnorm(params["ln"], x)
+    xa = jnp.einsum("bsd,dk->bsk", y, params["w_a"]).astype(jnp.float32)
+    xb = jnp.einsum("bsd,dk->bsk", y, params["w_b"]).astype(jnp.float32)
+    conv_out = _causal_conv(params, xa, state["conv"])       # (B,1,dr)
+    a, b = _gates(params, conv_out[:, 0, :])
+    h_new = a * state["h"] + b
+    merged = (h_new[:, None, :]
+              * jax.nn.gelu(xb, approximate=True)).astype(x.dtype)
+    out = jnp.einsum("bsk,kd->bsd", merged, params["w_down"])
+    new_state = {
+        "h": h_new,
+        "conv": jnp.concatenate([state["conv"], xa], axis=1)[:, 1:, :],
+    }
+    return x + out, new_state

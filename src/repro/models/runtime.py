@@ -1,0 +1,69 @@
+"""Runtime: the static distribution context threaded through model code.
+
+Separates *what* the model computes (ArchConfig) from *where* it runs
+(mesh axes, MoE strategy, cache dtype).  ``Runtime()`` with no mesh is
+the single-device CPU path used by smoke tests and the engine; the
+launcher builds mesh-ful runtimes for the dry-run.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Runtime:
+    mesh: Optional[jax.sharding.Mesh] = None
+    dp_axes: tuple[str, ...] = ()        # batch/data axes (("pod","data"))
+    tp_axis: Optional[str] = None        # tensor-parallel axis ("model")
+    ep_axes: tuple[str, ...] = ()        # expert-parallel axes (MoE)
+    moe: str = "local"                   # "local" | "ep" (shard_map)
+    attn_shard: str = "auto"             # "head" | "sequence" | "auto"
+    kv_cache_dtype: str = "bfloat16"     # "int8" is the §Perf option
+    # remat policy for training: "none" | "full" | "dots"
+    remat: str = "none"
+    # scan unroll factor over layer periods (cost-analysis variants use
+    # 2; production keeps 1 for O(1) HLO size)
+    scan_unroll: int = 1
+    # §Perf hillclimb A: blocked online-softmax attention on no-grad
+    # paths (prefill/encode) — O(S·block) temp instead of O(S²)
+    blocked_attn: bool = False
+    # K/V block size for the blocked schedule: larger blocks amortize
+    # the (q, acc) HBM round-trips of the XLA scan at O(S·block) temp
+    attn_block_k: int = 1024
+    # §Perf hillclimb B: decode cache update as a one-hot masked select
+    # instead of a dynamic scatter — elementwise ⇒ sharding-preserving,
+    # eliminating GSPMD's replicate-then-repartition of seq-sharded KV
+    onehot_cache_update: bool = False
+    # §Perf hillclimb B: grouped-query decode — contract q groups
+    # against the raw H_kv cache (no jnp.repeat ⇒ no replication of a
+    # sequence-sharded cache, KV read once instead of H/H_kv times)
+    grouped_gqa_decode: bool = False
+
+    def spec(self, *axes) -> jax.sharding.PartitionSpec:
+        return jax.sharding.PartitionSpec(*axes)
+
+    @property
+    def dp(self):
+        """The combined data axes entry for a PartitionSpec."""
+        if not self.dp_axes:
+            return None
+        return self.dp_axes if len(self.dp_axes) > 1 else self.dp_axes[0]
+
+    def constrain(self, x, *axes):
+        """with_sharding_constraint when a mesh is present; no-op otherwise."""
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(
+                self.mesh, jax.sharding.PartitionSpec(*axes)))
+
+    def cache_dtype(self):
+        return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+                "int8": jnp.int8}[self.kv_cache_dtype]
+
+
+LOCAL = Runtime()

@@ -1,0 +1,207 @@
+"""xLSTM cells (arXiv:2405.04517): mLSTM (matrix memory, parallel-able)
+and sLSTM (scalar memory, sequential) — the ``[ssm]`` family.
+
+Both are exact recurrences with exponential gating and the paper's
+max-stabiliser m_t.  Sequence processing uses ``lax.scan`` over time
+(exact; the chunked-parallel mLSTM form is a recorded §Perf follow-up);
+decode is a single recurrence step with O(1) carried state — which is
+why xlstm-350m runs the long_500k cell.
+
+State shapes (per layer):
+  mLSTM: C (B,H,dh,dh), n (B,H,dh), m (B,H)
+  sLSTM: c,n,h (B,H,dh), m (B,H)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init, init_rmsnorm, rmsnorm
+
+
+# =========================== mLSTM ============================================
+def init_mlstm_block(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    inner = int(cfg.mlstm_proj_factor * d)
+    dh = inner // H
+    ks = jax.random.split(key, 8)
+    return {
+        "ln": init_rmsnorm(d),
+        "w_up": dense_init(ks[0], (d, inner), dtype),
+        "w_gate_branch": dense_init(ks[1], (d, inner), dtype),
+        "wq": dense_init(ks[2], (inner, H, dh), dtype),
+        "wk": dense_init(ks[3], (inner, H, dh), dtype),
+        "wv": dense_init(ks[4], (inner, H, dh), dtype),
+        # scalar gate preactivations per head
+        "w_i": dense_init(ks[5], (inner, H), jnp.float32, scale=0.01),
+        "w_f": dense_init(ks[6], (inner, H), jnp.float32, scale=0.01),
+        "b_i": jnp.zeros((H,), jnp.float32),
+        # forget bias init positive → long memory at init
+        "b_f": jnp.full((H,), 3.0, jnp.float32),
+        "w_down": dense_init(ks[7], (inner, d), dtype),
+        "out_ln": init_rmsnorm(inner),
+    }
+
+
+def mlstm_state(batch: int, cfg, dtype=jnp.float32) -> dict:
+    H = cfg.num_heads
+    dh = int(cfg.mlstm_proj_factor * cfg.d_model) // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), dtype),
+        "n": jnp.zeros((batch, H, dh), dtype),
+        "m": jnp.full((batch, H), -1e30, dtype),
+    }
+
+
+def _mlstm_step(state: dict, qkvif) -> tuple[dict, jax.Array]:
+    """One stabilised mLSTM recurrence step (all fp32).
+
+    q,k,v: (B,H,dh); i_pre,f_pre: (B,H)."""
+    q, k, v, i_pre, f_pre = qkvif
+    C, n, m = state["C"], state["n"], state["m"]
+    dh = q.shape[-1]
+    k = k / jnp.sqrt(jnp.asarray(dh, jnp.float32))
+    # log-space forget (sigmoid-style: log σ(f̃) keeps f ∈ (0,1))
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    f_eff = jnp.exp(log_f + m - m_new)          # (B,H)
+    i_eff = jnp.exp(i_pre - m_new)
+    C_new = (f_eff[..., None, None] * C
+             + i_eff[..., None, None] * v[..., :, None] * k[..., None, :])
+    n_new = f_eff[..., None] * n + i_eff[..., None] * k
+    num = jnp.einsum("bhvk,bhk->bhv", C_new, q)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q))
+    den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    h = num / den
+    return {"C": C_new, "n": n_new, "m": m_new}, h
+
+
+def mlstm_sequence(params: dict, x_inner: jax.Array, state: dict,
+                   ) -> tuple[jax.Array, dict]:
+    """x_inner (B,S,inner) → (h (B,S,inner), final state).  Exact scan."""
+    B, S, inner = x_inner.shape
+    H = params["wq"].shape[1]
+    dh = params["wq"].shape[2]
+    xf = x_inner
+    q = jnp.einsum("bsi,ihd->bshd", xf, params["wq"]).astype(jnp.float32)
+    k = jnp.einsum("bsi,ihd->bshd", xf, params["wk"]).astype(jnp.float32)
+    v = jnp.einsum("bsi,ihd->bshd", xf, params["wv"]).astype(jnp.float32)
+    i_pre = (jnp.einsum("bsi,ih->bsh", xf.astype(jnp.float32), params["w_i"])
+             + params["b_i"])
+    f_pre = (jnp.einsum("bsi,ih->bsh", xf.astype(jnp.float32), params["w_f"])
+             + params["b_f"])
+
+    def body(st, inp):
+        st2, h = _mlstm_step(st, inp)
+        return st2, h
+
+    xs = (q.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          i_pre.swapaxes(0, 1), f_pre.swapaxes(0, 1))
+    state, hs = jax.lax.scan(body, state, xs)          # hs (S,B,H,dh)
+    h = hs.swapaxes(0, 1).reshape(B, S, H * dh)
+    return h.astype(x_inner.dtype), state
+
+
+def mlstm_block(params: dict, x: jax.Array, state: dict,
+                ) -> tuple[jax.Array, dict]:
+    """Full mLSTM residual block: LN → up-proj (2 branches) → cell →
+    SiLU-gated merge → down-proj → residual."""
+    y = rmsnorm(params["ln"], x)
+    up = jnp.einsum("bsd,di->bsi", y, params["w_up"])
+    gate = jnp.einsum("bsd,di->bsi", y, params["w_gate_branch"])
+    h, state = mlstm_sequence(params, up, state)
+    h = rmsnorm(params["out_ln"], h)
+    h = h * jax.nn.silu(gate.astype(jnp.float32)).astype(h.dtype)
+    out = jnp.einsum("bsi,id->bsd", h, params["w_down"])
+    return x + out, state
+
+
+# =========================== sLSTM ============================================
+def init_slstm_block(key, cfg, dtype) -> dict:
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    f_inner = int(cfg.slstm_proj_factor * d)
+    ks = jax.random.split(key, 10)
+    return {
+        "ln": init_rmsnorm(d),
+        # input projections per gate
+        "w_z": dense_init(ks[0], (d, H, dh), dtype),
+        "w_i": dense_init(ks[1], (d, H, dh), jnp.float32, scale=0.01),
+        "w_f": dense_init(ks[2], (d, H, dh), jnp.float32, scale=0.01),
+        "w_o": dense_init(ks[3], (d, H, dh), dtype),
+        # block-diagonal (per-head) recurrent matrices
+        "r_z": dense_init(ks[4], (H, dh, dh), jnp.float32),
+        "r_i": dense_init(ks[5], (H, dh, dh), jnp.float32, scale=0.01),
+        "r_f": dense_init(ks[6], (H, dh, dh), jnp.float32, scale=0.01),
+        "r_o": dense_init(ks[7], (H, dh, dh), jnp.float32),
+        "b_z": jnp.zeros((H, dh), jnp.float32),
+        "b_i": jnp.zeros((H, dh), jnp.float32),
+        "b_f": jnp.full((H, dh), 3.0, jnp.float32),
+        "b_o": jnp.zeros((H, dh), jnp.float32),
+        "out_ln": init_rmsnorm(d),
+        # post-cell gated FFN (proj factor 4/3)
+        "w_ff_up": dense_init(ks[8], (d, 2 * f_inner), dtype),
+        "w_ff_down": dense_init(ks[9], (f_inner, d), dtype),
+    }
+
+
+def slstm_state(batch: int, cfg, dtype=jnp.float32) -> dict:
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    return {
+        "c": jnp.zeros((batch, H, dh), dtype),
+        "n": jnp.zeros((batch, H, dh), dtype),
+        "h": jnp.zeros((batch, H, dh), dtype),
+        "m": jnp.full((batch, H, dh), -1e30, dtype),
+    }
+
+
+def _slstm_step(params: dict, state: dict, x_t: jax.Array
+                ) -> tuple[dict, jax.Array]:
+    """x_t (B,d) → h (B,H,dh).  Stabilised sLSTM with per-head
+    recurrent block-diagonal matrices."""
+    c, n, h_prev, m = state["c"], state["n"], state["h"], state["m"]
+    xf = x_t.astype(jnp.float32)
+
+    def inp(w):  # (B,H,dh)
+        return jnp.einsum("bd,dhk->bhk", xf, w.astype(jnp.float32))
+
+    def rec(r):  # recurrent contribution
+        return jnp.einsum("bhk,hkj->bhj", h_prev, r)
+
+    z = jnp.tanh(inp(params["w_z"]) + rec(params["r_z"]) + params["b_z"])
+    o = jax.nn.sigmoid(inp(params["w_o"]) + rec(params["r_o"])
+                       + params["b_o"])
+    i_pre = inp(params["w_i"]) + rec(params["r_i"]) + params["b_i"]
+    f_pre = inp(params["w_f"]) + rec(params["r_f"]) + params["b_f"]
+    log_f = -jax.nn.softplus(-f_pre)
+    m_new = jnp.maximum(log_f + m, i_pre)
+    f_eff = jnp.exp(log_f + m - m_new)
+    i_eff = jnp.exp(i_pre - m_new)
+    c_new = f_eff * c + i_eff * z
+    n_new = f_eff * n + i_eff
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return ({"c": c_new, "n": n_new, "h": h_new, "m": m_new}, h_new)
+
+
+def slstm_block(params: dict, x: jax.Array, state: dict
+                ) -> tuple[jax.Array, dict]:
+    """sLSTM residual block + its gated FFN (xLSTM paper structure)."""
+    B, S, d = x.shape
+    y = rmsnorm(params["ln"], x)
+
+    def body(st, x_t):
+        return _slstm_step(params, st, x_t)
+
+    state, hs = jax.lax.scan(body, state, y.swapaxes(0, 1))  # (S,B,H,dh)
+    h = hs.swapaxes(0, 1).reshape(B, S, d).astype(x.dtype)
+    x = x + rmsnorm(params["out_ln"], h)
+    # gated FFN
+    y2 = rmsnorm(params["out_ln"], x)
+    up = jnp.einsum("bsd,df->bsf", y2, params["w_ff_up"])
+    a, b = jnp.split(up, 2, axis=-1)
+    hff = jax.nn.gelu(a.astype(jnp.float32),
+                      approximate=True).astype(x.dtype) * b
+    return x + jnp.einsum("bsf,fd->bsd", hff, params["w_ff_down"]), state

@@ -1,0 +1,8 @@
+from repro.serving.engine import InferenceEngine
+from repro.serving.kv_manager import KVBlockManager, OutOfPages
+from repro.serving.request import Request, RequestState, latency_summary
+from repro.serving.simulation import ReplicaSim, ServingSimulator, Workload
+
+__all__ = ["InferenceEngine", "KVBlockManager", "OutOfPages",
+           "ReplicaSim", "Request", "RequestState", "ServingSimulator",
+           "Workload", "latency_summary"]

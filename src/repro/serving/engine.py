@@ -1,0 +1,182 @@
+"""InferenceEngine: continuous batching over a real JAX model.
+
+A fixed pool of ``slots`` batch lanes shares one jitted decode step;
+each lane holds one sequence at its own position (the vectorised
+``cur_index`` decode path).  Prefill runs per-request (B=1) and its KV
+rows are scattered into the lane's cache slice — iteration-level
+scheduling in the Orca/vLLM sense, admission-gated by the token-pool
+gateway at the API boundary (the paper's control point).
+
+KV accounting runs through the paged ``KVBlockManager`` so χ usage is
+tracked in pages exactly as a TPU deployment would (the dense per-lane
+cache is the XLA reference layout; the Pallas paged kernel consumes
+the same block tables on real hardware).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.gateway import Gateway
+from repro.models import Model, Runtime
+from repro.serving.kv_manager import KVBlockManager
+from repro.serving.request import Request, RequestState
+
+
+def _batch_axis_for(path) -> int:
+    """Cache leaves under stacked groups carry batch at axis 1."""
+    keys = [str(getattr(k, "key", getattr(k, "name", k))) for k in path]
+    return 1 if any(k in ("periods", "dec", "xkv") for k in keys) else 0
+
+
+def cache_insert(batch_cache, one_cache, lane: int):
+    """Scatter a B=1 cache into lane ``lane`` of the batched cache."""
+    def ins(path, full, one):
+        ax = _batch_axis_for(path)
+        idx = [slice(None)] * full.ndim
+        idx[ax] = lane
+        one_squeezed = jnp.take(one, 0, axis=ax)
+        return full.at[tuple(idx)].set(one_squeezed.astype(full.dtype))
+    return jax.tree_util.tree_map_with_path(ins, batch_cache, one_cache)
+
+
+@dataclasses.dataclass
+class Lane:
+    request: Optional[Request] = None
+    position: int = 0              # next decode position
+    remaining: int = 0
+
+
+class InferenceEngine:
+    def __init__(self, model: Model, params, slots: int, max_seq: int,
+                 gateway: Optional[Gateway] = None,
+                 rt: Runtime = Runtime(), page_tokens: int = 16,
+                 eos_id: Optional[int] = None) -> None:
+        self.model = model
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.gateway = gateway
+        self.rt = rt
+        self.eos_id = eos_id
+        self.kv_pages = KVBlockManager(
+            total_pages=slots * (max_seq // page_tokens + 1),
+            page_tokens=page_tokens,
+            bytes_per_token=model.cfg.kv_bytes_per_token)
+        self.cache = model.init_cache(slots, max_seq, rt)
+        self.lanes = [Lane() for _ in range(slots)]
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+        self._decode = jax.jit(
+            lambda p, tok, cache, pos: model.decode_step(
+                p, tok, cache, pos, rt))
+        self._tokens = np.zeros((slots, 1), np.int32)
+        self._positions = np.zeros((slots,), np.int32)
+
+    # -- submission ----------------------------------------------------------
+    def submit(self, req: Request, now: float,
+               api_key: Optional[str] = None) -> bool:
+        """Admission-gated enqueue.  Returns False on 429/401."""
+        if self.gateway is not None:
+            resp = self.gateway.handle(
+                api_key or req.api_key, req.request_id,
+                input_tokens=req.input_len, max_tokens=req.max_tokens,
+                now=now,
+                kv_bytes_per_token=self.model.cfg.kv_bytes_per_token)
+            if resp.status != 200:
+                req.state = RequestState.DENIED
+                req.deny_reason = resp.reason
+                req.retry_after_s = resp.retry_after_s
+                self.finished.append(req)
+                return False
+            req.priority = resp.priority
+        req.admitted_s = now
+        self.queue.append(req)
+        self.queue.sort(key=lambda r: (-r.priority, r.arrival_s))
+        return True
+
+    # -- scheduling ------------------------------------------------------------
+    def _free_lanes(self) -> list[int]:
+        return [i for i, l in enumerate(self.lanes) if l.request is None]
+
+    def _start(self, lane_idx: int, req: Request, now: float) -> None:
+        lane = self.lanes[lane_idx]
+        total = req.input_len + req.max_tokens
+        self.kv_pages.allocate(req.request_id, req.input_len)
+        one_cache = self.model.init_cache(1, self.max_seq, self.rt)
+        tokens = jnp.asarray([req.prompt_tokens], jnp.int32)
+        logits, one_cache = self.model.prefill(
+            self.params, tokens, one_cache, self.rt)
+        self.cache = cache_insert(self.cache, one_cache, lane_idx)
+        first = int(jnp.argmax(logits[0, -1]))
+        req.first_token_s = now
+        req.output_tokens.append(first)
+        req.state = RequestState.DECODING
+        lane.request = req
+        lane.position = req.input_len
+        lane.remaining = req.max_tokens - 1
+        self._tokens[lane_idx, 0] = first
+        self._positions[lane_idx] = req.input_len
+        self.kv_pages.extend(req.request_id, req.input_len + 1)
+
+    def step(self, now: float) -> int:
+        """One engine iteration: admit-from-queue → batched decode.
+        Returns the number of tokens produced."""
+        for lane_idx in self._free_lanes():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            self._start(lane_idx, req, now)
+
+        active = [i for i, l in enumerate(self.lanes)
+                  if l.request is not None]
+        if not active:
+            return 0
+        logits, self.cache = self._decode(
+            self.params, jnp.asarray(self._tokens),
+            self.cache, jnp.asarray(self._positions))
+        nxt = np.asarray(jnp.argmax(logits[:, 0, :], axis=-1),
+                         np.int32)
+        produced = 0
+        for i in active:
+            lane = self.lanes[i]
+            req = lane.request
+            tok = int(nxt[i])
+            req.output_tokens.append(tok)
+            produced += 1
+            lane.position += 1
+            lane.remaining -= 1
+            self._tokens[i, 0] = tok
+            self._positions[i] = lane.position
+            self.kv_pages.extend(req.request_id, lane.position + 1)
+            done = (lane.remaining <= 0
+                    or (self.eos_id is not None and tok == self.eos_id)
+                    or lane.position + 1 >= self.max_seq)
+            if done:
+                req.state = RequestState.FINISHED
+                req.finished_s = now
+                self.finished.append(req)
+                self.kv_pages.free(req.request_id)
+                if self.gateway is not None:
+                    self.gateway.on_complete(
+                        req.request_id, len(req.output_tokens),
+                        latency_s=now - req.arrival_s, now=now)
+                lane.request = None
+                lane.remaining = 0
+        return produced
+
+    def run_until_drained(self, now: float = 0.0,
+                          time_per_step: float = 0.05,
+                          max_steps: int = 10_000) -> float:
+        """Drive steps until queue+lanes empty; returns final time."""
+        steps = 0
+        while (self.queue or any(l.request for l in self.lanes)) \
+                and steps < max_steps:
+            self.step(now)
+            now += time_per_step
+            steps += 1
+        return now

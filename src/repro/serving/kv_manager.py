@@ -1,0 +1,100 @@
+"""Paged KV-cache block manager (vLLM-style, adapted for TPU).
+
+Physical KV memory is divided into fixed-size pages of ``page_tokens``
+token slots; each sequence owns an ordered block table of page ids.
+The manager does allocation/free/extension bookkeeping and exposes the
+χ (KV bytes) accounting that token-pool admission charges against.
+
+TPU adaptation (vs. CUDA vLLM): pages are sized to the Pallas decode
+kernel's block shape (multiples of the 128-lane register tile), and the
+block table is consumed by ``repro.kernels.paged_attention`` via scalar
+prefetch rather than warp-level pointer chasing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+
+class OutOfPages(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class SequenceAlloc:
+    seq_id: str
+    pages: list[int]
+    tokens_used: int
+
+
+class KVBlockManager:
+    def __init__(self, total_pages: int, page_tokens: int = 128,
+                 bytes_per_token: float = 0.0) -> None:
+        assert page_tokens % 128 == 0 or page_tokens in (16, 32, 64), \
+            "page size should align to TPU lane tiling"
+        self.total_pages = total_pages
+        self.page_tokens = page_tokens
+        self.bytes_per_token = bytes_per_token
+        self._free: list[int] = list(range(total_pages - 1, -1, -1))
+        self._seqs: dict[str, SequenceAlloc] = {}
+
+    # -- capacity queries ------------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return self.total_pages - self.free_pages
+
+    def pages_needed(self, tokens: int) -> int:
+        return -(-tokens // self.page_tokens)
+
+    def can_allocate(self, tokens: int) -> bool:
+        return self.pages_needed(tokens) <= self.free_pages
+
+    def kv_bytes_in_use(self) -> float:
+        return self.used_pages * self.page_tokens * self.bytes_per_token
+
+    # -- allocation --------------------------------------------------------------
+    def allocate(self, seq_id: str, tokens: int) -> SequenceAlloc:
+        need = self.pages_needed(max(tokens, 1))
+        if need > self.free_pages:
+            raise OutOfPages(
+                f"{seq_id}: need {need} pages, {self.free_pages} free")
+        pages = [self._free.pop() for _ in range(need)]
+        alloc = SequenceAlloc(seq_id=seq_id, pages=pages,
+                              tokens_used=tokens)
+        self._seqs[seq_id] = alloc
+        return alloc
+
+    def extend(self, seq_id: str, new_total_tokens: int) -> SequenceAlloc:
+        """Grow a sequence (decode appends); allocates pages on crossing
+        a page boundary."""
+        alloc = self._seqs[seq_id]
+        need = self.pages_needed(new_total_tokens)
+        while len(alloc.pages) < need:
+            if not self._free:
+                raise OutOfPages(f"{seq_id}: extension needs a page")
+            alloc.pages.append(self._free.pop())
+        alloc.tokens_used = new_total_tokens
+        return alloc
+
+    def free(self, seq_id: str) -> int:
+        alloc = self._seqs.pop(seq_id, None)
+        if alloc is None:
+            return 0
+        self._free.extend(reversed(alloc.pages))
+        return len(alloc.pages)
+
+    def block_table(self, seq_id: str, max_pages: int) -> np.ndarray:
+        """Padded block table row for the paged-attention kernel."""
+        alloc = self._seqs[seq_id]
+        row = np.full((max_pages,), -1, np.int32)
+        row[:len(alloc.pages)] = alloc.pages
+        return row
+
+    def sequences(self) -> list[str]:
+        return sorted(self._seqs)

@@ -1,0 +1,12 @@
+from repro.training.optimizer import (
+    AdamWState,
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    lr_schedule,
+)
+from repro.training.loss import lm_loss
+
+__all__ = ["AdamWState", "OptimizerConfig", "adamw_init", "adamw_update",
+           "clip_by_global_norm", "lm_loss", "lr_schedule"]

@@ -1,0 +1,105 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At multi-pod scale the inter-pod all-reduce of dense gradients is the
+dominant collective (DCN links are ~10× slower than in-pod ICI).  Two
+standard compressors, both with **error feedback** so compression error
+accumulates locally and is re-applied next step (convergence-preserving,
+Stich et al. / Karimireddy et al.):
+
+  - ``topk``: keep the k largest-magnitude entries per tensor
+    (sparsification); the all-reduce then moves k values + indices.
+  - ``int8``: per-tensor symmetric quantisation to int8 with an fp32
+    scale (8× byte reduction).
+
+Compression is applied to the *cross-pod* reduction only; in-pod
+reduce-scatter stays dense.  ``compress → (simulated) all-reduce →
+decompress`` is exposed functionally so the train loop can insert it
+between the in-pod and cross-pod reductions.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressorConfig:
+    kind: str = "none"            # none | topk | int8
+    topk_ratio: float = 0.01      # fraction of entries kept
+
+
+def _topk_compress(g: jax.Array, ratio: float
+                   ) -> tuple[jax.Array, jax.Array]:
+    flat = g.reshape(-1).astype(jnp.float32)
+    k = max(1, int(flat.shape[0] * ratio))
+    vals, idx = jax.lax.top_k(jnp.abs(flat), k)
+    kept = flat[idx]
+    return kept, idx
+
+
+def _topk_decompress(kept: jax.Array, idx: jax.Array, shape, dtype
+                     ) -> jax.Array:
+    flat = jnp.zeros(int(jnp.prod(jnp.asarray(shape))), jnp.float32)
+    flat = flat.at[idx].set(kept)
+    return flat.reshape(shape).astype(dtype)
+
+
+def _int8_compress(g: jax.Array) -> tuple[jax.Array, jax.Array]:
+    gf = g.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _int8_decompress(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_error_state(params: Any) -> Any:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress_grads(grads: Any, error: Any, cfg: CompressorConfig
+                   ) -> tuple[Any, Any]:
+    """Returns (decompressed grads after the lossy round-trip, new error
+    state).  The round-trip models exactly what the cross-pod wire
+    carries; callers insert the actual collective on the compressed
+    representation (see train_loop)."""
+    if cfg.kind == "none":
+        return grads, error
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        if cfg.kind == "topk":
+            kept, idx = _topk_compress(corrected, cfg.topk_ratio)
+            approx = _topk_decompress(kept, idx, g.shape, jnp.float32)
+        elif cfg.kind == "int8":
+            q, scale = _int8_compress(corrected)
+            approx = _int8_decompress(q, scale, jnp.float32)
+        else:
+            raise ValueError(cfg.kind)
+        new_e = corrected - approx
+        return approx.astype(g.dtype), new_e
+
+    out = jax.tree.map(one, grads, error)
+    new_grads = jax.tree.map(lambda pair: pair[0], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    new_error = jax.tree.map(lambda pair: pair[1], out,
+                             is_leaf=lambda x: isinstance(x, tuple))
+    return new_grads, new_error
+
+
+def compressed_bytes(params: Any, cfg: CompressorConfig) -> float:
+    """Wire bytes per step for the cross-pod reduction (for §Roofline)."""
+    n = sum(p.size for p in jax.tree.leaves(params))
+    if cfg.kind == "none":
+        return n * 4.0
+    if cfg.kind == "topk":
+        k = n * cfg.topk_ratio
+        return k * (4.0 + 4.0)        # value + index
+    if cfg.kind == "int8":
+        return n * 1.0 + 4.0 * len(jax.tree.leaves(params))
+    raise ValueError(cfg.kind)

@@ -1,0 +1,23 @@
+"""LM loss: next-token cross-entropy with padding + modality-prefix
+masking, computed in fp32 with a vocab-padded logits mask."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def lm_loss(logits: jax.Array, targets: jax.Array,
+            mask: jax.Array | None = None,
+            vocab_size: int | None = None) -> tuple[jax.Array, dict]:
+    """logits (B,S,Vp) vs targets (B,S).  ``mask`` (B,S) of {0,1}
+    excludes padding; padded-vocab ids already carry -1e9 logits."""
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    if mask is None:
+        mask = jnp.ones_like(targets, jnp.float32)
+    mask = mask.astype(jnp.float32)
+    total = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / total
+    acc = ((jnp.argmax(logits, axis=-1) == targets) * mask).sum() / total
+    return loss, {"loss": loss, "accuracy": acc, "tokens": total}

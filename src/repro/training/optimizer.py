@@ -1,0 +1,104 @@
+"""AdamW with decoupled weight decay, global-norm clipping and a
+warmup+cosine schedule — pure JAX, shard-friendly (optimizer state is a
+pytree congruent with params, so it inherits the FSDP sharding =
+ZeRO-style sharded optimizer state).
+
+Moments are kept in fp32 even for bf16 params (mixed-precision
+practice); the update is computed in fp32 and cast back.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_ratio: float = 0.1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params: Any) -> AdamWState:
+    f32 = lambda p: jnp.zeros(p.shape, jnp.float32)   # noqa: E731
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      mu=jax.tree.map(f32, params),
+                      nu=jax.tree.map(f32, params))
+
+
+def lr_schedule(step: jax.Array, cfg: OptimizerConfig) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    progress = jnp.clip((step - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1),
+                        0.0, 1.0)
+    cosine = 0.5 * (1.0 + jnp.cos(jnp.pi * progress))
+    floor = cfg.min_lr_ratio
+    return cfg.lr * warm * (floor + (1.0 - floor) * cosine)
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float
+                        ) -> tuple[Any, jax.Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(
+        lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+        grads), norm
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms / biases / 1-d params."""
+    keys = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+    name = str(keys[-1]) if keys else ""
+    return not any(s in name for s in
+                   ("scale", "bias", "b_", "lambda", "ln"))
+
+
+def adamw_update(params: Any, grads: Any, state: AdamWState,
+                 cfg: OptimizerConfig) -> tuple[Any, AdamWState, dict]:
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = lr_schedule(state.step, cfg)
+    b1, b2 = cfg.b1, cfg.b2
+
+    mu = jax.tree.map(
+        lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+        state.mu, grads)
+    nu = jax.tree.map(
+        lambda v, g: b2 * v + (1 - b2)
+        * jnp.square(g.astype(jnp.float32)),
+        state.nu, grads)
+    mu_hat_scale = 1.0 / (1 - b1 ** step.astype(jnp.float32))
+    nu_hat_scale = 1.0 / (1 - b2 ** step.astype(jnp.float32))
+
+    def upd(path, p, m, v):
+        u = (m * mu_hat_scale) / (jnp.sqrt(v * nu_hat_scale) + cfg.eps)
+        if _decay_mask(path):
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map_with_path(upd, params, mu, nu)
+    metrics = {"lr": lr, "grad_norm": gnorm, "step": step}
+    return new_params, AdamWState(step=step, mu=mu, nu=nu), metrics

@@ -1,0 +1,166 @@
+"""Fault-tolerant training loop.
+
+Composes: model forward/loss → grad → (optional) gradient compression
+with error feedback → AdamW → periodic async checkpoints → restart
+recovery (resume from the latest committed step, re-deriving data
+batches from the counter-based pipeline).
+
+Failure handling exercised by tests:
+  - ``crash_after_step``-style interruption: a new TrainLoop on the same
+    checkpoint dir resumes bit-exactly from the last commit;
+  - straggler mitigation at the data layer: any host can regenerate any
+    shard (counter-based PRNG), so a hedged host swap needs no stream
+    replay;
+  - NaN-step rejection: a non-finite loss/grad skips the update
+    (the step still counts — matching large-run practice of dropping
+    bad batches) and is reported in metrics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpointing import AsyncCheckpointer, latest_step, restore
+from repro.data.pipeline import SyntheticLMData
+from repro.models import Model, Runtime
+from repro.training.grad_compress import (
+    CompressorConfig,
+    compress_grads,
+    init_error_state,
+)
+from repro.training.loss import lm_loss
+from repro.training.optimizer import (
+    AdamWState,
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+)
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    checkpoint_every: int = 25
+    checkpoint_dir: Optional[str] = None
+    optimizer: OptimizerConfig = dataclasses.field(
+        default_factory=OptimizerConfig)
+    compressor: CompressorConfig = dataclasses.field(
+        default_factory=CompressorConfig)
+    log_every: int = 10
+
+
+def make_train_step(model: Model, tcfg: TrainConfig,
+                    rt: Runtime = Runtime()) -> Callable:
+    """Builds the jitted (params, opt, err, batch) → ... step."""
+    cfg = model.cfg
+
+    def step_fn(params, opt_state: AdamWState, err_state, batch):
+        def loss_fn(p):
+            logits = model.forward_train(
+                p, batch["tokens"], rt=rt,
+                extra_embed=batch.get("extra_embed"))
+            tgt = batch["targets"]
+            logits = logits[:, -tgt.shape[1]:, :]
+            loss, metrics = lm_loss(logits, tgt,
+                                    batch.get("mask"))
+            return loss, metrics
+
+        (loss, metrics), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params)
+
+        # gradient compression round-trip (cross-pod wire format)
+        grads, err_state = compress_grads(grads, err_state,
+                                          tcfg.compressor)
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            params, grads, opt_state, tcfg.optimizer)
+
+        # NaN-step rejection: keep old state when loss/grads blew up
+        ok = jnp.isfinite(loss) & jnp.isfinite(opt_metrics["grad_norm"])
+        new_params = jax.tree.map(
+            lambda new, old: jnp.where(ok, new, old), new_params, params)
+        new_opt = jax.tree.map(
+            lambda new, old: jnp.where(ok, new, old), new_opt, opt_state)
+        metrics = {**metrics, **opt_metrics,
+                   "skipped": (~ok).astype(jnp.float32)}
+        return new_params, new_opt, err_state, metrics
+
+    return jax.jit(step_fn, donate_argnums=(0, 1, 2))
+
+
+class TrainLoop:
+    def __init__(self, model: Model, data: SyntheticLMData,
+                 tcfg: TrainConfig, rt: Runtime = Runtime()) -> None:
+        self.model = model
+        self.data = data
+        self.tcfg = tcfg
+        self.rt = rt
+        self.step_fn = make_train_step(model, tcfg, rt)
+        self.params = model.init(jax.random.PRNGKey(0))
+        self.opt_state = adamw_init(self.params)
+        self.err_state = (init_error_state(self.params)
+                          if tcfg.compressor.kind != "none" else
+                          jax.tree.map(lambda p: jnp.zeros((1,)),
+                                       {"_": 0}))
+        self.start_step = 0
+        self.ckpt = (AsyncCheckpointer(tcfg.checkpoint_dir)
+                     if tcfg.checkpoint_dir else None)
+        self.history: list[dict] = []
+        self._maybe_resume()
+
+    # -- fault tolerance -----------------------------------------------------
+    def _maybe_resume(self) -> None:
+        if not self.tcfg.checkpoint_dir:
+            return
+        step = latest_step(self.tcfg.checkpoint_dir)
+        if step is None:
+            return
+        state = {"params": self.params, "opt": self.opt_state}
+        restored = restore(self.tcfg.checkpoint_dir, step, state)
+        self.params = restored["params"]
+        self.opt_state = restored["opt"]
+        self.start_step = step
+        self.history.append({"resumed_from": step})
+
+    def _checkpoint(self, step: int) -> None:
+        if self.ckpt is None:
+            return
+        self.ckpt.save(step, {"params": self.params,
+                              "opt": self.opt_state})
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, steps: Optional[int] = None,
+            crash_after_step: Optional[int] = None) -> list[dict]:
+        """Run (resuming from the last commit).  ``crash_after_step``
+        raises after that step — the fault-injection hook for tests."""
+        total = steps if steps is not None else self.tcfg.steps
+        logs = []
+        for step in range(self.start_step, total):
+            batch = {k: jnp.asarray(v) for k, v in
+                     self.data.global_batch_at(step).items()}
+            self.params, self.opt_state, self.err_state, metrics = \
+                self.step_fn(self.params, self.opt_state,
+                             self.err_state, batch)
+            if (step % self.tcfg.log_every == 0 or step == total - 1):
+                entry = {"step": step,
+                         "loss": float(metrics["loss"]),
+                         "accuracy": float(metrics["accuracy"]),
+                         "grad_norm": float(metrics["grad_norm"]),
+                         "lr": float(metrics["lr"]),
+                         "skipped": float(metrics["skipped"])}
+                logs.append(entry)
+                self.history.append(entry)
+            if ((step + 1) % self.tcfg.checkpoint_every == 0
+                    or step == total - 1):
+                self._checkpoint(step + 1)
+            if crash_after_step is not None and step >= crash_after_step:
+                if self.ckpt:
+                    self.ckpt.wait()
+                raise RuntimeError(f"injected crash after step {step}")
+        if self.ckpt:
+            self.ckpt.wait()
+        self.start_step = total
+        return logs

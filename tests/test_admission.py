@@ -1,0 +1,263 @@
+"""The §4.3 admission pipeline: ordered checks, short-circuit, 429
+semantics, contention thresholding, completion-callback accounting."""
+import pytest
+
+from repro.core import (
+    AdmissionController,
+    AdmissionRequest,
+    DenyReason,
+    EntitlementSpec,
+    EntitlementState,
+    PoolSpec,
+    QoS,
+    Resources,
+    ScalingBounds,
+    ServiceClass,
+    TokenPool,
+)
+
+
+def mkpool(tps=240.0, conc=16.0, kv=float(1 << 30),
+           max_r=1) -> TokenPool:
+    spec = PoolSpec(
+        name="qwen3-8b", model="Qwen/Qwen3-8B",
+        scaling=ScalingBounds(1, max_r),
+        per_replica=Resources(tps, kv, conc),
+        default_max_tokens=64,
+    )
+    return TokenPool(spec)
+
+
+def ent(name, klass, tps, conc=6.0, slo=200.0, kv=0.0):
+    return EntitlementSpec(
+        name=name, tenant_id=name, pool="qwen3-8b",
+        qos=QoS(service_class=klass, slo_target_ms=slo),
+        baseline=Resources(tps, kv, conc))
+
+
+def req(entname, rid, t=0.0, n_in=64, n_out=64, kvpt=0.0):
+    return AdmissionRequest(entitlement=entname, input_tokens=n_in,
+                            max_tokens=n_out, arrival_s=t, request_id=rid,
+                            kv_bytes_per_token=kvpt)
+
+
+class TestCheckOrdering:
+    """Checks evaluate in order and short-circuit (paper §4.3)."""
+
+    def test_check1_not_bound_short_circuits(self):
+        pool = mkpool()
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 100.0))
+        pool.status["g"].state = EntitlementState.DEGRADED
+        # even a trivially-affordable request is denied on state
+        d = AdmissionController(pool).decide(req("g", "r1"))
+        assert not d.admitted and d.reason == DenyReason.NOT_BOUND
+
+    def test_unknown_entitlement(self):
+        pool = mkpool()
+        d = AdmissionController(pool).decide(req("nope", "r1"))
+        assert not d.admitted and d.reason == DenyReason.NOT_BOUND
+
+    def test_check2_default_max_tokens_applied(self):
+        pool = mkpool(tps=2000.0)
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 1000.0))
+        r = AdmissionRequest(entitlement="g", input_tokens=10,
+                             max_tokens=None, arrival_s=0.0, request_id="r1")
+        d = AdmissionController(pool).decide(r)
+        assert d.admitted
+        assert d.effective_max_tokens == 64          # pool default
+        assert d.charged_tokens == 74
+
+    def test_check3_concurrency_before_budget(self):
+        pool = mkpool(tps=2e6)
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 1e6, conc=1.0))
+        ac = AdmissionController(pool)
+        assert ac.decide(req("g", "r1")).admitted
+        pool.on_start("r1")           # r1's KV becomes resident
+        d = ac.decide(req("g", "r2"))
+        assert not d.admitted and d.reason == DenyReason.CONCURRENCY
+        assert d.retry_after_s and d.retry_after_s > 0
+
+    def test_check3_counts_resident_not_queued(self):
+        """§3.1: concurrency r counts KV-resident sequences; an admitted
+        request still waiting for a slot doesn't consume r_e."""
+        pool = mkpool(tps=2e6)
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 1e6, conc=2.0))
+        ac = AdmissionController(pool)
+        assert ac.decide(req("g", "r1")).admitted   # queued, not started
+        d = ac.decide(req("g", "r2"))
+        assert d.admitted                            # resident still 0
+
+    def test_check3_burst_above_limit_when_pool_free(self):
+        """Table 1: burst classes may exceed r_e while the pool has idle
+        slots (concurrency burst dimension); guaranteed may not."""
+        pool = mkpool(tps=2e6, conc=16.0)
+        pool.add_entitlement(ent("e", ServiceClass.ELASTIC, 100.0, conc=1))
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 100.0, conc=1))
+        pool.ledger.bucket("e").level = 1e6
+        pool.ledger.bucket("g").level = 1e6
+        ac = AdmissionController(pool)
+        assert ac.decide(req("e", "e1")).admitted
+        pool.on_start("e1")
+        d = ac.decide(req("e", "e2"))    # beyond r_e=1, pool has slots
+        assert d.admitted
+        assert ac.decide(req("g", "g1")).admitted
+        pool.on_start("g1")
+        d = ac.decide(req("g", "g2"))    # guaranteed cannot burst
+        assert not d.admitted and d.reason == DenyReason.CONCURRENCY
+
+    def test_check4_token_budget(self):
+        pool = mkpool(conc=100.0)
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 10.0, conc=99))
+        ac = AdmissionController(pool)
+        # bucket starts at 4 s of 10 tok/s = 40 tokens; ask for 128
+        d = ac.decide(req("g", "r1"))
+        assert not d.admitted and d.reason == DenyReason.TOKEN_BUDGET
+        # Retry-After reflects refill time of the deficit
+        assert d.retry_after_s == pytest.approx((128 - 40) / 10.0, abs=0.2)
+
+    def test_check4_kv_headroom(self):
+        pool = mkpool(tps=2e6)
+        # χ_e = 1 MiB; request needs 128 tokens × 16 KiB = 2 MiB
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 1e6,
+                                 kv=1 << 20))
+        d = AdmissionController(pool).decide(
+            req("g", "r1", kvpt=16 * 1024.0))
+        assert not d.admitted and d.reason == DenyReason.TOKEN_BUDGET
+
+    def test_check5_only_when_contended(self):
+        pool = mkpool(conc=2.0)
+        pool.add_entitlement(ent("s", ServiceClass.SPOT, 0.0, conc=0.0))
+        pool.ledger.set_rate("s", 1000.0, 0.0)
+        pool.ledger.bucket("s").level = 1e6
+        ac = AdmissionController(pool)
+        assert ac.decide(req("s", "r1")).admitted      # pool empty
+        assert ac.decide(req("s", "r2")).admitted      # fills pool (conc=2)
+
+
+class TestContention:
+    def test_spot_denied_below_threshold_guaranteed_admitted(self):
+        pool = mkpool(tps=2e6, conc=4.0, max_r=2)
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 1e6, conc=3))
+        pool.add_entitlement(ent("e", ServiceClass.ELASTIC, 100.0, conc=2,
+                                 slo=500.0))
+        pool.add_entitlement(ent("s", ServiceClass.SPOT, 0.0, conc=8,
+                                 slo=30000.0))
+        pool.ledger.set_rate("s", 1e6, 0.0)
+        pool.ledger.bucket("s").level = 1e6
+        pool.ledger.bucket("e").level = 1e6
+        ac = AdmissionController(pool)
+        # fill the pool with guaranteed + elastic traffic; e2 waits in
+        # the queue → demand exceeds supply → contended
+        for rid in ("g1", "g2", "g3"):
+            assert ac.decide(req("g", rid)).admitted
+            pool.on_start(rid)
+        assert ac.decide(req("e", "e1")).admitted
+        pool.on_start("e1")
+        assert ac.decide(req("e", "e2")).admitted     # queued
+        assert pool.contended()
+        # spot arrives: priority ~1 < threshold (min live ≈ elastic) → 429
+        d = ac.decide(req("s", "s1"))
+        assert not d.admitted and d.reason == DenyReason.LOW_PRIORITY
+        assert d.retry_after_s > 0
+        assert pool.status["s"].denied_low_priority == 1
+        # guaranteed is never rejected while within its r_e, even
+        # under contention (check 5 shields protected classes)... its
+        # concurrency is full here, so use completion + retry instead:
+        pool.on_complete("e2", 64, now=1.0)
+        assert not pool.contended()
+        assert ac.decide(req("s", "s2", t=1.0)).admitted
+
+    def test_guaranteed_shielded_from_check5(self):
+        pool = mkpool(tps=2e6, conc=2.0, max_r=3)
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 1e6, conc=2))
+        pool.add_entitlement(ent("e", ServiceClass.ELASTIC, 1e4, conc=3))
+        ac = AdmissionController(pool)
+        for rid in ("e1", "e2"):
+            assert ac.decide(req("e", rid)).admitted
+            pool.on_start(rid)
+        assert ac.decide(req("e", "e3")).admitted     # queued
+        assert pool.contended()
+        # elastic self-competition under contention: equal live
+        # priority fails the strict "must exceed" → denied
+        d = ac.decide(req("e", "e4"))
+        assert not d.admitted and d.reason == DenyReason.LOW_PRIORITY
+        # guaranteed sails through (never rejected within r_e)
+        assert ac.decide(req("g", "g1")).admitted
+
+    def test_threshold_is_min_live_entitlement_priority(self):
+        pool = mkpool(conc=2.0)
+        pool.add_entitlement(ent("s", ServiceClass.SPOT, 0.0, conc=8))
+        pool.ledger.set_rate("s", 1e6, 0.0)
+        pool.ledger.bucket("s").level = 1e6
+        ac = AdmissionController(pool)
+        for rid in ("s1", "s2"):
+            ac.decide(req("s", rid))
+            pool.on_start(rid)
+        ac.decide(req("s", "s3"))                     # queued
+        assert pool.contended()
+        assert pool.admission_threshold() == pytest.approx(
+            pool.priority("s"))
+
+    def test_completion_relieves_contention(self):
+        pool = mkpool(tps=2e6, conc=1.0, max_r=2)
+        pool.add_entitlement(ent("e", ServiceClass.ELASTIC, 100.0, conc=2))
+        pool.ledger.bucket("e").level = 1e6
+        ac = AdmissionController(pool)
+        ac.decide(req("e", "r1"))
+        pool.on_start("r1")
+        ac.decide(req("e", "r2"))                     # queued
+        assert pool.contended()
+        pool.on_complete("r2", actual_output_tokens=64, now=1.0)
+        assert not pool.contended()
+        assert pool.admission_threshold() == 0.0
+
+
+class TestAccountingLoop:
+    """Completion callbacks close the admission↔execution gap."""
+
+    def test_refund_of_unused_output(self):
+        pool = mkpool()
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 100.0, conc=9))
+        ac = AdmissionController(pool)
+        b = pool.ledger.ensure("g", 100.0, 0.0)
+        level0 = b.level
+        d = ac.decide(req("g", "r1", n_in=64, n_out=64))
+        assert d.admitted
+        assert b.level == pytest.approx(level0 - 128)
+        # model stopped after 10 output tokens → refund 54
+        pool.on_complete("r1", actual_output_tokens=10, now=0.0)
+        assert b.level == pytest.approx(level0 - 74)
+        assert pool.status["g"].tokens_total == pytest.approx(74)
+
+    def test_eviction_full_refund(self):
+        pool = mkpool()
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 100.0, conc=9))
+        ac = AdmissionController(pool)
+        b = pool.ledger.ensure("g", 100.0, 0.0)
+        level0 = b.level
+        ac.decide(req("g", "r1"))
+        pool.on_evict("r1", now=0.0)
+        assert b.level == pytest.approx(level0)
+
+    def test_denied_demand_counts_for_backfill(self):
+        pool = mkpool()
+        pool.add_entitlement(ent("s", ServiceClass.SPOT, 0.0, conc=1))
+        ac = AdmissionController(pool)
+        pool.ledger.set_rate("s", 10.0, 0.0)
+        ac.decide(req("s", "r1"))       # admitted
+        ac.decide(req("s", "r2"))       # concurrency-denied
+        rec = pool.tick(1.0)
+        # denied tokens still registered as demand
+        assert rec.demand_tps["s"] > 0
+
+    def test_burst_rises_on_overconsumption(self):
+        pool = mkpool()
+        pool.add_entitlement(ent("e", ServiceClass.ELASTIC, 10.0, conc=2))
+        ac = AdmissionController(pool)
+        pool.ledger.bucket("e").level = 1e6
+        for t in range(8):
+            d = ac.decide(req("e", f"r{t}", t=float(t)))
+            if d.admitted:
+                pool.on_complete(f"r{t}", 64, float(t))
+            pool.tick(float(t + 1))
+        assert pool.status["e"].burst > 0.5   # sustained λ overconsumption

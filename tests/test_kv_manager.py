@@ -1,0 +1,84 @@
+"""Paged KV block manager: allocation, extension, fragmentation-free
+reuse, χ accounting — plus hypothesis invariants."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.serving.kv_manager import KVBlockManager, OutOfPages
+
+
+class TestBasics:
+    def test_allocate_rounds_up_to_pages(self):
+        m = KVBlockManager(total_pages=10, page_tokens=16)
+        a = m.allocate("s1", tokens=17)
+        assert len(a.pages) == 2
+        assert m.free_pages == 8
+
+    def test_extend_allocates_on_boundary(self):
+        m = KVBlockManager(total_pages=10, page_tokens=16)
+        m.allocate("s1", tokens=16)
+        m.extend("s1", 17)                 # crosses into page 2
+        assert len(m._seqs["s1"].pages) == 2
+        m.extend("s1", 30)                 # same page
+        assert len(m._seqs["s1"].pages) == 2
+
+    def test_free_returns_pages(self):
+        m = KVBlockManager(total_pages=4, page_tokens=16)
+        m.allocate("s1", 64)
+        assert m.free_pages == 0
+        with pytest.raises(OutOfPages):
+            m.allocate("s2", 1)
+        m.free("s1")
+        assert m.free_pages == 4
+        m.allocate("s2", 64)               # reuse without fragmentation
+
+    def test_out_of_pages_on_extend(self):
+        m = KVBlockManager(total_pages=2, page_tokens=16)
+        m.allocate("s1", 32)
+        with pytest.raises(OutOfPages):
+            m.extend("s1", 33)
+
+    def test_block_table_padding(self):
+        m = KVBlockManager(total_pages=8, page_tokens=16)
+        m.allocate("s1", 40)               # 3 pages
+        row = m.block_table("s1", max_pages=6)
+        assert (row[:3] >= 0).all()
+        assert (row[3:] == -1).all()
+
+    def test_kv_bytes_accounting(self):
+        m = KVBlockManager(total_pages=8, page_tokens=16,
+                           bytes_per_token=1024.0)
+        m.allocate("s1", 32)
+        assert m.kv_bytes_in_use() == 2 * 16 * 1024.0
+
+
+class TestInvariants:
+    @given(st.lists(st.tuples(st.sampled_from(["alloc", "extend", "free"]),
+                              st.integers(0, 7),
+                              st.integers(1, 200)),
+                    min_size=1, max_size=60))
+    @settings(max_examples=100, deadline=None)
+    def test_no_page_leaks_or_double_allocation(self, ops):
+        m = KVBlockManager(total_pages=16, page_tokens=16)
+        live: dict[str, int] = {}
+        for op, sid, tokens in ops:
+            seq = f"s{sid}"
+            try:
+                if op == "alloc" and seq not in live:
+                    m.allocate(seq, tokens)
+                    live[seq] = tokens
+                elif op == "extend" and seq in live:
+                    new_total = live[seq] + tokens
+                    m.extend(seq, new_total)
+                    live[seq] = new_total
+                elif op == "free" and seq in live:
+                    m.free(seq)
+                    del live[seq]
+            except OutOfPages:
+                pass
+            # invariant 1: conservation
+            assert m.used_pages + m.free_pages == m.total_pages
+            # invariant 2: no page owned twice
+            owned = [p for s in m._seqs.values() for p in s.pages]
+            assert len(owned) == len(set(owned))
+            # invariant 3: free list disjoint from owned
+            assert not (set(owned) & set(m._free))

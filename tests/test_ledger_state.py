@@ -1,0 +1,187 @@
+"""Token buckets (throughput entitlements), StateStore (Redis contract),
+and the autoscaler policy."""
+import pytest
+
+from repro.core import (
+    Autoscaler,
+    AutoscalerConfig,
+    Charge,
+    EntitlementSpec,
+    Ledger,
+    PoolSpec,
+    QoS,
+    Resources,
+    ScalingBounds,
+    ServiceClass,
+    StateStore,
+    TokenBucket,
+    TokenPool,
+)
+from repro.core.state import CASConflict
+
+
+class TestTokenBucket:
+    def test_refills_at_rate(self):
+        b = TokenBucket(rate_tps=10.0, burst_window_s=4.0, level=0.0,
+                        last_refill_s=0.0)
+        b.refill(2.0)
+        assert b.level == pytest.approx(20.0)
+
+    def test_capacity_caps_accrual(self):
+        b = TokenBucket(rate_tps=10.0, burst_window_s=4.0, level=0.0,
+                        last_refill_s=0.0)
+        b.refill(100.0)
+        assert b.level == pytest.approx(40.0)   # 4s window cap
+
+    def test_charge_and_insufficient(self):
+        b = TokenBucket(rate_tps=10.0, level=15.0, last_refill_s=0.0)
+        assert b.charge(10.0, now=0.0)
+        assert not b.charge(10.0, now=0.0)      # only 5 left
+
+    def test_rate_change_preserves_credit(self):
+        b = TokenBucket(rate_tps=10.0, burst_window_s=4.0, level=0.0,
+                        last_refill_s=0.0)
+        b.set_rate(5.0, now=2.0)   # accrued 20 at old rate, cap now 20
+        assert b.level == pytest.approx(20.0)
+        b.set_rate(1.0, now=2.0)   # cap 4 clamps stored credit
+        assert b.level == pytest.approx(4.0)
+
+    def test_time_until_affordable(self):
+        b = TokenBucket(rate_tps=10.0, level=5.0, last_refill_s=0.0)
+        assert b.time_until_affordable(25.0, now=0.0) == pytest.approx(2.0)
+        b2 = TokenBucket(rate_tps=0.0, level=0.0, last_refill_s=0.0)
+        assert b2.time_until_affordable(1.0, now=0.0) == float("inf")
+
+
+class TestLedger:
+    def test_charge_settle_refund(self):
+        led = Ledger()
+        led.ensure("e", 100.0, now=0.0)
+        assert led.charge(Charge("r1", "e", 128.0, 64, 64, 0.0), now=0.0)
+        level_after = led.bucket("e").level
+        actual = led.settle("r1", actual_output_tokens=20, now=0.0)
+        assert actual == 84.0
+        assert led.bucket("e").level == pytest.approx(level_after + 44.0)
+
+    def test_cancel_refunds_everything(self):
+        led = Ledger()
+        led.ensure("e", 100.0, now=0.0)
+        before = led.bucket("e").level
+        led.charge(Charge("r1", "e", 128.0, 64, 64, 0.0), now=0.0)
+        led.cancel("r1", now=0.0)
+        assert led.bucket("e").level == pytest.approx(before)
+
+    def test_settle_unknown_request_noop(self):
+        led = Ledger()
+        assert led.settle("nope", 10, now=0.0) == 0.0
+
+
+class TestStateStore:
+    def test_roundtrip_and_versions(self):
+        s = StateStore()
+        v1 = s.set("k", {"x": 1})
+        v2 = s.set("k", {"x": 2})
+        assert (v1, v2) == (1, 2)
+        val, ver = s.get_versioned("k")
+        assert val == {"x": 2} and ver == 2
+
+    def test_cas_conflict(self):
+        s = StateStore()
+        s.set("k", 1)
+        s.set("k", 2)
+        with pytest.raises(CASConflict):
+            s.compare_and_set("k", 3, expected_version=1)
+
+    def test_update_read_modify_write(self):
+        s = StateStore()
+        s.set("ctr", 10)
+        s.update("ctr", lambda v: (v or 0) + 5)
+        assert s.get("ctr") == 15
+
+    def test_ttl_expiry(self):
+        s = StateStore()
+        s.set("k", "v", now=0.0, ttl_s=10.0)
+        assert s.get("k", now=5.0) == "v"
+        assert s.get("k", now=10.0) is None
+
+    def test_incr(self):
+        s = StateStore()
+        assert s.incr("c", 2.0) == 2.0
+        assert s.incr("c", 3.0) == 5.0
+
+    def test_keys_prefix(self):
+        s = StateStore()
+        s.set("ent:a", 1)
+        s.set("ent:b", 2)
+        s.set("pool:x", 3)
+        assert s.keys("ent:") == ["ent:a", "ent:b"]
+
+
+def _pool(min_r=1, max_r=10, per_tps=240.0):
+    spec = PoolSpec(name="p", model="m",
+                    scaling=ScalingBounds(min_r, max_r),
+                    per_replica=Resources(per_tps, 1 << 30, 16.0))
+    return TokenPool(spec)
+
+
+def _ent(name, klass, tps):
+    return EntitlementSpec(name=name, tenant_id=name, pool="p",
+                           qos=QoS(service_class=klass),
+                           baseline=Resources(tps, 0.0, 4.0))
+
+
+class TestAutoscaler:
+    def test_scales_up_for_reserved_baselines(self):
+        pool = _pool()
+        pool.add_entitlement(_ent("g", ServiceClass.GUARANTEED, 500.0))
+        auto = Autoscaler(pool)
+        d = auto.step()
+        # 500 tok/s reserved needs ceil(500/240) = 3 replicas
+        assert d.desired == 3
+        assert pool.replicas == 3
+        assert d.reason == "scale_up:reserved"
+
+    def test_scales_up_on_demand_pressure(self):
+        pool = _pool()
+        pool.add_entitlement(_ent("s", ServiceClass.SPOT, 0.0))
+        auto = Autoscaler(pool, AutoscalerConfig(demand_ewma=0.0))
+        for t in range(1, 4):
+            pool.register_deny("s", 1000.0, low_priority=True)
+            pool.tick(float(t))
+            d = auto.step()
+        assert d.desired > 1
+
+    def test_respects_max_replicas(self):
+        pool = _pool(max_r=2)
+        pool.add_entitlement(_ent("s", ServiceClass.SPOT, 0.0))
+        auto = Autoscaler(pool, AutoscalerConfig(demand_ewma=0.0))
+        for t in range(1, 4):
+            pool.register_deny("s", 1e6, low_priority=True)
+            pool.tick(float(t))
+            d = auto.step()
+        assert d.desired == 2
+
+    def test_scale_down_needs_cooldown(self):
+        pool = _pool()
+        pool.add_entitlement(_ent("g", ServiceClass.GUARANTEED, 500.0))
+        auto = Autoscaler(pool, AutoscalerConfig(cooldown_ticks=3))
+        auto.step()
+        assert pool.replicas == 3
+        pool.remove_entitlement("g")     # demand vanishes
+        held = [auto.step().desired for _ in range(2)]
+        assert held == [3, 3]            # cooldown holds
+        assert auto.step().desired == 1  # third low tick shrinks
+        assert pool.replicas == 1
+
+    def test_failure_then_recovery(self):
+        """Replica failure drops runtime capacity; autoscaler restores it
+        (paper Exp 2's outage/recovery, automated)."""
+        pool = _pool()
+        pool.add_entitlement(_ent("g", ServiceClass.GUARANTEED, 400.0))
+        auto = Autoscaler(pool)
+        auto.step()
+        assert pool.replicas == 2
+        pool.set_replicas(1)             # node failure
+        d = auto.step()
+        assert d.desired == 2            # plans recovery immediately
+        assert pool.replicas == 2

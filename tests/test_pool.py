@@ -1,0 +1,279 @@
+"""TokenPool controller: allocation ordering (Table 1), water-filling,
+work-conserving backfill, debt dynamics, reclamation."""
+import pytest
+
+from repro.core import (
+    EntitlementSpec,
+    EntitlementState,
+    PoolSpec,
+    PriorityCoefficients,
+    QoS,
+    Resources,
+    ScalingBounds,
+    ServiceClass,
+    TokenPool,
+    waterfill,
+)
+
+
+def mkpool(tps=160.0, conc=16.0, replicas=1, max_replicas=1) -> TokenPool:
+    spec = PoolSpec(
+        name="p", model="m",
+        scaling=ScalingBounds(min_replicas=replicas, max_replicas=max_replicas),
+        per_replica=Resources(tps, 64 * (1 << 20), conc),
+    )
+    return TokenPool(spec)
+
+
+def ent(name, klass, tps, conc=4.0, slo=1000.0, kv=0.0):
+    return EntitlementSpec(
+        name=name, tenant_id=f"t-{name}", pool="p",
+        qos=QoS(service_class=klass, slo_target_ms=slo),
+        baseline=Resources(tps, kv, conc),
+    )
+
+
+class TestWaterfill:
+    def test_no_scarcity_everyone_gets_want(self):
+        a = waterfill(100.0, {"x": 30.0, "y": 20.0}, {"x": 1.0, "y": 1.0})
+        assert a == {"x": 30.0, "y": 20.0}
+
+    def test_scarcity_weighted_shares(self):
+        a = waterfill(30.0, {"x": 100.0, "y": 100.0}, {"x": 2.0, "y": 1.0})
+        assert a["x"] == pytest.approx(20.0)
+        assert a["y"] == pytest.approx(10.0)
+
+    def test_cap_and_redistribute(self):
+        # x caps at 5; its unused share flows to y
+        a = waterfill(30.0, {"x": 5.0, "y": 100.0}, {"x": 10.0, "y": 1.0})
+        assert a["x"] == pytest.approx(5.0)
+        assert a["y"] == pytest.approx(25.0)
+
+    def test_work_conserving(self):
+        a = waterfill(50.0, {"x": 100.0, "y": 10.0}, {"x": 1.0, "y": 1.0})
+        assert sum(a.values()) == pytest.approx(50.0)
+
+    def test_zero_weights_equal_split(self):
+        a = waterfill(10.0, {"x": 50.0, "y": 50.0}, {"x": 0.0, "y": 0.0})
+        assert a["x"] == pytest.approx(5.0)
+        assert a["y"] == pytest.approx(5.0)
+
+    def test_never_exceeds_capacity(self):
+        a = waterfill(10.0, {"x": 3.0, "y": 2.0}, {"x": 1.0, "y": 1.0})
+        assert sum(a.values()) <= 10.0 + 1e-9
+
+
+class TestAllocationOrdering:
+    """Table 1 protection ordering end-to-end through a tick."""
+
+    def test_guaranteed_funding_reserved_idle_capacity_borrowed(self):
+        """Table 1: guaranteed funding is never reclaimed (alloc stays at
+        baseline even when idle) — but the *idle* capacity itself is
+        work-conservingly borrowed by spot until the tenant returns."""
+        pool = mkpool(tps=100.0)
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 60.0))
+        pool.add_entitlement(ent("s", ServiceClass.SPOT, 0.0))
+        # spot demands everything, guaranteed idle
+        pool.register_deny("s", 500.0, low_priority=False)
+        rec = pool.tick(1.0)
+        assert rec.allocations["g"] == pytest.approx(60.0)   # funding kept
+        assert rec.allocations["s"] == pytest.approx(100.0)  # idle borrowed
+
+    def test_spot_squeezed_when_guaranteed_returns(self):
+        pool = mkpool(tps=100.0)
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 60.0))
+        pool.add_entitlement(ent("s", ServiceClass.SPOT, 0.0))
+        for t in range(1, 6):
+            pool.register_deny("g", 60.0, low_priority=False)   # g active
+            pool.register_deny("s", 500.0, low_priority=False)
+            rec = pool.tick(float(t))
+        # with g consuming its baseline, spot gets only the surplus
+        assert rec.allocations["g"] == pytest.approx(60.0)
+        assert rec.allocations["s"] == pytest.approx(40.0, abs=2.0)
+
+    def test_elastic_shrunk_before_guaranteed(self):
+        # entitleable capacity (2 replicas) covers both baselines;
+        # runtime capacity (1 replica = 100 tps) creates the scarcity.
+        pool = mkpool(tps=100.0, replicas=1, max_replicas=2)
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 80.0))
+        pool.add_entitlement(ent("e", ServiceClass.ELASTIC, 50.0))
+        rec = None
+        for t in range(1, 8):
+            pool.register_deny("g", 80.0, low_priority=False)
+            pool.register_deny("e", 100.0, low_priority=False)
+            rec = pool.tick(float(t))
+        assert rec.allocations["e"] == pytest.approx(20.0, abs=3.0)
+
+    def test_elastic_scarcity_split_by_priority(self):
+        pool = mkpool(tps=80.0, replicas=1, max_replicas=2)
+        pool.add_entitlement(ent("tight", ServiceClass.ELASTIC, 50.0, slo=500.0))
+        pool.add_entitlement(ent("loose", ServiceClass.ELASTIC, 50.0, slo=30000.0))
+        pool.register_deny("tight", 100.0, low_priority=False)
+        pool.register_deny("loose", 100.0, low_priority=False)
+        rec = pool.tick(1.0)
+        assert rec.allocations["tight"] > rec.allocations["loose"]
+        assert (rec.allocations["tight"] + rec.allocations["loose"]
+                == pytest.approx(80.0))
+
+    def test_dedicated_can_burst_guaranteed_cannot(self):
+        pool = mkpool(tps=100.0)
+        pool.add_entitlement(ent("d", ServiceClass.DEDICATED, 30.0))
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 30.0))
+        # both demand far above baseline
+        pool.register_deny("d", 200.0, low_priority=False)
+        pool.register_deny("g", 200.0, low_priority=False)
+        rec = pool.tick(1.0)
+        assert rec.allocations["d"] > 30.0 + 1e-6      # bursts into surplus
+        assert rec.allocations["g"] == pytest.approx(30.0)  # rate-limit semantics
+
+    def test_runtime_capacity_dip_scales_protected(self):
+        pool = mkpool(tps=100.0, replicas=1, max_replicas=2)
+        pool.add_entitlement(ent("g1", ServiceClass.GUARANTEED, 80.0))
+        pool.add_entitlement(ent("g2", ServiceClass.GUARANTEED, 80.0))
+        # entitleable capacity 200 → both bind; runtime only 100;
+        # both ACTIVE at full baseline → emergency proportional scaling
+        rec = None
+        for t in range(1, 8):
+            pool.register_deny("g1", 80.0, low_priority=False)
+            pool.register_deny("g2", 80.0, low_priority=False)
+            rec = pool.tick(float(t))
+        assert rec.allocations["g1"] == pytest.approx(50.0, abs=2.0)
+        assert rec.allocations["g2"] == pytest.approx(50.0, abs=2.0)
+
+
+class TestDebtDynamics:
+    def test_underserved_elastic_accumulates_debt(self):
+        # outage leaves capacity 40 < either baseline: both sub-baseline
+        # (paper Fig. 5 panel 2: both debts positive, loose-SLO larger)
+        pool = mkpool(tps=40.0, replicas=1, max_replicas=4)
+        pool.add_entitlement(ent("a", ServiceClass.ELASTIC, 50.0, slo=500.0))
+        pool.add_entitlement(ent("b", ServiceClass.ELASTIC, 50.0, slo=30000.0))
+        for t in range(1, 20):
+            pool.register_deny("a", 60.0, low_priority=False)
+            pool.register_deny("b", 60.0, low_priority=False)
+            pool.tick(float(t))
+        # b (loose SLO) gets less capacity → more debt; both positive
+        assert pool.status["b"].debt > pool.status["a"].debt > 0.0
+
+    def test_fully_served_elastic_accrues_no_debt(self):
+        # milder scarcity: tight-SLO tenant reaches baseline → no debt,
+        # while the squeezed one converges to its steady-state gap
+        pool = mkpool(tps=80.0, replicas=1, max_replicas=2)
+        pool.add_entitlement(ent("a", ServiceClass.ELASTIC, 50.0, slo=500.0))
+        pool.add_entitlement(ent("b", ServiceClass.ELASTIC, 50.0, slo=30000.0))
+        for t in range(1, 20):
+            pool.register_deny("a", 60.0, low_priority=False)
+            pool.register_deny("b", 60.0, low_priority=False)
+            rec = pool.tick(float(t))
+        assert pool.status["a"].debt == pytest.approx(0.0, abs=1e-9)
+        assert rec.allocations["a"] == pytest.approx(50.0)
+        # b's steady-state debt equals its steady allocation gap (20/50)
+        assert pool.status["b"].debt == pytest.approx(0.4, abs=0.01)
+
+    def test_debt_raises_future_share_and_narrows_gap(self):
+        """Paper §5.3: debt narrows the priority gap (4.6× → ~3.9× in
+        their run) and the loose-SLO tenant's share grows, preventing
+        starvation."""
+        pool = mkpool(tps=40.0, replicas=1, max_replicas=4)
+        pool.add_entitlement(ent("a", ServiceClass.ELASTIC, 50.0, slo=500.0))
+        pool.add_entitlement(ent("b", ServiceClass.ELASTIC, 50.0, slo=30000.0))
+        no_debt_gap = (pool.priority("a") / pool.priority("b"))
+        assert no_debt_gap == pytest.approx(4.62, abs=0.05)
+        for t in range(1, 30):
+            pool.register_deny("a", 60.0, low_priority=False)
+            pool.register_deny("b", 60.0, low_priority=False)
+            rec = pool.tick(float(t))
+        gap = rec.priorities["a"] / rec.priorities["b"]
+        assert gap < 3.9                            # beats paper's 3.9×
+        assert pool.status["b"].debt > pool.status["a"].debt > 0.0
+        assert rec.allocations["b"] > 0.15 * 40.0   # no starvation
+
+    def test_idle_entitlement_accrues_no_debt(self):
+        pool = mkpool(tps=10.0)
+        pool.add_entitlement(ent("idle", ServiceClass.ELASTIC, 50.0))
+        for t in range(1, 10):
+            pool.tick(float(t))
+        assert pool.status["idle"].debt == pytest.approx(0.0)
+
+    def test_spot_never_accrues_debt(self):
+        pool = mkpool(tps=10.0)
+        pool.add_entitlement(ent("s", ServiceClass.SPOT, 0.0))
+        for t in range(1, 10):
+            pool.register_deny("s", 100.0, low_priority=True)
+            pool.tick(float(t))
+        assert pool.status["s"].debt == 0.0
+
+    def test_debt_decays_after_recovery(self):
+        pool = mkpool(tps=20.0)
+        pool.add_entitlement(ent("a", ServiceClass.ELASTIC, 50.0))
+        for t in range(1, 10):
+            pool.register_deny("a", 60.0, low_priority=False)
+            pool.tick(float(t))
+        peak = pool.status["a"].debt
+        assert peak > 0.1
+        # capacity recovers: demand served at baseline (no gap)
+        pool.set_replicas(1)
+        pool.spec.per_replica = Resources(200.0, 64 << 20, 16.0)
+        for t in range(10, 40):
+            pool.status["a"].window_tokens = 50.0  # served at baseline
+            pool.register_deny("a", 0.0, low_priority=False)
+            pool.tick(float(t))
+        assert pool.status["a"].debt < 0.05
+
+
+class TestVirtualNodeIntegration:
+    def test_over_entitlement_degrades(self):
+        pool = mkpool(tps=100.0, conc=16.0)
+        s1 = pool.add_entitlement(ent("g1", ServiceClass.GUARANTEED, 80.0))
+        s2 = pool.add_entitlement(ent("g2", ServiceClass.GUARANTEED, 80.0))
+        assert s1 == EntitlementState.BOUND
+        assert s2 == EntitlementState.DEGRADED     # 160 > 100 entitleable
+
+    def test_spot_always_binds(self):
+        pool = mkpool(tps=100.0)
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 100.0))
+        s = pool.add_entitlement(ent("s", ServiceClass.SPOT, 0.0))
+        assert s == EntitlementState.BOUND
+
+    def test_removal_frees_capacity_for_pending(self):
+        pool = mkpool(tps=100.0)
+        pool.add_entitlement(ent("g1", ServiceClass.GUARANTEED, 80.0))
+        pool.add_entitlement(ent("g2", ServiceClass.GUARANTEED, 80.0))
+        pool.remove_entitlement("g1")
+        # pending lease g2 reschedules on the freed node
+        assert pool.provider.is_bound("lease-g2")
+
+
+class TestReclamation:
+    def test_preemptible_eviction_list(self):
+        from repro.core.pool import InFlight
+        pool = mkpool(tps=100.0)
+        pool.add_entitlement(ent("p", ServiceClass.PREEMPTIBLE, 0.0))
+        pool.add_entitlement(ent("s", ServiceClass.SPOT, 0.0))
+        pool.register_admit(InFlight("r1", "p", 0.1, 0.0, 64, 0.0), 64.0)
+        pool.register_admit(InFlight("r2", "s", 1.0, 0.0, 64, 0.0), 64.0)
+        victims = pool.reclaim_preemptible()
+        assert victims == ["r1"]          # preemptible evicted, spot not
+
+    def test_evict_releases_state(self):
+        from repro.core.pool import InFlight
+        pool = mkpool(tps=100.0)
+        pool.add_entitlement(ent("p", ServiceClass.PREEMPTIBLE, 0.0))
+        pool.register_admit(InFlight("r1", "p", 0.1, 1024.0, 64, 0.0), 64.0)
+        assert pool.status["p"].in_flight == 1
+        pool.on_evict("r1", now=1.0)
+        assert pool.status["p"].in_flight == 0
+        assert pool.status["p"].kv_bytes_in_use == 0.0
+        assert "r1" not in pool.in_flight
+
+
+class TestExpiry:
+    def test_ttl_expiry(self):
+        pool = mkpool()
+        spec = ent("e", ServiceClass.ELASTIC, 10.0)
+        spec.ttl_s = 5.0
+        pool.add_entitlement(spec, now=0.0)
+        pool.tick(1.0)
+        assert pool.status["e"].state == EntitlementState.BOUND
+        pool.tick(6.0)
+        assert pool.status["e"].state == EntitlementState.EXPIRED

@@ -1,0 +1,165 @@
+"""Eq. (1)-(3) math, pinned to the paper's own §5.3 numbers."""
+import math
+
+import pytest
+
+from repro.core import (
+    PriorityCoefficients,
+    Resources,
+    ServiceClass,
+    burst_overconsumption,
+    burst_update,
+    debt_update,
+    pool_average_slo,
+    priority_breakdown,
+    priority_weight,
+    service_gap,
+)
+
+COEFF = PriorityCoefficients(alpha_slo=2.0, alpha_burst=1.0, alpha_debt=4.0,
+                             gamma_debt=0.7)
+
+
+class TestPaperNumbers:
+    """§5.3: with α_slo=2.0 and ℓ̄*=15250 ms, w_copilot≈93.8 and
+    w_synth≈20.3 (4.6× gap); reports enters at w≈60 for its 5 s target."""
+
+    AVG = 15250.0
+
+    def test_copilot_weight(self):
+        w = priority_weight(ServiceClass.ELASTIC, 500.0, self.AVG,
+                            burst=0.0, debt=0.0, coeff=COEFF)
+        assert w == pytest.approx(93.8, abs=0.1)
+
+    def test_synth_weight(self):
+        w = priority_weight(ServiceClass.ELASTIC, 30000.0, self.AVG,
+                            burst=0.0, debt=0.0, coeff=COEFF)
+        assert w == pytest.approx(20.3, abs=0.1)
+
+    def test_reports_weight(self):
+        w = priority_weight(ServiceClass.ELASTIC, 5000.0, self.AVG,
+                            burst=0.0, debt=0.0, coeff=COEFF)
+        assert w == pytest.approx(60.0, abs=0.5)
+
+    def test_pool_average_is_paper_value(self):
+        # (500 + 30000) / 2 = 15250 — paper's quoted ℓ̄*
+        assert pool_average_slo([500.0, 30000.0]) == 15250.0
+
+    def test_priority_gap_is_4_6x(self):
+        wc = priority_weight(ServiceClass.ELASTIC, 500.0, self.AVG, 0, 0, COEFF)
+        ws = priority_weight(ServiceClass.ELASTIC, 30000.0, self.AVG, 0, 0, COEFF)
+        assert wc / ws == pytest.approx(4.6, abs=0.05)
+
+    def test_peak_debt_amplification(self):
+        """Paper: at peak debt 0.775, synth's priority rises
+        20.3 × (1 + 4.0·0.775) = 83.2, narrowing the gap to 3.9×."""
+        ws = priority_weight(ServiceClass.ELASTIC, 30000.0, self.AVG,
+                             burst=0.0, debt=0.775, coeff=COEFF)
+        assert ws == pytest.approx(83.2, abs=0.5)
+        wc = priority_weight(ServiceClass.ELASTIC, 500.0, self.AVG,
+                             burst=0.0, debt=0.607, coeff=COEFF)
+        assert wc / ws == pytest.approx(3.9, abs=0.2)
+
+
+class TestEq1Properties:
+    def test_class_dominates(self):
+        """Multi-order-of-magnitude class gaps dominate other factors
+        under normal conditions (paper §3.3): a spot entitlement at its
+        best realistic priority (no debt — spot accrues none) never
+        outranks a guaranteed one at its worst realistic priority
+        (loose SLO 4× pool average, sustained burst b=1)."""
+        w_spot_best = priority_weight(ServiceClass.SPOT, 1.0, 1000.0,
+                                      0.0, 0.0, COEFF)
+        w_guar_worst = priority_weight(ServiceClass.GUARANTEED, 4000.0,
+                                       1000.0, 1.0, 0.0, COEFF)
+        assert w_guar_worst > w_spot_best
+
+    def test_tighter_slo_higher_priority(self):
+        w_tight = priority_weight(ServiceClass.ELASTIC, 100.0, 1000.0, 0, 0, COEFF)
+        w_loose = priority_weight(ServiceClass.ELASTIC, 10000.0, 1000.0, 0, 0, COEFF)
+        assert w_tight > w_loose
+
+    def test_burst_lowers_priority(self):
+        w0 = priority_weight(ServiceClass.SPOT, 1000.0, 1000.0, 0.0, 0, COEFF)
+        w1 = priority_weight(ServiceClass.SPOT, 1000.0, 1000.0, 2.0, 0, COEFF)
+        assert w1 < w0
+        assert w1 == pytest.approx(w0 / 3.0)
+
+    def test_debt_raises_credit_lowers(self):
+        w0 = priority_weight(ServiceClass.ELASTIC, 1000.0, 1000.0, 0, 0.0, COEFF)
+        w_debt = priority_weight(ServiceClass.ELASTIC, 1000.0, 1000.0, 0, 0.5, COEFF)
+        w_cred = priority_weight(ServiceClass.ELASTIC, 1000.0, 1000.0, 0, -0.1, COEFF)
+        assert w_debt > w0 > w_cred
+
+    def test_priority_stays_positive(self):
+        w = priority_weight(ServiceClass.ELASTIC, 1000.0, 1000.0, 0.0,
+                            -10.0, COEFF)
+        assert w > 0.0
+
+    def test_breakdown_product(self):
+        b = priority_breakdown(ServiceClass.ELASTIC, 500.0, 15250.0,
+                               0.3, 0.2, COEFF)
+        assert b.weight == pytest.approx(
+            b.w_class * b.slo_factor * b.burst_factor * b.debt_factor)
+
+
+class TestDebtEq2:
+    def test_ewma_form(self):
+        assert debt_update(0.5, 1.0, 0.7) == pytest.approx(0.65)
+
+    def test_converges_to_constant_gap(self):
+        d = 0.0
+        for _ in range(60):
+            d = debt_update(d, 0.4, 0.7)
+        assert d == pytest.approx(0.4, abs=1e-6)
+
+    def test_decay_time_matches_paper(self):
+        """Paper: after recovery debt returns near zero 'within
+        approximately 50 seconds' with γ_d=0.7 — that's per-tick decay;
+        0.7^k < 2% needs k≈11 ticks; with the experiment's ~4–5 s
+        effective accounting cadence that's ~50 s.  We check the decay
+        constant itself."""
+        d = 0.775
+        ticks = 0
+        while d > 0.02 and ticks < 100:
+            d = debt_update(d, 0.0, 0.7)
+            ticks += 1
+        assert 8 <= ticks <= 14
+
+    def test_gap_sign_conventions(self):
+        assert service_gap(5.0, 3.0) > 0          # underserved
+        assert service_gap(5.0, 7.0) < 0          # overserved (burst)
+        assert service_gap(5.0, 5.0) == 0.0
+        assert service_gap(0.0, 3.0) == 0.0       # no baseline → no gap
+
+
+class TestBurstEq3:
+    def test_zero_when_within_baseline(self):
+        base = Resources(100.0, 1000.0, 4.0)
+        used = Resources(80.0, 900.0, 4.0)
+        assert burst_overconsumption(used, base) == 0.0
+
+    def test_additive_across_dimensions(self):
+        base = Resources(100.0, 1000.0, 4.0)
+        used = Resources(150.0, 2000.0, 6.0)
+        # 0.5 + 1.0 + 0.5
+        assert burst_overconsumption(used, base) == pytest.approx(2.0)
+
+    def test_zero_baseline_dimension(self):
+        base = Resources(0.0, 0.0, 0.0)    # spot
+        assert burst_overconsumption(Resources(10.0, 0.0, 0.0), base) == 1.0
+        assert burst_overconsumption(Resources.zero(), base) == 0.0
+
+    def test_brief_burst_small_penalty(self):
+        b = 0.0
+        b = burst_update(b, 3.0, 0.7)      # one bursty tick
+        assert b == pytest.approx(0.9)
+        for _ in range(10):                # then idle
+            b = burst_update(b, 0.0, 0.7)
+        assert b < 0.03
+
+    def test_sustained_burst_accumulates(self):
+        b = 0.0
+        for _ in range(50):
+            b = burst_update(b, 1.5, 0.7)
+        assert b == pytest.approx(1.5, abs=1e-4)

@@ -1,0 +1,233 @@
+"""Training substrate: optimizer math, loss, grad compression (error
+feedback), checkpoint save/restore (+elastic reshard), fault-tolerant
+train loop with injected crash + bit-exact resume."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing import AsyncCheckpointer, latest_step, restore, save
+from repro.configs import get_config
+from repro.data import DataConfig, SyntheticLMData
+from repro.models import build_model
+from repro.training import (
+    OptimizerConfig,
+    adamw_init,
+    adamw_update,
+    clip_by_global_norm,
+    lm_loss,
+    lr_schedule,
+)
+from repro.training.grad_compress import (
+    CompressorConfig,
+    compress_grads,
+    compressed_bytes,
+    init_error_state,
+)
+from repro.training.train_loop import TrainConfig, TrainLoop
+
+
+class TestOptimizer:
+    def test_schedule_warmup_and_decay(self):
+        cfg = OptimizerConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                              min_lr_ratio=0.1)
+        assert float(lr_schedule(jnp.asarray(0), cfg)) == pytest.approx(0.1)
+        assert float(lr_schedule(jnp.asarray(9), cfg)) == pytest.approx(1.0)
+        end = float(lr_schedule(jnp.asarray(99), cfg))
+        assert end == pytest.approx(0.1, abs=0.02)
+
+    def test_clip(self):
+        g = {"a": jnp.full((4,), 3.0)}
+        clipped, norm = clip_by_global_norm(g, 1.0)
+        assert float(norm) == pytest.approx(6.0)
+        assert float(jnp.linalg.norm(clipped["a"])) == pytest.approx(1.0)
+
+    def test_adamw_descends_quadratic(self):
+        params = {"w": jnp.asarray([5.0, -3.0])}
+        cfg = OptimizerConfig(lr=0.1, warmup_steps=0, total_steps=1000,
+                              weight_decay=0.0, grad_clip=100.0)
+        st = adamw_init(params)
+        for _ in range(200):
+            grads = {"w": 2 * params["w"]}
+            params, st, _ = adamw_update(params, grads, st, cfg)
+        assert float(jnp.abs(params["w"]).max()) < 0.05
+
+    def test_no_decay_on_norm_scales(self):
+        params = {"layers": {"scale": jnp.ones((4,)),
+                             "w_up": jnp.ones((4, 4))}}
+        cfg = OptimizerConfig(lr=0.0, weight_decay=1.0, warmup_steps=0)
+        st = adamw_init(params)
+        zero_g = jax.tree.map(jnp.zeros_like, params)
+        new, _, _ = adamw_update(params, zero_g, st, cfg)
+        # lr=0 → nothing changes regardless; use lr>0 to see decay applied
+        cfg2 = OptimizerConfig(lr=0.1, weight_decay=1.0, warmup_steps=0)
+        new2, _, _ = adamw_update(params, zero_g, adamw_init(params), cfg2)
+        assert float(new2["layers"]["scale"][0]) == pytest.approx(1.0)
+        assert float(new2["layers"]["w_up"][0, 0]) < 1.0
+
+
+class TestLoss:
+    def test_perfect_prediction_low_loss(self):
+        V = 16
+        targets = jnp.asarray([[1, 2, 3]])
+        logits = jax.nn.one_hot(targets, V) * 100.0
+        loss, m = lm_loss(logits, targets)
+        assert float(loss) < 1e-3
+        assert float(m["accuracy"]) == 1.0
+
+    def test_mask_excludes_positions(self):
+        V = 16
+        targets = jnp.asarray([[1, 2]])
+        logits = jnp.zeros((1, 2, V))
+        logits = logits.at[0, 0, 1].set(100.0)   # right at pos 0
+        logits = logits.at[0, 1, 0].set(100.0)   # wrong at pos 1
+        loss_full, _ = lm_loss(logits, targets)
+        loss_masked, _ = lm_loss(logits, targets,
+                                 mask=jnp.asarray([[1.0, 0.0]]))
+        assert float(loss_masked) < float(loss_full)
+
+
+class TestGradCompression:
+    def test_int8_roundtrip_close(self):
+        g = {"w": jnp.asarray(np.random.RandomState(0)
+                              .randn(256).astype(np.float32))}
+        e = init_error_state(g)
+        out, e2 = compress_grads(g, e, CompressorConfig(kind="int8"))
+        np.testing.assert_allclose(np.asarray(out["w"]),
+                                   np.asarray(g["w"]), atol=0.05)
+
+    def test_topk_keeps_largest(self):
+        g = {"w": jnp.asarray([0.1, -5.0, 0.2, 4.0])}
+        e = init_error_state(g)
+        out, _ = compress_grads(g, e, CompressorConfig(kind="topk",
+                                                       topk_ratio=0.5))
+        w = np.asarray(out["w"])
+        assert w[1] == pytest.approx(-5.0) and w[3] == pytest.approx(4.0)
+        assert w[0] == 0.0 and w[2] == 0.0
+
+    def test_error_feedback_conservation(self):
+        """Error feedback conserves signal: over many steps the
+        transmitted total tracks the injected total for EVERY entry
+        (including the small one that loses top-k most steps), and the
+        residual error stays bounded by the competing magnitude."""
+        g = {"w": jnp.asarray([0.1, 1.0])}
+        cfg = CompressorConfig(kind="topk", topk_ratio=0.5)   # k=1
+        e = init_error_state(g)
+        sent = np.zeros(2)
+        steps = 200
+        for _ in range(steps):
+            out, e = compress_grads(g, e, cfg)
+            sent += np.asarray(out["w"])
+        assert sent[0] == pytest.approx(steps * 0.1, rel=0.25)
+        assert sent[1] == pytest.approx(steps * 1.0, rel=0.25)
+        assert float(jnp.abs(e["w"]).max()) < 3.0   # bounded residual
+
+    def test_wire_bytes_accounting(self):
+        params = {"w": jnp.zeros((1000,))}
+        dense = compressed_bytes(params, CompressorConfig("none"))
+        topk = compressed_bytes(params, CompressorConfig("topk", 0.01))
+        int8 = compressed_bytes(params, CompressorConfig("int8"))
+        assert dense == 4000.0
+        assert topk == pytest.approx(80.0)
+        assert int8 == pytest.approx(1004.0)
+
+
+class TestCheckpoint:
+    def test_save_restore_roundtrip(self, tmp_path):
+        tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+                "b": {"c": jnp.asarray([1, 2], jnp.int32)}}
+        save(str(tmp_path), 7, tree)
+        assert latest_step(str(tmp_path)) == 7
+        out = restore(str(tmp_path), 7, jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree))
+        np.testing.assert_array_equal(np.asarray(out["a"]),
+                                      np.asarray(tree["a"]))
+        np.testing.assert_array_equal(np.asarray(out["b"]["c"]),
+                                      np.asarray(tree["b"]["c"]))
+
+    def test_torn_save_invisible(self, tmp_path):
+        tree = {"a": jnp.ones((2,))}
+        save(str(tmp_path), 1, tree)
+        # simulate a torn save at step 2: directory without COMMIT
+        os.makedirs(tmp_path / "step_00000002")
+        assert latest_step(str(tmp_path)) == 1
+
+    def test_async_checkpointer(self, tmp_path):
+        ck = AsyncCheckpointer(str(tmp_path), keep=2)
+        for s in [1, 2, 3]:
+            ck.save(s, {"x": jnp.full((4,), float(s))})
+        ck.wait()
+        assert latest_step(str(tmp_path)) == 3
+        # gc keeps only 2
+        kept = [d for d in os.listdir(tmp_path) if d.startswith("step_")]
+        assert len(kept) == 2
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        save(str(tmp_path), 1, {"a": jnp.ones((2,))})
+        with pytest.raises(ValueError):
+            restore(str(tmp_path), 1,
+                    {"a": jax.ShapeDtypeStruct((3,), jnp.float32)})
+
+
+class TestTrainLoop:
+    def _setup(self, tmp_path=None, compressor="none"):
+        cfg = get_config("tinyllama-1.1b").reduced(num_layers=2,
+                                                   vocab_size=256)
+        model = build_model(cfg)
+        data = SyntheticLMData(DataConfig(
+            vocab_size=cfg.vocab_size, seq_len=32, global_batch=4))
+        tcfg = TrainConfig(
+            steps=8, checkpoint_every=4,
+            checkpoint_dir=str(tmp_path) if tmp_path else None,
+            optimizer=OptimizerConfig(lr=1e-2, warmup_steps=2,
+                                      total_steps=8),
+            compressor=CompressorConfig(kind=compressor, topk_ratio=0.1),
+            log_every=1)
+        return model, data, tcfg
+
+    def test_loss_decreases(self, tmp_path):
+        model, data, tcfg = self._setup()
+        loop = TrainLoop(model, data, tcfg)
+        logs = loop.run(steps=8)
+        assert logs[-1]["loss"] < logs[0]["loss"]
+        assert all(l["skipped"] == 0.0 for l in logs)
+
+    def test_crash_and_bitexact_resume(self, tmp_path):
+        model, data, tcfg = self._setup(tmp_path)
+        # uninterrupted reference run
+        ref = TrainLoop(model, data, TrainConfig(
+            steps=8, checkpoint_every=100, checkpoint_dir=None,
+            optimizer=tcfg.optimizer, log_every=1))
+        ref_logs = ref.run(steps=8)
+
+        loop = TrainLoop(model, data, tcfg)
+        with pytest.raises(RuntimeError, match="injected crash"):
+            loop.run(steps=8, crash_after_step=4)
+        assert latest_step(str(tmp_path)) == 4
+
+        # a NEW loop (fresh process semantics) resumes from step 4
+        loop2 = TrainLoop(model, data, tcfg)
+        assert loop2.start_step == 4
+        logs2 = loop2.run(steps=8)
+        assert logs2[-1]["step"] == 7
+        assert logs2[-1]["loss"] == pytest.approx(
+            ref_logs[-1]["loss"], rel=1e-5)
+
+    def test_compressed_training_still_learns(self):
+        model, data, tcfg = self._setup(compressor="int8")
+        tcfg.steps = 24
+        tcfg.optimizer = OptimizerConfig(lr=2e-2, warmup_steps=2,
+                                         total_steps=24)
+        loop = TrainLoop(model, data, tcfg)
+        logs = loop.run(steps=24)
+        assert logs[-1]["loss"] < logs[0]["loss"]
+
+    def test_data_shards_partition_global_batch(self):
+        data = SyntheticLMData(DataConfig(vocab_size=64, seq_len=8,
+                                          global_batch=8))
+        full = data.global_batch_at(3)
+        parts = [data.shard_at(3, i, 4) for i in range(4)]
+        stacked = np.concatenate([p["tokens"] for p in parts])
+        np.testing.assert_array_equal(stacked, full["tokens"])

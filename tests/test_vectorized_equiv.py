@@ -1,0 +1,286 @@
+"""Property tests: the jit-compiled vectorized control plane must agree
+with the scalar reference implementation (hypothesis-driven)."""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    PriorityCoefficients,
+    Resources,
+    ServiceClass,
+    priority_weight,
+    burst_overconsumption,
+    waterfill,
+)
+from repro.core.vectorized import (
+    CLASS_CODES,
+    PoolArrays,
+    burst_delta_batch,
+    priority_batch,
+    tick_batch,
+    waterfill_batch,
+)
+
+COEFF = PriorityCoefficients()
+CLASSES = list(ServiceClass)
+
+# zero or a meaningfully-sized value: denormal baselines (1e-38) are
+# degenerate configs the scalar/vector paths may legitimately clamp
+# differently, and no real entitlement is entitled to 1e-38 tok/s.
+finite = st.one_of(st.just(0.0),
+                   st.floats(min_value=0.0009765625, max_value=1e6,
+                             allow_nan=False, allow_infinity=False,
+                             width=32))
+pos = st.floats(min_value=1.0, max_value=1e5, allow_nan=False,
+                allow_infinity=False, width=32)
+small = st.floats(min_value=-0.875, max_value=5.0, allow_nan=False,
+                  allow_infinity=False, width=32)
+
+
+def mkarrays(classes, baselines, slos, bursts, debts, bound=None):
+    n = len(classes)
+    return PoolArrays(
+        class_code=jnp.array([CLASS_CODES[c] for c in classes], jnp.int32),
+        bound=jnp.array(bound if bound is not None else [True] * n),
+        baseline_tps=jnp.array(baselines, jnp.float32),
+        baseline_kv=jnp.zeros(n, jnp.float32),
+        baseline_conc=jnp.zeros(n, jnp.float32),
+        slo_ms=jnp.array(slos, jnp.float32),
+        burst=jnp.array(bursts, jnp.float32),
+        debt=jnp.array(debts, jnp.float32),
+    )
+
+
+class TestPriorityEquivalence:
+    @given(
+        klass=st.sampled_from(CLASSES),
+        slo=pos, avg=pos,
+        burst=st.floats(0.0, 10.0, width=32),
+        debt=small,
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_matches_scalar(self, klass, slo, avg, burst, debt):
+        arr = mkarrays([klass], [1.0], [slo], [burst], [debt])
+        w_vec = float(priority_batch(arr, jnp.float32(avg), COEFF)[0])
+        w_ref = priority_weight(klass, float(np.float32(slo)),
+                                float(np.float32(avg)),
+                                float(np.float32(burst)),
+                                float(np.float32(debt)), COEFF)
+        assert w_vec == pytest.approx(w_ref, rel=1e-4)
+
+
+class TestBurstEquivalence:
+    @given(
+        used=st.tuples(finite, finite, finite),
+        base=st.tuples(finite, finite, finite),
+    )
+    @settings(max_examples=200, deadline=None)
+    def test_matches_scalar(self, used, base):
+        arr = mkarrays([ServiceClass.ELASTIC], [base[0]], [1000.0],
+                       [0.0], [0.0])
+        arr = dataclasses.replace(
+            arr,
+            baseline_tps=jnp.array([base[0]], jnp.float32),
+            baseline_kv=jnp.array([base[1]], jnp.float32),
+            baseline_conc=jnp.array([base[2]], jnp.float32))
+        d_vec = float(burst_delta_batch(
+            jnp.array([used[0]], jnp.float32),
+            jnp.array([used[1]], jnp.float32),
+            jnp.array([used[2]], jnp.float32), arr)[0])
+        d_ref = burst_overconsumption(
+            Resources(*[float(np.float32(u)) for u in used]),
+            Resources(*[float(np.float32(b)) for b in base]))
+        assert d_vec == pytest.approx(d_ref, rel=1e-4, abs=1e-5)
+
+
+class TestWaterfillEquivalence:
+    @given(
+        capacity=st.floats(0.0, 1000.0, width=32),
+        wants=st.lists(st.floats(0.0, 200.0, width=32),
+                       min_size=1, max_size=12),
+        data=st.data(),
+    )
+    @settings(max_examples=150, deadline=None)
+    def test_matches_scalar(self, capacity, wants, data):
+        # realistic weights: exactly zero, or within the range Eq. 1 can
+        # produce (class 0.1 × factors ≳ 1e-3 … class 1000 × debt ≲ 5)
+        weights = data.draw(st.lists(
+            st.one_of(st.just(0.0),
+                      st.floats(0.0078125, 5000.0, width=32)),
+            min_size=len(wants), max_size=len(wants)))
+        keys = [f"k{i}" for i in range(len(wants))]
+        ref = waterfill(float(np.float32(capacity)),
+                        dict(zip(keys, [float(np.float32(w)) for w in wants])),
+                        dict(zip(keys, [float(np.float32(w)) for w in weights])))
+        vec = waterfill_batch(jnp.float32(capacity),
+                              jnp.array(wants, jnp.float32),
+                              jnp.array(weights, jnp.float32))
+        vec = np.asarray(vec)
+        for i, k in enumerate(keys):
+            assert vec[i] == pytest.approx(ref[k], rel=2e-3, abs=1e-2)
+
+    @given(
+        capacity=st.floats(0.0, 1000.0, width=32),
+        wants=st.lists(st.floats(0.0, 200.0, width=32),
+                       min_size=1, max_size=12),
+    )
+    @settings(max_examples=100, deadline=None)
+    def test_invariants(self, capacity, wants):
+        """Work conservation + cap respect, regardless of weights."""
+        alloc = np.asarray(waterfill_batch(
+            jnp.float32(capacity), jnp.array(wants, jnp.float32),
+            jnp.ones(len(wants), jnp.float32)))
+        wants_arr = np.asarray(wants, np.float32)
+        assert (alloc <= wants_arr + 1e-3).all()
+        assert alloc.sum() <= capacity + 1e-2
+        # work conserving: all wants met or all capacity used
+        assert (np.isclose(alloc, wants_arr, atol=1e-2).all()
+                or alloc.sum() >= capacity - max(1e-2, 1e-4 * capacity))
+
+
+class TestTickBatch:
+    def test_full_tick_against_scalar_pool(self):
+        """End-to-end tick on a mixed-class pool must reproduce the
+        scalar TokenPool allocation + debt update."""
+        from repro.core import (EntitlementSpec, PoolSpec, QoS,
+                                ScalingBounds, TokenPool)
+
+        spec = PoolSpec(name="p", model="m",
+                        scaling=ScalingBounds(1, 2),
+                        per_replica=Resources(100.0, 1 << 30, 16.0))
+        pool = TokenPool(spec)
+
+        def ent(name, klass, tps, slo):
+            return EntitlementSpec(
+                name=name, tenant_id=name, pool="p",
+                qos=QoS(service_class=klass, slo_target_ms=slo),
+                baseline=Resources(tps, 0.0, 4.0))
+
+        pool.add_entitlement(ent("a_guar", ServiceClass.GUARANTEED, 40.0, 200.0))
+        pool.add_entitlement(ent("b_el", ServiceClass.ELASTIC, 50.0, 500.0))
+        pool.add_entitlement(ent("c_el", ServiceClass.ELASTIC, 50.0, 30000.0))
+        pool.add_entitlement(ent("d_spot", ServiceClass.SPOT, 0.0, 30000.0))
+        for n in ["a_guar", "b_el", "c_el", "d_spot"]:
+            pool.register_deny(n, 80.0, low_priority=False)
+        rec = pool.tick(1.0)
+
+        names = sorted(pool.entitlements)      # matches arrays_from_pool
+        arr = mkarrays(
+            [pool.entitlements[n].qos.service_class for n in names],
+            [pool.entitlements[n].baseline.tokens_per_second for n in names],
+            [pool.entitlements[n].qos.slo_target_ms for n in names],
+            [0.0] * 4, [0.0] * 4)
+        demand = jnp.array([pool._demand_tps[n] for n in names], jnp.float32)
+        arr2, alloc, weights = tick_batch(
+            arr, jnp.float32(100.0),
+            measured_tps=jnp.zeros(4), used_kv=jnp.zeros(4),
+            used_conc=jnp.zeros(4), demand_tps=demand,
+            coeff=pool.spec.coefficients)
+        alloc = np.asarray(alloc)
+        debts = np.asarray(arr2.debt)
+        for i, n in enumerate(names):
+            assert alloc[i] == pytest.approx(rec.allocations[n], rel=1e-4,
+                                             abs=1e-3), n
+            assert debts[i] == pytest.approx(pool.status[n].debt,
+                                             rel=1e-4, abs=1e-5), n
+            assert float(weights[i]) == pytest.approx(
+                rec.priorities[n], rel=1e-4), n
+
+    def test_scales_to_many_entitlements(self):
+        """100k entitlements tick in one fused call (beyond-paper)."""
+        n = 100_000
+        rng = np.random.RandomState(0)
+        arr = PoolArrays(
+            class_code=jnp.array(rng.randint(0, 5, n), jnp.int32),
+            bound=jnp.ones(n, bool),
+            baseline_tps=jnp.array(rng.uniform(0, 100, n), jnp.float32),
+            baseline_kv=jnp.zeros(n, jnp.float32),
+            baseline_conc=jnp.array(rng.uniform(1, 8, n), jnp.float32),
+            slo_ms=jnp.array(rng.uniform(100, 30000, n), jnp.float32),
+            burst=jnp.zeros(n, jnp.float32),
+            debt=jnp.zeros(n, jnp.float32),
+        )
+        demand = jnp.array(rng.uniform(0, 200, n), jnp.float32)
+        protected = np.isin(np.asarray(arr.class_code), [0, 1])
+        active_p = np.minimum(np.asarray(arr.baseline_tps),
+                              np.asarray(demand))[protected].sum()
+
+        # (a) scarcity regime: protected active use alone exceeds this
+        # capacity → emergency scaling, nothing for other classes
+        _, alloc_s, _ = tick_batch(
+            arr, jnp.float32(1e6),
+            measured_tps=jnp.zeros(n), used_kv=jnp.zeros(n),
+            used_conc=jnp.zeros(n), demand_tps=demand)
+        alloc_s = np.asarray(alloc_s)
+        assert np.isfinite(alloc_s).all() and (alloc_s >= -1e-3).all()
+        assert active_p > 1e6                    # premise
+        assert alloc_s[~protected].sum() == pytest.approx(0.0, abs=1.0)
+
+        # (b) normal regime: protected funding may overcommit (idle
+        # reservations are borrowed) but active protected use + all
+        # other allocations fit capacity
+        cap = np.float32(active_p * 3.0)
+        _, alloc_n, _ = tick_batch(
+            arr, jnp.asarray(cap),
+            measured_tps=jnp.zeros(n), used_kv=jnp.zeros(n),
+            used_conc=jnp.zeros(n), demand_tps=demand)
+        alloc_n = np.asarray(alloc_n)
+        assert np.isfinite(alloc_n).all() and (alloc_n >= -1e-3).all()
+        assert (active_p + alloc_n[~protected].sum()
+                <= float(cap) * 1.01)
+
+
+class TestAdmitQuantum:
+    def test_matches_scalar_controller(self):
+        """Sequential fori_loop replay == scalar controller decisions on
+        a frozen pool snapshot."""
+        from repro.core import (AdmissionController, AdmissionRequest,
+                                EntitlementSpec, PoolSpec, QoS,
+                                ScalingBounds, TokenPool)
+        from repro.core.vectorized import admit_quantum, arrays_from_pool
+
+        spec = PoolSpec(name="p", model="m", scaling=ScalingBounds(1, 1),
+                        per_replica=Resources(1000.0, 1 << 30, 3.0),
+                        default_max_tokens=64)
+        pool = TokenPool(spec)
+
+        def ent(name, klass, tps, conc, slo):
+            return EntitlementSpec(
+                name=name, tenant_id=name, pool="p",
+                qos=QoS(service_class=klass, slo_target_ms=slo),
+                baseline=Resources(tps, 0.0, conc))
+
+        pool.add_entitlement(ent("a", ServiceClass.GUARANTEED, 500.0, 2, 200.0))
+        pool.add_entitlement(ent("b", ServiceClass.ELASTIC, 300.0, 2, 1000.0))
+        pool.add_entitlement(ent("c", ServiceClass.SPOT, 0.0, 2, 30000.0))
+        pool.ledger.set_rate("c", 100.0, 0.0)
+        pool.ledger.bucket("c").level = 400.0
+
+        names = sorted(pool.entitlements)
+        arr, levels, infl, kvu = arrays_from_pool(pool)
+        # a quantum of 8 requests round-robining the entitlements
+        reqs = [(names[i % 3], 64, 64) for i in range(8)]
+        req_ent = jnp.array([names.index(e) for e, _, _ in reqs], jnp.int32)
+        req_tokens = jnp.array([float(i + o) for _, i, o in reqs], jnp.float32)
+        req_kv = jnp.zeros(len(reqs), jnp.float32)
+
+        admitted_vec, reasons_vec = admit_quantum(
+            arr, levels, infl, kvu,
+            pool_in_flight=jnp.int32(0),
+            pool_conc_cap=jnp.float32(3.0),
+            running_min_priority=jnp.float32(np.inf),
+            pool_avg_slo=jnp.float32(pool.pool_avg_slo()),
+            req_ent=req_ent, req_tokens=req_tokens, req_kv=req_kv,
+            coeff=spec.coefficients)
+
+        ac = AdmissionController(pool)
+        scalar = []
+        for i, (e, n_in, n_out) in enumerate(reqs):
+            d = ac.decide(AdmissionRequest(
+                entitlement=e, input_tokens=n_in, max_tokens=n_out,
+                arrival_s=0.0, request_id=f"r{i}"))
+            scalar.append(d.admitted)
+        assert list(np.asarray(admitted_vec)) == scalar

@@ -1,0 +1,110 @@
+"""Virtual-node scheduler semantics (paper §4.1): transactional binds,
+pending→Degraded, FIFO reschedule, preemption on capacity shrink."""
+import pytest
+
+from repro.core import LeasePod, Resources, VirtualNodeProvider
+
+
+def lease(name, tps, conc=0.0, kv=0.0, weight=100.0):
+    return LeasePod(name=name, entitlement=name,
+                    request=Resources(tps, kv, conc),
+                    protection_weight=weight)
+
+
+class TestBinding:
+    def test_bind_within_capacity(self):
+        p = VirtualNodeProvider()
+        p.create_node("pool", Resources(100.0, 0.0, 16.0))
+        assert p.submit("pool", lease("a", 60.0))
+        assert p.node("pool").allocatable().tokens_per_second == pytest.approx(40.0)
+
+    def test_bind_is_all_or_nothing(self):
+        p = VirtualNodeProvider()
+        p.create_node("pool", Resources(100.0, 0.0, 4.0))
+        # tps fits but concurrency doesn't → nothing committed
+        assert not p.submit("pool", lease("a", 50.0, conc=8.0))
+        assert p.node("pool").allocated.tokens_per_second == 0.0
+
+    def test_insufficient_capacity_pending(self):
+        p = VirtualNodeProvider()
+        p.create_node("pool", Resources(100.0, 0.0, 16.0))
+        assert p.submit("pool", lease("a", 80.0))
+        assert not p.submit("pool", lease("b", 40.0))
+        assert p.pending() == ["b"]
+
+    def test_no_oversubscription_ever(self):
+        p = VirtualNodeProvider()
+        p.create_node("pool", Resources(100.0, 0.0, 16.0))
+        for i in range(10):
+            p.submit("pool", lease(f"l{i}", 30.0))
+        node = p.node("pool")
+        assert node.allocated.fits_within(node.capacity)
+
+    def test_zero_request_always_binds(self):
+        p = VirtualNodeProvider()
+        p.create_node("pool", Resources(0.0, 0.0, 0.0))
+        assert p.submit("pool", lease("spot", 0.0))
+
+
+class TestRescheduling:
+    def test_delete_unblocks_pending_fifo(self):
+        p = VirtualNodeProvider()
+        p.create_node("pool", Resources(100.0, 0.0, 16.0))
+        p.submit("pool", lease("a", 80.0))
+        p.submit("pool", lease("b", 60.0))   # pending
+        p.submit("pool", lease("c", 30.0))   # pending
+        p.delete("a")
+        assert p.is_bound("b")
+        assert p.is_bound("c")    # 60 + 30 ≤ 100
+
+    def test_fifo_order_respected(self):
+        p = VirtualNodeProvider()
+        p.create_node("pool", Resources(100.0, 0.0, 16.0))
+        p.submit("pool", lease("a", 100.0))
+        p.submit("pool", lease("b", 90.0))   # pending first
+        p.submit("pool", lease("c", 20.0))   # pending second
+        p.delete("a")
+        assert p.is_bound("b")
+        assert not p.is_bound("c")           # b consumed the capacity first
+        assert p.pending() == ["c"]
+
+    def test_capacity_grow_reschedules(self):
+        p = VirtualNodeProvider()
+        p.create_node("pool", Resources(50.0, 0.0, 16.0))
+        p.submit("pool", lease("a", 40.0))
+        p.submit("pool", lease("b", 40.0))   # pending
+        p.set_capacity("pool", Resources(100.0, 0.0, 16.0))
+        assert p.is_bound("b")
+
+
+class TestPreemption:
+    def test_capacity_shrink_evicts_least_protected(self):
+        p = VirtualNodeProvider()
+        p.create_node("pool", Resources(100.0, 0.0, 16.0))
+        p.submit("pool", lease("guar", 60.0, weight=1000.0))
+        p.submit("pool", lease("elastic", 40.0, weight=100.0))
+        preempted = p.set_capacity("pool", Resources(70.0, 0.0, 16.0))
+        assert preempted == ["elastic"]
+        assert p.is_bound("guar")
+        assert not p.is_bound("elastic")
+        # elastic waits in pending; capacity restore re-binds it
+        p.set_capacity("pool", Resources(100.0, 0.0, 16.0))
+        assert p.is_bound("elastic")
+
+
+class TestResize:
+    def test_grow_within_capacity(self):
+        p = VirtualNodeProvider()
+        p.create_node("pool", Resources(100.0, 0.0, 16.0))
+        p.submit("pool", lease("a", 40.0))
+        assert p.resize("a", Resources(70.0, 0.0, 0.0))
+        assert p.node("pool").allocated.tokens_per_second == pytest.approx(70.0)
+
+    def test_failed_grow_keeps_old_reservation(self):
+        p = VirtualNodeProvider()
+        p.create_node("pool", Resources(100.0, 0.0, 16.0))
+        p.submit("pool", lease("a", 40.0))
+        p.submit("pool", lease("b", 50.0))
+        assert not p.resize("a", Resources(80.0, 0.0, 0.0))
+        # a's original 40 still bound — no lost reservation
+        assert p.node("pool").allocated.tokens_per_second == pytest.approx(90.0)
