@@ -1,6 +1,10 @@
-"""Control-plane throughput: scalar (paper-style per-request Python)
-vs the vectorized jit path (beyond-paper) — decisions/second and
-tick latency at growing entitlement counts."""
+"""Control-plane throughput: the retained scalar ORACLE (paper-style
+per-entitlement Python loop) vs the unified vectorized tick that now
+drives ``TokenPool.tick`` — plus admission decisions/second and the
+multi-pool batched tick.
+
+The headline row is ``tick_speedup_100k``: the unified tick must be
+≥10× the scalar oracle at 10^5 entitlements (it is usually 100×+)."""
 from __future__ import annotations
 
 import time
@@ -13,13 +17,18 @@ from repro.core import (
     AdmissionController,
     AdmissionRequest,
     EntitlementSpec,
+    OracleRow,
     PoolSpec,
     QoS,
     Resources,
     ScalingBounds,
     ServiceClass,
     TokenPool,
+    control_tick,
+    control_tick_pools,
+    reference_tick,
 )
+from repro.core.control_plane import state_from_rows
 from repro.core.vectorized import (
     PoolArrays,
     admit_quantum,
@@ -81,40 +90,99 @@ def vectorized_admission_rate(n_requests: int = 65536,
     return n_requests / (time.perf_counter() - t0)
 
 
-def vectorized_tick_us(n_entitlements: int = 100_000) -> float:
-    rng = np.random.RandomState(0)
-    arr = PoolArrays(
-        class_code=jnp.asarray(rng.randint(0, 5, n_entitlements),
-                               jnp.int32),
-        bound=jnp.ones(n_entitlements, bool),
-        baseline_tps=jnp.asarray(rng.uniform(10, 100, n_entitlements),
-                                 jnp.float32),
-        baseline_kv=jnp.zeros(n_entitlements, jnp.float32),
-        baseline_conc=jnp.full(n_entitlements, 8.0, jnp.float32),
-        slo_ms=jnp.asarray(rng.uniform(100, 30000, n_entitlements),
-                           jnp.float32),
-        burst=jnp.zeros(n_entitlements, jnp.float32),
-        debt=jnp.zeros(n_entitlements, jnp.float32))
+def _oracle_rows(n: int, seed: int = 0) -> list[OracleRow]:
+    """A mixed-class fleet with random baselines, SLOs and demand."""
+    rng = np.random.RandomState(seed)
+    classes = list(ServiceClass)
+    rows = []
+    for i in range(n):
+        klass = classes[rng.randint(0, 5)]
+        base = (0.0 if klass in (ServiceClass.SPOT,
+                                 ServiceClass.PREEMPTIBLE)
+                else float(rng.uniform(10, 100)))
+        rows.append(OracleRow(
+            service_class=klass, bound=True,
+            baseline_tps=base, baseline_kv=0.0, baseline_conc=8.0,
+            slo_ms=float(rng.uniform(100, 30000)),
+            burst=float(rng.uniform(0, 0.5)),
+            debt=float(rng.uniform(-0.1, 0.5)),
+            measured_tps=float(rng.uniform(0, 120)),
+            used_conc=float(rng.randint(0, 8)),
+            demand_tps=float(rng.uniform(0, 200))))
+    return rows
+
+
+def scalar_tick_us(n_entitlements: int, reps: int = 1) -> float:
+    """The retained paper-style per-entitlement Python tick (oracle)."""
+    rows = _oracle_rows(n_entitlements)
+    cap = 25.0 * n_entitlements
+    reference_tick(rows, cap, 10_000.0)          # warm caches
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        reference_tick(rows, cap, 10_000.0)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def unified_tick_us(n_entitlements: int, n_pools: int = 1,
+                    reps: int = 20) -> float:
+    """The unified control-plane tick (what TokenPool.tick executes),
+    optionally batched across ``n_pools`` pools via the vmapped kernel."""
+    rows = _oracle_rows(n_entitlements)
+    state = state_from_rows(rows)
+    rng = np.random.RandomState(1)
+    measured = jnp.asarray(rng.uniform(0, 120, n_entitlements), jnp.float32)
+    used_conc = jnp.asarray(rng.randint(0, 8, n_entitlements), jnp.float32)
     zero = jnp.zeros(n_entitlements, jnp.float32)
     demand = jnp.asarray(rng.uniform(0, 200, n_entitlements), jnp.float32)
-    tick_batch(arr, jnp.float32(1e7), zero, zero, zero,
-               demand)[1].block_until_ready()
+    cap = jnp.float32(25.0 * n_entitlements)
+    slo = jnp.float32(10_000.0)
+    if n_pools == 1:
+        fn = lambda: control_tick(state, cap, measured, zero,   # noqa: E731
+                                  used_conc, demand, slo)
+    else:
+        stack = lambda x: jnp.broadcast_to(x, (n_pools,) + x.shape)  # noqa: E731
+        states = jax.tree_util.tree_map(stack, state)
+        caps = jnp.full((n_pools,), cap)
+        slos = jnp.full((n_pools,), slo)
+        fn = lambda: control_tick_pools(                        # noqa: E731
+            states, caps, stack(measured), stack(zero),
+            stack(used_conc), stack(demand), slos)
+    fn()[1].block_until_ready()
     t0 = time.perf_counter()
-    reps = 20
     for _ in range(reps):
-        out = tick_batch(arr, jnp.float32(1e7), zero, zero, zero, demand)
+        out = fn()
     out[1].block_until_ready()
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def main() -> None:
-    s = scalar_admission_rate()
-    v = vectorized_admission_rate()
-    t = vectorized_tick_us()
+def main(quick: bool = False) -> None:
+    n = 2_000 if quick else 100_000
+    n_big = 10_000 if quick else 1_000_000
+    s = scalar_admission_rate(200 if quick else 2000)
+    if quick:
+        v = vectorized_admission_rate(4096, 256)
+    else:
+        v = vectorized_admission_rate(65536, 4096)
     print(f"admission_scalar,{1e6 / s:.1f},decisions/s={s:.0f}")
     print(f"admission_vectorized,{1e6 / v:.3f},decisions/s={v:.0f}")
-    print(f"tick_vectorized_100k_entitlements,{t:.0f},us_per_tick")
+
+    t_oracle = scalar_tick_us(n)
+    t_unified = unified_tick_us(n, reps=5 if quick else 20)
+    label = f"{n // 1000}k"
+    note = ("smoke at 2k rows; acceptance applies to the full run"
+            if quick else "acceptance: >=10x at 100k")
+    print(f"tick_scalar_oracle_{label},{t_oracle:.0f},us_per_tick")
+    print(f"tick_unified_{label},{t_unified:.0f},us_per_tick")
+    print(f"tick_speedup_{label},{t_oracle / t_unified:.1f},x ({note})")
+
+    t_1m = unified_tick_us(n_big, reps=3 if quick else 5)
+    print(f"tick_unified_{n_big // 1000}k,{t_1m:.0f},us_per_tick")
+    pools = 4 if quick else 8
+    t_mp = unified_tick_us(n, n_pools=pools, reps=3 if quick else 10)
+    print(f"tick_unified_{pools}pools_x_{label},{t_mp:.0f},"
+          f"us_per_batched_tick ({t_mp / pools:.0f} us/pool)")
 
 
 if __name__ == "__main__":
-    main()
+    import sys
+    main(quick="--quick" in sys.argv)

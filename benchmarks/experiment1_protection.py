@@ -91,8 +91,8 @@ def run(duration: float = 90.0) -> dict:
     return out
 
 
-def main() -> None:
-    res = run()
+def main(duration: float = 90.0) -> None:
+    res = run(duration)
     tp = res["token_pools"]["guaranteed_a_ttft_p99"]
     bl = res["baseline"]["guaranteed_a_ttft_p99"]
     print("experiment1,metric,token_pools,baseline,paper_claim")

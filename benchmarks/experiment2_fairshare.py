@@ -119,8 +119,8 @@ def run(duration: float = 300.0) -> dict:
     }
 
 
-def main() -> None:
-    r = run()
+def main(duration: float = 300.0) -> None:
+    r = run(duration)
     w = r["weights_no_debt"]
     print("experiment2,metric,value,paper_claim")
     print(f"experiment2,w_copilot,{w['elastic-copilot']:.1f},93.8")

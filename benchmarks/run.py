@@ -3,10 +3,15 @@ benches.  Prints ``name,value,details`` CSV rows.
 
   experiment1   paper §5.2 Figs 2–4 (cross-class protection)
   experiment2   paper §5.3 Fig 5/6 + Table 2 (SLO fair share, debt)
-  admission     control-plane throughput (scalar vs vectorized)
+  admission     control-plane throughput (scalar oracle vs unified tick)
   kernels       kernel/oracle micro-timings
   roofline      per-cell roofline table from dry-run artifacts (if
                 benchmarks/artifacts/dryrun is populated)
+
+``--quick`` runs a CI-sized smoke pass: tiny entitlement counts and
+short simulation windows, no wall-clock thresholds asserted — it only
+proves every benchmark path still executes (control-plane perf
+regressions then surface as timing rows in the PR log).
 """
 from __future__ import annotations
 
@@ -19,13 +24,13 @@ def _section(name):
     print(f"# --- {name} " + "-" * max(0, 60 - len(name)))
 
 
-def main() -> None:
+def main(quick: bool = False) -> None:
     failures = []
 
     _section("experiment1: cross-class protection (paper Figs 2-4)")
     try:
         from benchmarks.experiment1_protection import main as e1
-        e1()
+        e1(duration=30.0 if quick else 90.0)
     except Exception:                              # noqa: BLE001
         failures.append("experiment1")
         traceback.print_exc()
@@ -33,15 +38,15 @@ def main() -> None:
     _section("experiment2: SLO-aware fair share (paper Fig 5/6, Tab 2)")
     try:
         from benchmarks.experiment2_fairshare import main as e2
-        e2()
+        e2(duration=60.0 if quick else 300.0)
     except Exception:                              # noqa: BLE001
         failures.append("experiment2")
         traceback.print_exc()
 
-    _section("admission throughput (scalar vs vectorized control plane)")
+    _section("admission throughput (scalar oracle vs unified tick)")
     try:
         from benchmarks.admission_throughput import main as adm
-        adm()
+        adm(quick=quick)
     except Exception:                              # noqa: BLE001
         failures.append("admission")
         traceback.print_exc()
@@ -84,4 +89,4 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    main(quick="--quick" in sys.argv)

@@ -3,18 +3,35 @@
 Public API surface:
 
 - types: ServiceClass, Resources, QoS, EntitlementSpec, PoolSpec, ...
-- priority: Eq. (1)-(3) scalar math
-- pool: TokenPool controller (allocation, reclamation, debt tick)
+- control_plane: THE tick — jit-compiled array-of-rows state machine
+  (single pool and vmapped multi-pool), plus the scalar test oracle
+- priority: Eq. (1)-(3) scalar oracle math
+- pool: TokenPool controller (stateful shell over the control plane)
+- pool_manager: PoolManager (batched fleet tick + spill-over routing)
 - admission: AdmissionController (the §4.3 five-check pipeline)
 - virtual_node: VirtualNodeProvider (scheduler-as-admission, §4.1)
 - autoscaler: entitlement-driven capacity planning
-- vectorized: jit-compiled batch control plane (beyond-paper scale)
+- vectorized: batched admission replay + control-plane bridges
 - ledger / state: token buckets and the Redis-contract state store
 """
 from repro.core.admission import AdmissionController
 from repro.core.autoscaler import Autoscaler, AutoscalerConfig, ScaleDecision
+from repro.core.control_plane import (
+    ControlState,
+    OracleRow,
+    control_tick,
+    control_tick_pools,
+    reference_tick,
+)
 from repro.core.ledger import Charge, Ledger, TokenBucket
-from repro.core.pool import InFlight, TickRecord, TokenPool, waterfill
+from repro.core.pool import (
+    InFlight,
+    TickInputs,
+    TickRecord,
+    TokenPool,
+    waterfill,
+)
+from repro.core.pool_manager import PoolManager, RouteEntry, as_manager
 from repro.core.priority import (
     burst_overconsumption,
     burst_update,
@@ -45,13 +62,16 @@ from repro.core.virtual_node import LeasePod, VirtualNode, VirtualNodeProvider
 
 __all__ = [
     "AdmissionController", "AdmissionDecision", "AdmissionRequest",
-    "Autoscaler", "AutoscalerConfig", "CASConflict", "Charge", "DenyReason",
-    "EntitlementSpec", "EntitlementState", "EntitlementStatus", "InFlight",
-    "LeasePod", "Ledger", "PoolSpec", "PriorityCoefficients", "QoS",
-    "Resources", "ScaleDecision", "ScalingBounds", "ServiceClass",
-    "StateStore", "TickRecord", "TokenBucket", "TokenPool", "VirtualNode",
-    "VirtualNodeProvider", "burst_overconsumption", "burst_update",
-    "debt_update", "kv_bytes_per_token", "max_concurrency",
-    "pool_average_slo", "priority_breakdown", "priority_weight",
+    "Autoscaler", "AutoscalerConfig", "CASConflict", "Charge",
+    "ControlState", "DenyReason", "EntitlementSpec", "EntitlementState",
+    "EntitlementStatus", "InFlight", "LeasePod", "Ledger", "OracleRow",
+    "PoolManager", "PoolSpec", "PriorityCoefficients", "QoS",
+    "Resources", "RouteEntry", "ScaleDecision", "ScalingBounds",
+    "ServiceClass", "StateStore", "TickInputs", "TickRecord",
+    "TokenBucket", "TokenPool", "VirtualNode", "VirtualNodeProvider",
+    "as_manager", "burst_overconsumption", "burst_update",
+    "control_tick", "control_tick_pools", "debt_update",
+    "kv_bytes_per_token", "max_concurrency", "pool_average_slo",
+    "priority_breakdown", "priority_weight", "reference_tick",
     "service_gap", "waterfill",
 ]

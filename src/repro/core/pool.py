@@ -16,6 +16,16 @@ the controller
   4. updates service debt d_e (Eq. 2) for debt-bearing classes,
   5. pushes λ̂_e into the token-bucket ledger that funds admission.
 
+Steps 2–4 execute on the UNIFIED control plane
+(``core.control_plane.control_tick``): this class is a thin stateful
+shell that gathers entitlement state into a ``ControlState`` array of
+rows, runs the fused jit-compiled tick, and scatters allocations /
+debts / priorities back into the ledger and per-entitlement status.
+The old scalar dict-loop survives only as the test oracle
+(``control_plane.reference_tick``); ``waterfill`` below is part of that
+oracle.  ``PoolManager`` batches many pools through the same kernel via
+the split ``begin_tick`` / ``apply_tick`` halves.
+
 Entitlement *creation* is admitted through the virtual-node scheduler
 (`core.virtual_node`) against the pool's entitleable capacity
 (per-replica × maxReplicas): a pool never promises more than it could
@@ -29,13 +39,13 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.core import priority as prio
-from repro.core.ledger import Charge, Ledger
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import control_plane, priority as prio
+from repro.core.control_plane import CLASS_CODES, ControlState
+from repro.core.ledger import Ledger
 from repro.core.types import (
-    BURST_CLASSES,
-    DEBT_CLASSES,
-    PROTECTED_CLASSES,
-    AdmissionRequest,
     EntitlementSpec,
     EntitlementState,
     EntitlementStatus,
@@ -57,6 +67,22 @@ class InFlight:
     charged_tokens: int
     admitted_at: float
     resident: bool = False       # dispatched to a decode worker
+
+
+@dataclasses.dataclass
+class TickInputs:
+    """Gathered per-tick state, ready for the control-plane kernel.
+    Produced by ``TokenPool.begin_tick``; ``PoolManager`` stacks these
+    across pools for the batched tick."""
+
+    names: list[str]
+    state: ControlState
+    capacity_tps: float
+    measured_tps: jnp.ndarray
+    used_kv: jnp.ndarray
+    used_conc: jnp.ndarray
+    demand_tps: jnp.ndarray
+    avg_slo_ms: float
 
 
 @dataclasses.dataclass
@@ -125,6 +151,12 @@ class TokenPool:
         self._last_tick = now
         self._demand_window: dict[str, float] = {}
         self._demand_tps: dict[str, float] = {}
+        # Row layout cache for the control plane (rebuilt on membership
+        # or spec changes; row order is sorted-name, matching
+        # ``vectorized.arrays_from_pool``).
+        self._rows_dirty = True
+        self._row_names: list[str] = []
+        self._static_rows: Optional[dict[str, np.ndarray]] = None
         # Entitleable capacity: what may ever be promised (maxReplicas).
         self.provider.create_node(spec.name, self.entitleable_capacity())
 
@@ -164,12 +196,14 @@ class TokenPool:
         self.ledger.ensure(espec.name, espec.baseline.tokens_per_second, now)
         self._demand_window.setdefault(espec.name, 0.0)
         self._demand_tps.setdefault(espec.name, 0.0)
+        self._rows_dirty = True
         return st.state
 
     def remove_entitlement(self, name: str) -> None:
         self.provider.delete(f"lease-{name}")
         self.entitlements.pop(name, None)
         self.status.pop(name, None)
+        self._rows_dirty = True
 
     def expire_entitlements(self, now: float) -> None:
         for name, espec in self.entitlements.items():
@@ -189,6 +223,12 @@ class TokenPool:
         return prio.pool_average_slo(targets)
 
     def priority(self, name: str) -> float:
+        """Live Eq. 1 weight for ONE entitlement (admission check 5).
+
+        Single-request admission is inherently scalar, so this uses the
+        scalar oracle directly; the accounting tick computes the same
+        weights for ALL rows on the vectorized control plane (pinned
+        equal by ``tests/test_control_plane.py``)."""
         espec = self.entitlements[name]
         st = self.status[name]
         return prio.priority_weight(
@@ -230,12 +270,17 @@ class TokenPool:
         self.status[rec.entitlement].resident += 1
 
     def on_complete(self, request_id: str, actual_output_tokens: int,
-                    now: float) -> None:
+                    now: float) -> Optional[InFlight]:
         """Gateway completion callback (paper §4.3): settle the charge,
-        update usage counters that feed burst/debt at the next tick."""
+        update usage counters that feed burst/debt at the next tick.
+
+        Returns the settled ``InFlight`` record (None if unknown) so
+        callers attribute the completion WITHOUT re-reading
+        ``self.in_flight`` — the record is already popped by the time
+        this returns, and read-after-call would silently miss."""
         rec = self.in_flight.pop(request_id, None)
         if rec is None:
-            return
+            return None
         st = self.status[rec.entitlement]
         st.in_flight = max(0, st.in_flight - 1)
         if rec.resident:
@@ -245,18 +290,21 @@ class TokenPool:
         actual = self.ledger.settle(request_id, actual_output_tokens, now)
         st.window_tokens += actual
         st.tokens_total += actual
+        return rec
 
-    def on_evict(self, request_id: str, now: float) -> None:
-        """Request terminated before completion (preemption/failure)."""
+    def on_evict(self, request_id: str, now: float) -> Optional[InFlight]:
+        """Request terminated before completion (preemption/failure).
+        Returns the evicted ``InFlight`` record (None if unknown)."""
         rec = self.in_flight.pop(request_id, None)
         if rec is None:
-            return
+            return None
         st = self.status[rec.entitlement]
         st.in_flight = max(0, st.in_flight - 1)
         if rec.resident:
             st.resident = max(0, st.resident - 1)
         st.kv_bytes_in_use = max(0.0, st.kv_bytes_in_use - rec.kv_bytes)
         self.ledger.cancel(request_id, now)
+        return rec
 
     # -- contention & reclamation -------------------------------------------------
     def pool_in_flight(self) -> int:
@@ -302,86 +350,111 @@ class TokenPool:
         return victims
 
     # -- the accounting tick ------------------------------------------------------
-    def tick(self, now: float) -> TickRecord:
+    #
+    # Split into gather (``begin_tick``) → fused control-plane kernel →
+    # scatter (``apply_tick``) so ``PoolManager`` can stack the gathered
+    # inputs of many pools and dispatch ONE batched kernel for all of
+    # them.  ``tick`` composes the three for the single-pool case.
+
+    def _static_row_arrays(self) -> dict[str, np.ndarray]:
+        """Spec-derived row columns, cached until membership changes."""
+        if self._rows_dirty or self._static_rows is None:
+            names = sorted(self.entitlements)
+            self._row_names = names
+            es = [self.entitlements[n] for n in names]
+            self._static_rows = {
+                "class_code": np.array(
+                    [CLASS_CODES[e.qos.service_class] for e in es],
+                    np.int32),
+                "baseline_tps": np.array(
+                    [e.baseline.tokens_per_second for e in es], np.float32),
+                "baseline_kv": np.array(
+                    [e.baseline.kv_bytes for e in es], np.float32),
+                "baseline_conc": np.array(
+                    [e.baseline.concurrency for e in es], np.float32),
+                "slo_ms": np.array(
+                    [e.qos.slo_target_ms for e in es], np.float32),
+            }
+            self._rows_dirty = False
+        return self._static_rows
+
+    def begin_tick(self, now: float) -> TickInputs:
+        """Step 1 (measurement) + gather: fold the accounting window
+        into measured/demand signals and snapshot entitlement state as
+        control-plane rows."""
         dt = max(1e-9, now - self._last_tick)
         self._last_tick = now
         self.expire_entitlements(now)
-        cap = self.capacity()
-        names = [n for n in self.entitlements]
-        coeff = self.spec.coefficients
-        avg_slo = self.pool_avg_slo()
+        static = self._static_row_arrays()
+        names = self._row_names
+        n = len(names)
 
-        # 1. measure usage + demand
-        measured: dict[str, float] = {}
-        for n in names:
-            st = self.status[n]
+        bound = np.zeros(n, bool)
+        burst = np.zeros(n, np.float32)
+        debt = np.zeros(n, np.float32)
+        measured = np.zeros(n, np.float32)
+        used_kv = np.zeros(n, np.float32)
+        used_conc = np.zeros(n, np.float32)
+        demand = np.zeros(n, np.float32)
+        for i, name in enumerate(names):
+            st = self.status[name]
             st.measured_tps = st.window_tokens / dt
-            measured[n] = st.measured_tps
             st.window_tokens = 0.0
-            inst_demand = self._demand_window.get(n, 0.0) / dt
+            inst_demand = self._demand_window.get(name, 0.0) / dt
             # demand signal: EWMA for stability, floored by live usage
-            self._demand_tps[n] = max(
-                0.5 * self._demand_tps.get(n, 0.0) + 0.5 * inst_demand,
-                measured[n])
-            self._demand_window[n] = 0.0
+            self._demand_tps[name] = max(
+                0.5 * self._demand_tps.get(name, 0.0) + 0.5 * inst_demand,
+                st.measured_tps)
+            self._demand_window[name] = 0.0
+            bound[i] = st.state == EntitlementState.BOUND
+            burst[i] = st.burst
+            debt[i] = st.debt
+            measured[i] = st.measured_tps
+            used_kv[i] = st.kv_bytes_in_use
+            used_conc[i] = float(st.resident)
+            demand[i] = self._demand_tps[name]
 
-        # 2. burst intensity (Eq. 3 EWMA) — must precede priority calc
-        for n in names:
-            espec, st = self.entitlements[n], self.status[n]
-            usage = Resources(measured[n], st.kv_bytes_in_use,
-                              float(st.resident))
-            delta = prio.burst_overconsumption(usage, espec.baseline)
-            st.burst = prio.burst_update(st.burst, delta, coeff.gamma_burst)
+        state = ControlState(
+            class_code=jnp.asarray(static["class_code"]),
+            bound=jnp.asarray(bound),
+            baseline_tps=jnp.asarray(static["baseline_tps"]),
+            baseline_kv=jnp.asarray(static["baseline_kv"]),
+            baseline_conc=jnp.asarray(static["baseline_conc"]),
+            slo_ms=jnp.asarray(static["slo_ms"]),
+            burst=jnp.asarray(burst),
+            debt=jnp.asarray(debt),
+        )
+        return TickInputs(
+            names=list(names),
+            state=state,
+            capacity_tps=self.capacity().tokens_per_second,
+            measured_tps=jnp.asarray(measured),
+            used_kv=jnp.asarray(used_kv),
+            used_conc=jnp.asarray(used_conc),
+            demand_tps=jnp.asarray(demand),
+            avg_slo_ms=self.pool_avg_slo(),
+        )
 
-        # 3. priority weights (Eq. 1) with updated burst, previous debt
-        weights = {}
-        for n in names:
-            espec, st = self.entitlements[n], self.status[n]
-            weights[n] = prio.priority_weight(
-                espec.qos.service_class, espec.qos.slo_target_ms, avg_slo,
-                st.burst, st.debt, coeff)
-
-        # 4. allocation: protected reserved → elastic baselines → backfill
-        alloc = self._allocate_tps(cap.tokens_per_second, names, weights)
-
-        # 5. debt update (Eq. 2) for debt-bearing classes
-        for n in names:
-            espec, st = self.entitlements[n], self.status[n]
-            if espec.qos.service_class in DEBT_CLASSES:
-                # Underservice only counts when there is demand to serve:
-                # an idle elastic entitlement is not "underserved", and
-                # demand below baseline is not a gap either.  Service
-                # above baseline (backfill burst) accrues credit.
-                demand = self._demand_tps[n]
-                base = espec.baseline.tokens_per_second
-                if demand <= 1e-9 or base <= 0.0:
-                    gap = 0.0
-                else:
-                    # debt tracks DELIVERED service ("underserved over
-                    # time", §3.3): the measured completion rate,
-                    # floored by the demand-capped funding (a tenant
-                    # whose work is still in flight is not underserved
-                    # by more than its funding shortfall).
-                    served = max(measured[n], min(alloc[n], demand))
-                    entitled_now = min(base, max(demand, served))
-                    gap = (entitled_now - served) / base
-                gap = min(coeff.gap_clip, max(-coeff.gap_clip, gap))
-                st.debt = min(coeff.debt_max, max(
-                    coeff.debt_min,
-                    prio.debt_update(st.debt, gap, coeff.gamma_debt)))
-
-        # 6. fund the ledger at effective rates
-        for n in names:
-            st = self.status[n]
-            st.effective = Resources(alloc[n], st.effective.kv_bytes,
+    def apply_tick(self, now: float, names: list[str],
+                   new_burst: np.ndarray, new_debt: np.ndarray,
+                   alloc: np.ndarray, weights: np.ndarray) -> TickRecord:
+        """Scatter kernel outputs back into status + ledger (steps 5–6)
+        and append the observability record."""
+        alloc_f = [float(a) for a in alloc]
+        for i, name in enumerate(names):
+            st = self.status[name]
+            st.burst = float(new_burst[i])
+            st.debt = float(new_debt[i])
+            st.effective = Resources(alloc_f[i], st.effective.kv_bytes,
                                      st.effective.concurrency)
-            self.ledger.set_rate(n, alloc[n], now)
+            self.ledger.set_rate(name, alloc_f[i], now)
 
         rec = TickRecord(
             t=now,
-            capacity_tps=cap.tokens_per_second,
-            allocations=dict(alloc),
-            priorities=dict(weights),
+            capacity_tps=self.capacity().tokens_per_second,
+            allocations=dict(zip(names, alloc_f)),
+            priorities={n: float(weights[i])
+                        for i, n in enumerate(names)},
             debts={n: self.status[n].debt for n in names},
             bursts={n: self.status[n].burst for n in names},
             in_flight={n: self.status[n].in_flight for n in names},
@@ -390,69 +463,28 @@ class TokenPool:
         self.history.append(rec)
         return rec
 
-    def _allocate_tps(self, capacity: float, names: list[str],
-                      weights: dict[str, float]) -> dict[str, float]:
-        """Funding allocation with work conservation.
+    def tick(self, now: float) -> TickRecord:
+        """One accounting tick on the unified control plane.
 
-        Protected classes are FUNDED at baseline unconditionally (their
-        buckets can always admit up to baseline — "never reclaimed");
-        but surplus for backfill is computed against their *active use*
-        min(baseline, demand), so idle reserved capacity is borrowable
-        by lower classes and reclaimed within one accounting tick when
-        the protected tenant returns (the paper's Exp. 1 squeeze).
-        """
-        alloc = {n: 0.0 for n in names}
-        live = [n for n in names
-                if self.status[n].state == EntitlementState.BOUND]
+        Rows are padded to a power-of-two bucket (inert unbound rows)
+        so entitlement churn does not retrace the jitted kernel; the
+        outputs are sliced back to the live rows."""
+        inp = self.begin_tick(now)
+        n = inp.state.n_rows
+        width = control_plane.bucket_width(n)
+        pad = width - n
 
-        def demand(n: str) -> float:
-            return self._demand_tps.get(n, 0.0)
+        def padvec(x):
+            return (jnp.concatenate([x, jnp.zeros(pad, x.dtype)])
+                    if pad else x)
 
-        # (a) protected: fund at baseline; emergency-scale only if the
-        #     *active* protected use exceeds runtime capacity.
-        protected = [n for n in live
-                     if self.entitlements[n].qos.service_class
-                     in PROTECTED_CLASSES]
-        base_p = {n: self.entitlements[n].baseline.tokens_per_second
-                  for n in protected}
-        active_p = {n: min(base_p[n], demand(n)) for n in protected}
-        total_active_p = sum(active_p.values())
-        if total_active_p > capacity and total_active_p > 0:
-            scale = capacity / total_active_p
-            for n in protected:
-                alloc[n] = base_p[n] * scale
-            return alloc           # nothing left for anyone else
-        for n in protected:
-            alloc[n] = base_p[n]
-        remaining = max(0.0, capacity - total_active_p)
-
-        # (b) elastic baselines (demand-capped) — weighted water-fill
-        #     under scarcity; an idle elastic strands nothing.
-        elastic = [n for n in live
-                   if self.entitlements[n].qos.service_class
-                   == ServiceClass.ELASTIC]
-        want_e = {n: min(self.entitlements[n].baseline.tokens_per_second,
-                         demand(n))
-                  for n in elastic}
-        fill = waterfill(remaining, want_e,
-                         {n: weights[n] for n in elastic})
-        for n in elastic:
-            alloc[n] = fill[n]
-        remaining = max(0.0, remaining - sum(fill.values()))
-
-        # (c) work-conserving backfill of surplus to burst-eligible
-        #     classes with unmet demand (incl. spot/preemptible which
-        #     have no baseline, and dedicated bursting above baseline).
-        burst_ok = [n for n in live
-                    if self.entitlements[n].qos.service_class
-                    in BURST_CLASSES]
-        want_b = {}
-        for n in burst_ok:
-            used = (active_p[n] if n in active_p
-                    else min(alloc[n], demand(n)))
-            want_b[n] = max(0.0, demand(n) - used)
-        fill = waterfill(remaining, want_b,
-                         {n: weights[n] for n in burst_ok})
-        for n in burst_ok:
-            alloc[n] += fill[n]
-        return alloc
+        new_state, alloc, weights = control_plane.control_tick(
+            control_plane.pad_state(inp.state, width),
+            jnp.float32(inp.capacity_tps), padvec(inp.measured_tps),
+            padvec(inp.used_kv), padvec(inp.used_conc),
+            padvec(inp.demand_tps), jnp.float32(inp.avg_slo_ms),
+            coeff=self.spec.coefficients)
+        return self.apply_tick(
+            now, inp.names, np.asarray(new_state.burst)[:n],
+            np.asarray(new_state.debt)[:n], np.asarray(alloc)[:n],
+            np.asarray(weights)[:n])

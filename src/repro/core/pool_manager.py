@@ -1,0 +1,221 @@
+"""PoolManager — the multi-pool control plane.
+
+Related work treats the *pool* as the unit of cost-efficient serving
+(Token-Budget-Aware Pool Routing, arXiv:2604.09613; Dual-Pool
+Token-Budget Routing, arXiv:2604.08075): a platform runs several
+TokenPools (different models, hardware classes, or regions) and an API
+key maps to an ORDERED list of (pool, entitlement) legs with spill-over
+— a request denied by its preferred pool may be served by a cheaper /
+less-loaded one instead of bouncing a 429 back to the client.
+
+This module provides the two multi-pool layers on top of the unified
+control plane:
+
+1. **Batched accounting** — ``PoolManager.tick`` gathers every pool's
+   entitlement rows, stacks them along a pool axis (padding narrower
+   pools with inert unbound rows), and executes
+   ``control_plane.control_tick_pools`` — ONE fused vmapped dispatch
+   for the whole fleet.  Pools with different priority coefficients
+   (a static jit argument) are grouped and dispatched per group.
+
+2. **Routing** — ``route_order`` ranks the legs of a route: the static
+   client preference by default, or budget/latency-aware
+   (``spill_policy="headroom"``) ranking legs by remaining token-bucket
+   budget and pool load, in the spirit of dual-pool routing.  Pools
+   with zero live replicas are unavailable and always skipped.
+
+The gateway owns the per-request admission pipeline; the manager owns
+pool membership, ordering, and completion attribution.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Iterable, Optional, Union
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import control_plane
+from repro.core.pool import InFlight, TickRecord, TokenPool
+from repro.core.types import EntitlementSpec, PoolSpec
+from repro.core.virtual_node import VirtualNodeProvider
+
+
+@dataclasses.dataclass(frozen=True)
+class RouteEntry:
+    """One leg of a multi-pool route: admit ``entitlement`` on ``pool``."""
+
+    pool: str
+    entitlement: str
+
+
+#: Spill policies understood by ``route_order``.
+SPILL_POLICIES = ("static", "headroom")
+
+
+class PoolManager:
+    """Holds the fleet of TokenPools and batches their accounting."""
+
+    def __init__(self, pools: Iterable[TokenPool] = ()) -> None:
+        self.pools: dict[str, TokenPool] = {}
+        for p in pools:
+            self.adopt(p)
+
+    # -- membership -----------------------------------------------------------
+    def add_pool(self, spec: PoolSpec,
+                 provider: Optional[VirtualNodeProvider] = None,
+                 now: float = 0.0) -> TokenPool:
+        pool = TokenPool(spec, provider=provider, now=now)
+        return self.adopt(pool)
+
+    def adopt(self, pool: TokenPool) -> TokenPool:
+        if pool.spec.name in self.pools:
+            raise ValueError(f"duplicate pool {pool.spec.name!r}")
+        self.pools[pool.spec.name] = pool
+        return pool
+
+    def pool(self, name: str) -> TokenPool:
+        return self.pools[name]
+
+    def default_pool(self) -> TokenPool:
+        if not self.pools:
+            raise LookupError("PoolManager has no pools")
+        return next(iter(self.pools.values()))
+
+    def add_entitlement(self, espec: EntitlementSpec,
+                        now: float = 0.0):
+        """Route an entitlement spec to the pool it names."""
+        return self.pools[espec.pool].add_entitlement(espec, now=now)
+
+    def available(self, name: str) -> bool:
+        pool = self.pools.get(name)
+        return pool is not None and pool.replicas > 0
+
+    # -- routing ---------------------------------------------------------------
+    def route_order(self, entries: list[RouteEntry], input_tokens: int,
+                    max_tokens: Optional[int], now: float,
+                    policy: str = "static") -> list[RouteEntry]:
+        """Rank a route's legs; unavailable pools are dropped.
+
+        ``static``   — the client's declared preference order.
+        ``headroom`` — budget/latency-aware: legs whose token bucket can
+        afford this request's charge (input + effective max_tokens,
+        using each leg's own pool default) rank before legs that would
+        deny on budget; within each group, larger remaining bucket
+        budget wins, with the pool's load factor
+        admitted-in-flight / concurrency (queueing latency proxy) as
+        the tiebreak.  Preference order breaks exact ties so the
+        policy degrades to ``static`` on fresh pools.
+        """
+        live = [e for e in entries if self.available(e.pool)]
+        if policy == "static":
+            return live
+        if policy != "headroom":
+            raise ValueError(f"unknown spill policy {policy!r}; "
+                             f"expected one of {SPILL_POLICIES}")
+
+        def score(pos_entry):
+            pos, e = pos_entry
+            pool = self.pools[e.pool]
+            espec = pool.entitlements.get(e.entitlement)
+            if espec is None:
+                return (1, float("inf"), float("inf"), pos)
+            charged = input_tokens + (
+                max_tokens if max_tokens is not None
+                else pool.spec.default_max_tokens)
+            bucket = pool.ledger.ensure(
+                e.entitlement,
+                pool.status[e.entitlement].effective.tokens_per_second
+                or espec.baseline.tokens_per_second, now)
+            bucket.refill(now)
+            affordable = 0 if bucket.level >= charged else 1
+            conc = max(1.0, pool.capacity().concurrency)
+            load = pool.pool_in_flight() / conc
+            return (affordable, -bucket.level, load, pos)
+
+        return [e for _, e in sorted(enumerate(live), key=score)]
+
+    # -- completion attribution -------------------------------------------------
+    def find_pool_of(self, request_id: str) -> Optional[TokenPool]:
+        for pool in self.pools.values():
+            if request_id in pool.in_flight:
+                return pool
+        return None
+
+    def on_complete(self, request_id: str, actual_output_tokens: int,
+                    now: float) -> Optional[tuple[str, InFlight]]:
+        """Settle a completion on whichever pool admitted the request.
+        Returns (pool name, settled record) or None if unknown."""
+        pool = self.find_pool_of(request_id)
+        if pool is None:
+            return None
+        rec = pool.on_complete(request_id, actual_output_tokens, now)
+        return (pool.spec.name, rec) if rec is not None else None
+
+    def on_evict(self, request_id: str, now: float
+                 ) -> Optional[tuple[str, InFlight]]:
+        pool = self.find_pool_of(request_id)
+        if pool is None:
+            return None
+        rec = pool.on_evict(request_id, now)
+        return (pool.spec.name, rec) if rec is not None else None
+
+    # -- the batched accounting tick --------------------------------------------
+    def tick(self, now: float) -> dict[str, TickRecord]:
+        """Tick EVERY pool through one fused multi-pool kernel dispatch
+        per coefficient group (coefficients are a static jit argument,
+        so pools sharing them share a compiled kernel)."""
+        groups: dict[object, list[TokenPool]] = {}
+        for pool in self.pools.values():
+            groups.setdefault(pool.spec.coefficients, []).append(pool)
+
+        records: dict[str, TickRecord] = {}
+        for coeff, group in groups.items():
+            if len(group) == 1:
+                pool = group[0]
+                records[pool.spec.name] = pool.tick(now)
+                continue
+            inputs = [p.begin_tick(now) for p in group]
+
+            # Bucket the row axis to a power of two so entitlement
+            # churn in one pool does not retrace the fleet's kernel.
+            width = control_plane.bucket_width(
+                max(i.state.n_rows for i in inputs))
+
+            def padded(xs):
+                return jnp.stack([
+                    jnp.concatenate([
+                        x, jnp.zeros(width - x.shape[0], x.dtype)])
+                    if x.shape[0] < width else x for x in xs])
+
+            states = control_plane.stack_states(
+                [i.state for i in inputs], width=width)
+            new_state, alloc, weights = control_plane.control_tick_pools(
+                states,
+                jnp.asarray([i.capacity_tps for i in inputs], jnp.float32),
+                padded([i.measured_tps for i in inputs]),
+                padded([i.used_kv for i in inputs]),
+                padded([i.used_conc for i in inputs]),
+                padded([i.demand_tps for i in inputs]),
+                jnp.asarray([i.avg_slo_ms for i in inputs], jnp.float32),
+                coeff=coeff)
+            burst = np.asarray(new_state.burst)
+            debt = np.asarray(new_state.debt)
+            alloc = np.asarray(alloc)
+            weights = np.asarray(weights)
+            for k, (pool, inp) in enumerate(zip(group, inputs)):
+                n = len(inp.names)
+                records[pool.spec.name] = pool.apply_tick(
+                    now, inp.names, burst[k, :n], debt[k, :n],
+                    alloc[k, :n], weights[k, :n])
+        return records
+
+
+PoolOrManager = Union[TokenPool, PoolManager]
+
+
+def as_manager(pools: PoolOrManager) -> PoolManager:
+    """Wrap a bare TokenPool into a single-pool manager (legacy API)."""
+    if isinstance(pools, PoolManager):
+        return pools
+    return PoolManager([pools])

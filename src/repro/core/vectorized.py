@@ -1,214 +1,64 @@
-"""Vectorized control plane — jit-compiled jnp implementation of the
-paper's math for O(10^4..10^6) entitlements.
+"""Vectorized admission path + back-compat shims over the unified
+control plane.
 
-The paper evaluates priority/debt/burst per request in Python against
-Redis state (~ms each).  At the 1000+-node scale this repo targets, a
-pool can hold hundreds of thousands of entitlements and the accounting
-tick itself becomes the bottleneck.  This module re-expresses the whole
-tick — Eq. 3 burst EWMA, Eq. 1 priority, priority-weighted
-water-filling allocation, Eq. 2 debt EWMA — as fused jnp array ops, and
-request admission for a scheduling quantum as a ``lax.fori_loop`` (an
-exact sequential replay, jit-compiled).
+The tick math that used to live here is now THE control plane
+(``core.control_plane``) — ``TokenPool.tick`` and ``PoolManager.tick``
+execute it directly.  This module keeps:
 
-``tests/test_vectorized_equiv.py`` pins these equal (within float
-tolerance) to the scalar reference in ``core.priority`` /
-``core.pool.waterfill`` / ``core.admission`` using hypothesis.
-
-Everything here is pure-functional: state arrays in, state arrays out.
-Entitlements are rows; service classes are small int codes.
+- :func:`admit_quantum` — exact sequential admission replay for one
+  scheduling quantum as a jit-compiled ``lax.fori_loop`` (used for
+  offline replay / throughput benchmarking of the §4.3 pipeline);
+- :func:`arrays_from_pool` — bridge snapshotting a scalar ``TokenPool``
+  into array form;
+- aliases (``PoolArrays``, ``tick_batch``, ``waterfill_batch``, …) so
+  existing imports keep working.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.control_plane import (
+    BURSTOK_MASK as _BURSTOK,
+    CLASS_CODES,
+    CLASS_W as _W,
+    ControlState,
+    DEBTOK_MASK as _DEBTOK,
+    ELASTIC_MASK as _ELASTIC,
+    PROTECTED_MASK as _PROTECTED,
+    allocate_rows as allocate_tps_batch,
+    burst_delta_rows as burst_delta_batch,
+    control_tick,
+    ewma,
+    priority_rows as priority_batch,
+    waterfill_rows as waterfill_batch,
+)
 from repro.core.types import PriorityCoefficients, ServiceClass
 
-# class codes (row order matters: used for lookups)
-CLASS_CODES: dict[ServiceClass, int] = {
-    ServiceClass.DEDICATED: 0,
-    ServiceClass.GUARANTEED: 1,
-    ServiceClass.ELASTIC: 2,
-    ServiceClass.SPOT: 3,
-    ServiceClass.PREEMPTIBLE: 4,
-}
-_W = jnp.array([1000.0, 1000.0, 100.0, 1.0, 0.1])       # CLASS_WEIGHT
-_PROTECTED = jnp.array([True, True, False, False, False])
-_BURSTOK = jnp.array([True, False, True, True, True])    # Table 1 "Burst"
-_DEBTOK = jnp.array([False, False, True, False, False])  # debt classes
-_ELASTIC = jnp.array([False, False, True, False, False])
-
-
-@jax.tree_util.register_dataclass
-@dataclasses.dataclass(frozen=True)
-class PoolArrays:
-    """Per-entitlement state-of-the-world, array-of-rows layout."""
-
-    class_code: jax.Array        # int32 [N]
-    bound: jax.Array             # bool  [N]
-    baseline_tps: jax.Array      # f32 [N] λ_e
-    baseline_kv: jax.Array       # f32 [N] χ_e
-    baseline_conc: jax.Array     # f32 [N] r_e
-    slo_ms: jax.Array            # f32 [N] ℓ*_e
-    burst: jax.Array             # f32 [N] b_e
-    debt: jax.Array              # f32 [N] d_e
-
-
-def priority_batch(arr: PoolArrays, pool_avg_slo: jax.Array,
-                   coeff: PriorityCoefficients) -> jax.Array:
-    """Eq. (1), row-parallel."""
-    w_class = _W[arr.class_code]
-    slo_f = 1.0 / (1.0 + coeff.alpha_slo * (arr.slo_ms / pool_avg_slo))
-    burst_f = 1.0 / (1.0 + coeff.alpha_burst * jnp.maximum(arr.burst, 0.0))
-    debt_f = jnp.maximum(1e-3, 1.0 + coeff.alpha_debt * arr.debt)
-    return w_class * slo_f * burst_f * debt_f
-
-
-def burst_delta_batch(used_tps: jax.Array, used_kv: jax.Array,
-                      used_conc: jax.Array, arr: PoolArrays) -> jax.Array:
-    """Eq. (3), row-parallel, matching the scalar zero-baseline rule."""
-
-    def term(used, base):
-        rel = jnp.where(base > 0.0, jnp.maximum(0.0, used / jnp.maximum(
-            base, 1e-30) - 1.0), jnp.where(used > 0.0, 1.0, 0.0))
-        return rel
-
-    return (term(used_tps, arr.baseline_tps)
-            + term(used_kv, arr.baseline_kv)
-            + term(used_conc, arr.baseline_conc))
-
-
-def ewma(prev: jax.Array, x: jax.Array, gamma: float) -> jax.Array:
-    """Eq. (2) form: γ·prev + (1−γ)·x."""
-    return gamma * prev + (1.0 - gamma) * x
-
-
-def waterfill_batch(capacity: jax.Array, want: jax.Array,
-                    weight: jax.Array, max_rounds: int = 32) -> jax.Array:
-    """Priority-weighted progressive water-filling (jnp mirror of
-    ``core.pool.waterfill``).  Runs the same cap-and-redistribute rounds
-    inside a ``lax.while_loop``; converges in ≤ #distinct-caps rounds,
-    bounded by ``max_rounds`` for compile-time safety."""
-    want = jnp.maximum(want, 0.0)
-    active0 = want > 1e-12
-
-    def cond(state):
-        alloc, remaining, active, i = state
-        return (remaining > 1e-9) & jnp.any(active) & (i < max_rounds)
-
-    def body(state):
-        alloc, remaining, active, i = state
-        w = jnp.where(active, weight, 0.0)
-        total_w = jnp.sum(w)
-        n_active = jnp.sum(active)
-        total_w_safe = jnp.where(total_w > 0.0, total_w, 1.0)
-        share = jnp.where(
-            total_w > 0.0,
-            remaining * (w / total_w_safe),
-            jnp.where(active, remaining / jnp.maximum(n_active, 1), 0.0))
-        room = want - alloc
-        take = jnp.minimum(room, share)
-        take = jnp.where(active, take, 0.0)
-        alloc = alloc + take
-        remaining = remaining - jnp.sum(take)
-        # done when the share covered the remaining room — compare take
-        # to room with a magnitude-scaled epsilon (f32-safe; an absolute
-        # 1e-12 misfires once want ≳ 1e2 in float32)
-        newly_done = active & (take >= room
-                               - 1e-6 * jnp.maximum(1.0, want))
-        # scalar loop breaks when a round fills nobody
-        progress = jnp.any(newly_done)
-        active = active & ~newly_done
-        i = jnp.where(progress, i + 1, max_rounds)
-        return alloc, remaining, active, i
-
-    alloc0 = jnp.zeros_like(want)
-    alloc, _, _, _ = jax.lax.while_loop(
-        cond, body, (alloc0, jnp.maximum(capacity, 0.0), active0,
-                     jnp.asarray(0)))
-    return alloc
-
-
-def allocate_tps_batch(capacity: jax.Array, arr: PoolArrays,
-                       weights: jax.Array, demand_tps: jax.Array
-                       ) -> jax.Array:
-    """Mirror of ``TokenPool._allocate_tps`` (funding + work
-    conservation): protected funded at baseline (emergency-scaled if
-    their *active* use exceeds capacity) → elastic demand-capped
-    baselines water-filled → burst backfill of the surplus."""
-    live = arr.bound
-    protected = live & _PROTECTED[arr.class_code]
-    base_p = jnp.where(protected, arr.baseline_tps, 0.0)
-    active_p = jnp.minimum(base_p, jnp.where(protected, demand_tps, 0.0))
-    total_active_p = jnp.sum(active_p)
-    emergency = total_active_p > capacity
-    scale = jnp.where(emergency,
-                      capacity / jnp.maximum(total_active_p, 1e-30), 1.0)
-    alloc_p = base_p * scale
-    remaining = jnp.where(
-        emergency, 0.0, jnp.maximum(0.0, capacity - total_active_p))
-
-    elastic = live & _ELASTIC[arr.class_code]
-    want_e = jnp.where(elastic,
-                       jnp.minimum(arr.baseline_tps, demand_tps), 0.0)
-    fill_e = waterfill_batch(remaining, want_e,
-                             jnp.where(elastic, weights, 0.0))
-    alloc = alloc_p + fill_e
-    remaining = jnp.maximum(0.0, remaining - jnp.sum(fill_e))
-
-    burst_ok = live & _BURSTOK[arr.class_code]
-    used = jnp.where(protected, active_p,
-                     jnp.minimum(alloc, demand_tps))
-    want_b = jnp.where(burst_ok,
-                       jnp.maximum(0.0, demand_tps - used), 0.0)
-    fill_b = waterfill_batch(remaining, want_b,
-                             jnp.where(burst_ok, weights, 0.0))
-    return alloc + fill_b
+#: Back-compat name: the array-of-rows state is the ControlState.
+PoolArrays = ControlState
 
 
 @partial(jax.jit, static_argnames=("coeff",))
-def tick_batch(arr: PoolArrays, capacity_tps: jax.Array,
+def tick_batch(arr: ControlState, capacity_tps: jax.Array,
                measured_tps: jax.Array, used_kv: jax.Array,
                used_conc: jax.Array, demand_tps: jax.Array,
                coeff: PriorityCoefficients = PriorityCoefficients(),
-               ) -> tuple[PoolArrays, jax.Array, jax.Array]:
-    """One full accounting tick, fused: returns (new state, allocations,
-    priority weights).  Mirrors ``TokenPool.tick`` steps 2–5."""
-    # pool-average SLO over bound members
+               ) -> tuple[ControlState, jax.Array, jax.Array]:
+    """Legacy entry point: one tick with ℓ̄* computed as the live mean
+    over bound rows (``control_tick`` takes it explicitly instead, so
+    the pool can pin it via ``PoolSpec.fixed_avg_slo_ms``)."""
     n_bound = jnp.maximum(jnp.sum(arr.bound), 1)
     avg_slo = jnp.sum(jnp.where(arr.bound, arr.slo_ms, 0.0)) / n_bound
-    avg_slo = jnp.maximum(avg_slo, 1e-9)
-
-    delta = burst_delta_batch(measured_tps, used_kv, used_conc, arr)
-    burst = ewma(arr.burst, delta, coeff.gamma_burst)
-    arr1 = dataclasses.replace(arr, burst=burst)
-
-    weights = priority_batch(arr1, avg_slo, coeff)
-    alloc = allocate_tps_batch(capacity_tps, arr1, weights, demand_tps)
-
-    served = jnp.maximum(measured_tps, jnp.minimum(alloc, demand_tps))
-    entitled_now = jnp.minimum(arr.baseline_tps,
-                               jnp.maximum(demand_tps, served))
-    gap = jnp.where(
-        (demand_tps > 1e-9) & (arr.baseline_tps > 0.0),
-        (entitled_now - served) / jnp.maximum(arr.baseline_tps, 1e-30),
-        0.0)
-    gap = jnp.clip(gap, -coeff.gap_clip, coeff.gap_clip)
-    debtok = _DEBTOK[arr1.class_code]
-    debt = jnp.where(
-        debtok,
-        jnp.clip(ewma(arr1.debt, gap, coeff.gamma_debt),
-                 coeff.debt_min, coeff.debt_max),
-        arr1.debt)
-    arr2 = dataclasses.replace(arr1, debt=debt)
-    return arr2, alloc, weights
+    return control_tick(arr, capacity_tps, measured_tps, used_kv,
+                        used_conc, demand_tps,
+                        jnp.maximum(avg_slo, 1e-9), coeff=coeff)
 
 
 @partial(jax.jit, static_argnames=("coeff", "slack"))
-def admit_quantum(arr: PoolArrays,
+def admit_quantum(arr: ControlState,
                   bucket_level: jax.Array,       # f32 [N] tokens available
                   in_flight: jax.Array,          # i32 [N] RESIDENT seqs
                   kv_in_use: jax.Array,          # f32 [N]
@@ -280,10 +130,11 @@ def admit_quantum(arr: PoolArrays,
     return out[5], out[6]
 
 
-def arrays_from_pool(pool) -> tuple[PoolArrays, jax.Array, jax.Array, jax.Array]:
+def arrays_from_pool(pool) -> tuple[ControlState, jax.Array, jax.Array,
+                                    jax.Array]:
     """Bridge: snapshot a scalar ``TokenPool`` into array form.
-    Returns (PoolArrays, bucket_levels, in_flight, kv_in_use) with rows
-    in sorted-entitlement-name order."""
+    Returns (ControlState, bucket_levels, in_flight, kv_in_use) with
+    rows in sorted-entitlement-name order (the pool's own row order)."""
     names = sorted(pool.entitlements)
     from repro.core.types import EntitlementState
     cc, bound, btps, bkv, bconc, slo, burst, debt = [], [], [], [], [], [], [], []
@@ -302,7 +153,7 @@ def arrays_from_pool(pool) -> tuple[PoolArrays, jax.Array, jax.Array, jax.Array]
             n, e.baseline.tokens_per_second, 0.0).level)
         infl.append(s.resident)          # check 3 counts resident seqs
         kvu.append(s.kv_bytes_in_use)
-    arr = PoolArrays(
+    arr = ControlState(
         class_code=jnp.array(cc, dtype=jnp.int32),
         bound=jnp.array(bound),
         baseline_tps=jnp.array(btps, dtype=jnp.float32),

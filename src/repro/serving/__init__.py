@@ -1,8 +1,15 @@
 from repro.serving.engine import InferenceEngine
 from repro.serving.kv_manager import KVBlockManager, OutOfPages
 from repro.serving.request import Request, RequestState, latency_summary
-from repro.serving.simulation import ReplicaSim, ServingSimulator, Workload
+from repro.serving.simulation import (
+    MultiPoolSimulator,
+    PoolSite,
+    ReplicaSim,
+    ServingSimulator,
+    Workload,
+)
 
-__all__ = ["InferenceEngine", "KVBlockManager", "OutOfPages",
-           "ReplicaSim", "Request", "RequestState", "ServingSimulator",
-           "Workload", "latency_summary"]
+__all__ = ["InferenceEngine", "KVBlockManager", "MultiPoolSimulator",
+           "OutOfPages", "PoolSite", "ReplicaSim", "Request",
+           "RequestState", "ServingSimulator", "Workload",
+           "latency_summary"]

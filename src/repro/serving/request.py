@@ -36,6 +36,10 @@ class Request:
     deny_reason: Optional[str] = None
     retry_after_s: Optional[float] = None
     replica: Optional[str] = None
+    #: pool that admitted the request (multi-pool routing)
+    pool: Optional[str] = None
+    #: legs denied before the admitting pool (0 = preferred pool)
+    spill_hops: int = 0
 
     @property
     def input_len(self) -> int:

@@ -52,6 +52,10 @@ class Workload:
     #: client retry behaviour on 429 (Retry-After honoured, capped)
     max_retries: int = 0
     retry_cap_s: float = 5.0
+    #: ordered pool preference for MultiPoolSimulator routing (first =
+    #: preferred, later legs are spill-over targets); ignored by the
+    #: single-pool ServingSimulator
+    pools: tuple[str, ...] = ()
 
 
 @dataclasses.dataclass
@@ -66,6 +70,63 @@ class ReplicaSim:
 
     def load(self) -> int:
         return len(self.active)
+
+
+def dispatch_waiting(waiting: list, alive: list[ReplicaSim],
+                     requests: dict[str, Request], on_start) -> None:
+    """Drain a priority heap onto the least-loaded live replicas.
+    Shared by both simulators so the scheduling policy cannot diverge."""
+    while waiting:
+        candidates = [r for r in alive if r.load() < r.slots]
+        if not candidates:
+            return
+        replica = min(candidates, key=lambda r: r.load() / r.slots)
+        _, _, rid = heapq.heappop(waiting)
+        req = requests[rid]
+        if req.state not in (RequestState.QUEUED,):
+            continue                          # stale/duplicate entry
+        req.state = RequestState.PREFILLING
+        req.replica = replica.name
+        replica.active[rid] = [float(req.max_tokens),
+                               float(req.input_len)]
+        on_start(rid)           # KV becomes resident (§3.1 r)
+
+
+def advance_replicas(alive: list[ReplicaSim],
+                     requests: dict[str, Request], dt: float, now: float,
+                     on_finish) -> None:
+    """One dt of processor-sharing prefill/decode on live replicas.
+    ``on_finish(rid, req)`` receives each completed request AFTER its
+    terminal fields are stamped.  Shared by both simulators: the
+    timing model (TTFT stamping, decode-rate sharing) lives here once."""
+    for replica in alive:
+        if not replica.active:
+            continue
+        decoding = [rid for rid, st in replica.active.items()
+                    if st[1] <= 0.0]
+        n_prefilling = max(1, len(replica.active) - len(decoding))
+        decode_rate = replica.rate_tps / max(len(replica.active), 1)
+        finished = []
+        for rid, st in replica.active.items():
+            req = requests[rid]
+            if st[1] > 0.0:                      # prefilling
+                st[1] -= replica.prefill_tps * dt / n_prefilling
+                if st[1] <= 0.0:
+                    req.state = RequestState.DECODING
+            else:                                # decoding
+                before = st[0]
+                st[0] -= decode_rate * dt
+                if req.first_token_s is None and st[0] < before:
+                    req.first_token_s = now + dt
+                if st[0] <= 0.0:
+                    finished.append(rid)
+        for rid in finished:
+            req = requests[rid]
+            req.state = RequestState.FINISHED
+            req.finished_s = now + dt
+            req.output_tokens = [1] * req.max_tokens
+            del replica.active[rid]
+            on_finish(rid, req)
 
 
 @dataclasses.dataclass
@@ -188,51 +249,14 @@ class ServingSimulator:
         heapq.heappush(self.waiting, (-req.priority, now, rid))
 
     def _dispatch(self, now: float) -> None:
-        while self.waiting:
-            candidates = [r for r in self._alive()
-                          if r.load() < r.slots]
-            if not candidates:
-                return
-            replica = min(candidates, key=lambda r: r.load() / r.slots)
-            _, _, rid = heapq.heappop(self.waiting)
-            req = self.requests[rid]
-            if req.state not in (RequestState.QUEUED,):
-                continue                      # stale/duplicate entry
-            req.state = RequestState.PREFILLING
-            req.replica = replica.name
-            replica.active[rid] = [float(req.max_tokens),
-                                   float(req.input_len)]
-            self.pool.on_start(rid)     # KV becomes resident (§3.1 r)
+        dispatch_waiting(self.waiting, self._alive(), self.requests,
+                         self.pool.on_start)
 
     def _advance_replicas(self, now: float) -> None:
-        for replica in self._alive():
-            if not replica.active:
-                continue
-            decoding = [rid for rid, st in replica.active.items()
-                        if st[1] <= 0.0]
-            n_prefilling = max(1, len(replica.active) - len(decoding))
-            decode_rate = replica.rate_tps / max(len(replica.active), 1)
-            finished = []
-            for rid, st in replica.active.items():
-                req = self.requests[rid]
-                if st[1] > 0.0:                      # prefilling
-                    st[1] -= replica.prefill_tps * self.dt / n_prefilling
-                    if st[1] <= 0.0:
-                        req.state = RequestState.DECODING
-                else:                                # decoding
-                    before = st[0]
-                    st[0] -= decode_rate * self.dt
-                    if req.first_token_s is None and st[0] < before:
-                        req.first_token_s = now + self.dt
-                    if st[0] <= 0.0:
-                        finished.append(rid)
-            for rid in finished:
-                req = self.requests[rid]
-                req.state = RequestState.FINISHED
-                req.finished_s = now + self.dt
-                req.output_tokens = [1] * req.max_tokens
-                del replica.active[rid]
-                self.pool.on_complete(rid, req.max_tokens, now + self.dt)
+        advance_replicas(
+            self._alive(), self.requests, self.dt, now,
+            lambda rid, req: self.pool.on_complete(
+                rid, req.max_tokens, req.finished_s))
 
     def _handle_event(self, kind: str, payload: dict, now: float) -> None:
         if kind == "fail_replica":
@@ -344,4 +368,238 @@ class ServingSimulator:
                                default=0),
             "history": self.pool.history,
             "timeline": self.timeline,
+        }
+
+
+# -- multi-pool simulation -------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PoolSite:
+    """One pool's backend fleet in a multi-pool simulation."""
+
+    name: str
+    n_replicas: int = 1
+    replica_slots: int = 16
+    replica_tps: float = 240.0
+
+
+class MultiPoolSimulator:
+    """Discrete-time simulator over a ``PoolManager`` fleet.
+
+    The control plane under test is the real multi-pool code: a
+    ``Gateway`` with ordered (pool, entitlement) routes per workload,
+    spill-over on denial, and the BATCHED accounting tick
+    (``PoolManager.tick`` — one fused kernel for all pools).  Each pool
+    has its own simulated replica fleet; per-pool replica outages
+    (``at(t, "fail_replica", pool=..., idx=...)``) shrink only that
+    pool, pushing its traffic across the route to the surviving pools
+    — the cross-pool spill scenario of dual-pool routing.
+
+    Each workload is entitled on every pool in its ``pools`` preference
+    list (entitlement name ``{workload}@{pool}``); metrics are reported
+    per workload with per-pool admission attribution.
+    """
+
+    def __init__(self, workloads: list[Workload], sites: list[PoolSite],
+                 coeff: PriorityCoefficients = PriorityCoefficients(),
+                 dt: float = 0.02, seed: int = 0,
+                 accounting_interval_s: float = 1.0,
+                 bucket_window_s: float = 4.0,
+                 spill_policy: str = "static") -> None:
+        from repro.core import PoolManager
+        from repro.gateway import Gateway
+
+        self.dt = dt
+        self.workloads = {w.name: w for w in workloads}
+        self.sites = {s.name: s for s in sites}
+        self.rng = np.random.RandomState(seed)
+
+        # Admission charges input+max_tokens while decode counts output
+        # tokens; express pool λ capacity in charged units (see
+        # ServingSimulator).
+        charge_factor = float(np.mean(
+            [(w.in_tokens + w.out_tokens) / max(w.out_tokens, 1)
+             for w in workloads]))
+        self.charge_factor = charge_factor
+
+        self.manager = PoolManager()
+        self.replicas: dict[str, list[ReplicaSim]] = {}
+        for s in sites:
+            spec = PoolSpec(
+                name=s.name, model="sim-model",
+                scaling=ScalingBounds(1, s.n_replicas),
+                per_replica=Resources(s.replica_tps * charge_factor, 0.0,
+                                      float(s.replica_slots)),
+                coefficients=coeff,
+                accounting_interval_s=accounting_interval_s,
+                bucket_window_s=bucket_window_s)
+            pool = self.manager.add_pool(spec)
+            pool.set_replicas(s.n_replicas)
+            self.replicas[s.name] = [
+                ReplicaSim(f"{s.name}/r{i}", s.replica_slots,
+                           s.replica_tps)
+                for i in range(s.n_replicas)]
+
+        self.gateway = Gateway(self.manager, spill_policy=spill_policy)
+        for w in workloads:
+            if not w.pools:
+                raise ValueError(f"workload {w.name!r} names no pools")
+            for pname in w.pools:
+                site = self.sites[pname]
+                per_slot_tps = site.replica_tps / site.replica_slots
+                lam = w.tokens_per_second or w.slots * per_slot_tps \
+                    * (w.in_tokens + w.out_tokens) / max(w.out_tokens, 1)
+                if w.service_class in (ServiceClass.SPOT,
+                                       ServiceClass.PREEMPTIBLE):
+                    lam = 0.0
+                ent = f"{w.name}@{pname}"
+                pool = self.manager.pool(pname)
+                pool.add_entitlement(EntitlementSpec(
+                    name=ent, tenant_id=w.name, pool=pname,
+                    qos=QoS(service_class=w.service_class,
+                            slo_target_ms=w.slo_ms),
+                    baseline=Resources(lam, 0.0, w.slots)))
+                if lam == 0.0:   # spot: fund as the first backfill would
+                    pool.ledger.set_rate(
+                        ent, site.replica_tps * charge_factor, 0.0)
+            self.gateway.register_route(
+                w.name, [(p, f"{w.name}@{p}") for p in w.pools])
+
+        self.waiting: dict[str, list[tuple[float, float, str]]] = {
+            s.name: [] for s in sites}
+        self.requests: dict[str, Request] = {}
+        self._events: list[tuple[float, int, str, dict]] = []
+        self._eid = 0
+        self._req_counter = 0
+        self._next_arrival: dict[str, float] = {
+            w.name: w.start_s for w in workloads}
+        self.tick_records: dict[str, list] = {s.name: [] for s in sites}
+
+    # -- event API -----------------------------------------------------------
+    def at(self, t: float, kind: str, **payload) -> None:
+        """Schedule an external event: ``fail_replica`` /
+        ``recover_replica`` (pool=<name>, idx=<replica>)."""
+        heapq.heappush(self._events, (t, self._eid, kind, payload))
+        self._eid += 1
+
+    # -- internals ------------------------------------------------------------
+    def _alive(self, pool: str) -> list[ReplicaSim]:
+        return [r for r in self.replicas[pool] if r.alive]
+
+    def _arrive(self, w: Workload, now: float, attempt: int = 0) -> None:
+        self._req_counter += 1
+        rid = f"{w.name}-{self._req_counter}"
+        req = Request(request_id=rid, entitlement=w.name,
+                      prompt_tokens=[1] * w.in_tokens,
+                      max_tokens=w.out_tokens, arrival_s=now,
+                      api_key=w.name)
+        self.requests[rid] = req
+        resp = self.gateway.handle(
+            w.name, rid, input_tokens=w.in_tokens,
+            max_tokens=w.out_tokens, now=now)
+        if resp.status != 200:
+            req.state = RequestState.DENIED
+            req.deny_reason = resp.reason
+            req.retry_after_s = resp.retry_after_s
+            if attempt < w.max_retries:
+                backoff = min(resp.retry_after_s or 1.0, w.retry_cap_s)
+                self.at(now + max(backoff, self.dt), "retry",
+                        workload=w.name, attempt=attempt + 1)
+            return
+        req.priority = resp.priority
+        req.admitted_s = now
+        req.pool = resp.pool
+        req.spill_hops = resp.spill_hops
+        heapq.heappush(self.waiting[resp.pool], (-req.priority, now, rid))
+
+    def _dispatch(self, now: float) -> None:
+        for pname, waiting in self.waiting.items():
+            dispatch_waiting(waiting, self._alive(pname), self.requests,
+                             self.manager.pool(pname).on_start)
+
+    def _advance_replicas(self, now: float) -> None:
+        for pname in self.replicas:
+            advance_replicas(
+                self._alive(pname), self.requests, self.dt, now,
+                lambda rid, req: self.gateway.on_complete(
+                    rid, req.max_tokens,
+                    latency_s=req.finished_s - req.arrival_s,
+                    now=req.finished_s))
+
+    def _handle_event(self, kind: str, payload: dict, now: float) -> None:
+        if kind == "fail_replica":
+            pname = payload["pool"]
+            replica = self.replicas[pname][payload["idx"]]
+            replica.alive = False
+            # in-flight requests on the dead node are re-queued on the
+            # SAME pool (their charge lives in its ledger)
+            for rid in list(replica.active):
+                req = self.requests[rid]
+                req.state = RequestState.QUEUED
+                req.replica = None
+                heapq.heappush(self.waiting[pname],
+                               (-req.priority, req.arrival_s, rid))
+                del replica.active[rid]
+            self.manager.pool(pname).set_replicas(len(self._alive(pname)))
+        elif kind == "recover_replica":
+            pname = payload["pool"]
+            self.replicas[pname][payload["idx"]].alive = True
+            self.manager.pool(pname).set_replicas(len(self._alive(pname)))
+        elif kind == "retry":
+            w = self.workloads[payload["workload"]]
+            if now < w.end_s:
+                self._arrive(w, now, attempt=payload["attempt"])
+        else:
+            raise ValueError(kind)
+
+    # -- main loop ------------------------------------------------------------
+    def run(self, duration_s: float) -> dict:
+        now = 0.0
+        interval = min(p.spec.accounting_interval_s
+                       for p in self.manager.pools.values())
+        next_tick = interval
+        steps = int(duration_s / self.dt)
+        for _ in range(steps):
+            while self._events and self._events[0][0] <= now:
+                _, _, kind, payload = heapq.heappop(self._events)
+                self._handle_event(kind, payload, now)
+            for w in self.workloads.values():
+                while (self._next_arrival[w.name] <= now
+                       and w.start_s <= now < w.end_s):
+                    self._arrive(w, now)
+                    self._next_arrival[w.name] += 1.0 / w.rate_rps
+                if now >= w.end_s:
+                    self._next_arrival[w.name] = 1e18
+            self._dispatch(now)
+            self._advance_replicas(now)
+            if now >= next_tick:
+                recs = self.manager.tick(now)   # ONE batched dispatch
+                for pname, rec in recs.items():
+                    self.tick_records[pname].append(rec)
+                next_tick += interval
+            now += self.dt
+        return self.summary()
+
+    # -- results ---------------------------------------------------------------
+    def summary(self) -> dict:
+        from repro.serving.request import latency_summary
+        per: dict[str, dict] = {}
+        for wname in self.workloads:
+            reqs = [r for r in self.requests.values()
+                    if r.entitlement == wname]
+            s = latency_summary(reqs)
+            s["admitted_by_pool"] = {}
+            for r in reqs:
+                if r.pool is not None:
+                    s["admitted_by_pool"][r.pool] = (
+                        s["admitted_by_pool"].get(r.pool, 0) + 1)
+            s["spilled"] = sum(1 for r in reqs if r.spill_hops > 0)
+            s["denied_total"] = sum(
+                1 for r in reqs if r.state == RequestState.DENIED)
+            per[wname] = s
+        return {
+            "per_workload": per,
+            "per_pool_history": {n: p.history
+                                 for n, p in self.manager.pools.items()},
         }

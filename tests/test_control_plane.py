@@ -1,0 +1,354 @@
+"""Equivalence suite for the unified control plane.
+
+Pins the jit-compiled tick (``control_tick`` — what ``TokenPool.tick``
+executes — and the vmapped ``control_tick_pools`` behind
+``PoolManager.tick``) against the retained scalar oracle
+(``control_plane.reference_tick``: the paper-style per-entitlement
+Python loop over ``core.priority`` + ``core.pool.waterfill``) across
+service-class mixes, scarcity regimes, and multi-tick debt accrual.
+
+Deterministic seeded sweeps — runs everywhere (the hypothesis property
+tests in ``test_vectorized_equiv.py`` add randomized depth when
+hypothesis is installed).
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    EntitlementSpec,
+    OracleRow,
+    PoolManager,
+    PoolSpec,
+    PriorityCoefficients,
+    QoS,
+    Resources,
+    ScalingBounds,
+    ServiceClass,
+    TokenPool,
+    control_tick,
+    control_tick_pools,
+    reference_tick,
+)
+from repro.core.control_plane import pad_state, stack_states, state_from_rows
+
+CLASSES = list(ServiceClass)
+REL = 2e-3
+ABS = 1e-2
+
+
+def random_rows(n: int, rng: np.random.RandomState,
+                demand_scale: float = 200.0) -> list[OracleRow]:
+    rows = []
+    for _ in range(n):
+        klass = CLASSES[rng.randint(0, 5)]
+        base = (0.0 if klass in (ServiceClass.SPOT,
+                                 ServiceClass.PREEMPTIBLE)
+                else float(rng.uniform(5, 100)))
+        rows.append(OracleRow(
+            service_class=klass,
+            bound=bool(rng.rand() > 0.1),
+            baseline_tps=base,
+            baseline_kv=float(rng.choice([0.0, 1 << 20])),
+            baseline_conc=float(rng.choice([0.0, 4.0, 16.0])),
+            slo_ms=float(rng.uniform(100, 30000)),
+            burst=float(rng.uniform(0, 2.0)),
+            debt=float(rng.uniform(-0.15, 1.0)),
+            measured_tps=float(rng.uniform(0, 150)),
+            used_kv=float(rng.uniform(0, 1 << 20)),
+            used_conc=float(rng.randint(0, 8)),
+            demand_tps=float(rng.uniform(0, demand_scale))))
+    return rows
+
+
+def run_kernel(rows, capacity, avg_slo,
+               coeff=PriorityCoefficients()):
+    state = state_from_rows(rows)
+    new_state, alloc, weights = control_tick(
+        state, jnp.float32(capacity),
+        jnp.asarray([r.measured_tps for r in rows], jnp.float32),
+        jnp.asarray([r.used_kv for r in rows], jnp.float32),
+        jnp.asarray([r.used_conc for r in rows], jnp.float32),
+        jnp.asarray([r.demand_tps for r in rows], jnp.float32),
+        jnp.float32(avg_slo), coeff=coeff)
+    return new_state, np.asarray(alloc), np.asarray(weights)
+
+
+def assert_matches_oracle(rows, capacity, avg_slo,
+                          coeff=PriorityCoefficients()):
+    new_state, alloc, weights = run_kernel(rows, capacity, avg_slo, coeff)
+    oracle_rows, o_alloc, o_weights = reference_tick(
+        rows, capacity, avg_slo, coeff)
+    burst = np.asarray(new_state.burst)
+    debt = np.asarray(new_state.debt)
+    for i, o in enumerate(oracle_rows):
+        ctx = f"row {i} ({o.service_class.value})"
+        assert weights[i] == pytest.approx(o_weights[i], rel=1e-4), ctx
+        assert alloc[i] == pytest.approx(o_alloc[i], rel=REL,
+                                         abs=ABS), ctx
+        assert burst[i] == pytest.approx(o.burst, rel=1e-4,
+                                         abs=1e-5), ctx
+        assert debt[i] == pytest.approx(o.debt, rel=1e-4, abs=1e-5), ctx
+    return oracle_rows, o_alloc
+
+
+class TestSinglePoolEquivalence:
+    @pytest.mark.parametrize("seed", range(6))
+    @pytest.mark.parametrize("scarcity", [0.2, 1.0, 5.0])
+    def test_mixed_fleet_matches_oracle(self, seed, scarcity):
+        """Random mixed-class fleets across scarcity regimes: scarcity
+        <1 starves protected baselines (emergency scaling), ~1 squeezes
+        elastic, >1 exercises work-conserving backfill."""
+        rng = np.random.RandomState(seed)
+        n = int(rng.randint(3, 40))
+        rows = random_rows(n, rng)
+        demand = sum(min(r.baseline_tps, r.demand_tps)
+                     for r in rows if r.bound)
+        capacity = max(10.0, scarcity * demand)
+        assert_matches_oracle(rows, capacity, avg_slo=10_000.0)
+
+    def test_debt_accrual_over_many_ticks(self):
+        """EWMA state threading: feed each tick's output state back in
+        for 25 ticks under sustained scarcity and compare trajectories."""
+        rng = np.random.RandomState(7)
+        rows = random_rows(12, rng)
+        capacity = 0.4 * sum(r.baseline_tps for r in rows if r.bound)
+        coeff = PriorityCoefficients()
+        state = state_from_rows(rows)
+        for t in range(25):
+            measured = jnp.asarray([r.measured_tps for r in rows],
+                                   jnp.float32)
+            new_state, alloc, _ = control_tick(
+                state, jnp.float32(capacity), measured,
+                jnp.asarray([r.used_kv for r in rows], jnp.float32),
+                jnp.asarray([r.used_conc for r in rows], jnp.float32),
+                jnp.asarray([r.demand_tps for r in rows], jnp.float32),
+                jnp.float32(10_000.0), coeff=coeff)
+            rows, o_alloc, _ = reference_tick(rows, capacity, 10_000.0,
+                                              coeff)
+            debt = np.asarray(new_state.debt)
+            burst = np.asarray(new_state.burst)
+            for i, o in enumerate(rows):
+                assert debt[i] == pytest.approx(o.debt, rel=1e-3,
+                                                abs=1e-4), (t, i)
+                assert burst[i] == pytest.approx(o.burst, rel=1e-3,
+                                                 abs=1e-4), (t, i)
+            # thread BOTH trajectories forward from their own state
+            state = dataclasses.replace(
+                state, burst=new_state.burst, debt=new_state.debt)
+
+    def test_zero_rows(self):
+        new_state, alloc, weights = run_kernel([], 100.0, 1000.0)
+        assert alloc.shape == (0,) and weights.shape == (0,)
+
+    def test_nonstandard_coefficients(self):
+        rng = np.random.RandomState(3)
+        rows = random_rows(10, rng)
+        coeff = PriorityCoefficients(alpha_slo=0.5, alpha_burst=3.0,
+                                     alpha_debt=1.0, gamma_debt=0.9,
+                                     gamma_burst=0.3, debt_max=5.0)
+        assert_matches_oracle(rows, 500.0, 2000.0, coeff)
+
+
+class TestTokenPoolOnControlPlane:
+    """The live TokenPool must produce oracle-equal ticks: gather the
+    pool's own tick inputs, run BOTH paths, and keep driving the pool
+    with the kernel output (the production flow)."""
+
+    def _mkpool(self, tps=160.0):
+        spec = PoolSpec(name="p", model="m",
+                        scaling=ScalingBounds(1, 2),
+                        per_replica=Resources(tps, 64 * (1 << 20), 16.0))
+        pool = TokenPool(spec)
+        mix = [("d", ServiceClass.DEDICATED, 30.0, 200.0),
+               ("g", ServiceClass.GUARANTEED, 50.0, 500.0),
+               ("e1", ServiceClass.ELASTIC, 60.0, 1000.0),
+               ("e2", ServiceClass.ELASTIC, 40.0, 30000.0),
+               ("s", ServiceClass.SPOT, 0.0, 30000.0),
+               ("pe", ServiceClass.PREEMPTIBLE, 0.0, 30000.0)]
+        for name, klass, tps_e, slo in mix:
+            pool.add_entitlement(EntitlementSpec(
+                name=name, tenant_id=name, pool="p",
+                qos=QoS(service_class=klass, slo_target_ms=slo),
+                baseline=Resources(tps_e, 0.0, 4.0)))
+        return pool
+
+    def test_tick_record_matches_oracle(self):
+        pool = self._mkpool()
+        rng = np.random.RandomState(11)
+        for t in range(1, 15):
+            for name in pool.entitlements:
+                pool.register_deny(name, float(rng.uniform(0, 120)),
+                                   low_priority=False)
+            inp = pool.begin_tick(float(t))
+            rows = [OracleRow(
+                service_class=pool.entitlements[n].qos.service_class,
+                bound=bool(np.asarray(inp.state.bound)[i]),
+                baseline_tps=float(np.asarray(inp.state.baseline_tps)[i]),
+                baseline_kv=float(np.asarray(inp.state.baseline_kv)[i]),
+                baseline_conc=float(
+                    np.asarray(inp.state.baseline_conc)[i]),
+                slo_ms=float(np.asarray(inp.state.slo_ms)[i]),
+                burst=float(np.asarray(inp.state.burst)[i]),
+                debt=float(np.asarray(inp.state.debt)[i]),
+                measured_tps=float(np.asarray(inp.measured_tps)[i]),
+                used_kv=float(np.asarray(inp.used_kv)[i]),
+                used_conc=float(np.asarray(inp.used_conc)[i]),
+                demand_tps=float(np.asarray(inp.demand_tps)[i]))
+                for i, n in enumerate(inp.names)]
+            o_rows, o_alloc, o_weights = reference_tick(
+                rows, inp.capacity_tps, inp.avg_slo_ms,
+                pool.spec.coefficients)
+            # production path: kernel → apply
+            from repro.core import control_plane
+            new_state, alloc, weights = control_plane.control_tick(
+                inp.state, jnp.float32(inp.capacity_tps),
+                inp.measured_tps, inp.used_kv, inp.used_conc,
+                inp.demand_tps, jnp.float32(inp.avg_slo_ms),
+                coeff=pool.spec.coefficients)
+            rec = pool.apply_tick(
+                float(t), inp.names, np.asarray(new_state.burst),
+                np.asarray(new_state.debt), np.asarray(alloc),
+                np.asarray(weights))
+            for i, n in enumerate(inp.names):
+                assert rec.allocations[n] == pytest.approx(
+                    o_alloc[i], rel=REL, abs=ABS), (t, n)
+                assert rec.priorities[n] == pytest.approx(
+                    o_weights[i], rel=1e-3), (t, n)
+                assert pool.status[n].debt == pytest.approx(
+                    o_rows[i].debt, rel=1e-3, abs=1e-4), (t, n)
+
+    def test_pool_tick_is_kernel_tick(self):
+        """pool.tick() must equal begin_tick + control_tick + apply_tick
+        run on an identically-driven twin pool."""
+        a, b = self._mkpool(), self._mkpool()
+        for t in range(1, 8):
+            for pool in (a, b):
+                pool.register_deny("e1", 100.0, low_priority=False)
+                pool.register_deny("s", 300.0, low_priority=False)
+            rec_a = a.tick(float(t))
+            inp = b.begin_tick(float(t))
+            from repro.core import control_plane
+            ns, alloc, w = control_plane.control_tick(
+                inp.state, jnp.float32(inp.capacity_tps),
+                inp.measured_tps, inp.used_kv, inp.used_conc,
+                inp.demand_tps, jnp.float32(inp.avg_slo_ms),
+                coeff=b.spec.coefficients)
+            rec_b = b.apply_tick(float(t), inp.names,
+                                 np.asarray(ns.burst),
+                                 np.asarray(ns.debt), np.asarray(alloc),
+                                 np.asarray(w))
+            assert rec_a.allocations == rec_b.allocations
+            assert rec_a.debts == rec_b.debts
+
+
+class TestMultiPoolBatchedEquivalence:
+    def _pool(self, name, n_ents, seed, tps=200.0,
+              coeff=PriorityCoefficients()):
+        spec = PoolSpec(name=name, model="m",
+                        scaling=ScalingBounds(1, 1),
+                        per_replica=Resources(tps, 1 << 30, 16.0),
+                        coefficients=coeff)
+        pool = TokenPool(spec)
+        rng = np.random.RandomState(seed)
+        for i in range(n_ents):
+            klass = CLASSES[rng.randint(0, 5)]
+            base = (0.0 if klass in (ServiceClass.SPOT,
+                                     ServiceClass.PREEMPTIBLE)
+                    else float(rng.uniform(5, 60)))
+            pool.add_entitlement(EntitlementSpec(
+                name=f"{name}-e{i}", tenant_id=f"t{i}", pool=name,
+                qos=QoS(service_class=klass,
+                        slo_target_ms=float(rng.uniform(100, 30000))),
+                baseline=Resources(base, 0.0, 4.0)))
+        return pool
+
+    def test_batched_tick_equals_individual_ticks(self):
+        """Ragged pool widths (3/7/5 rows) through ONE vmapped dispatch
+        must equal each pool ticking alone — padding cannot leak."""
+        mgr_pools = [self._pool("pa", 3, 1), self._pool("pb", 7, 2),
+                     self._pool("pc", 5, 3)]
+        solo_pools = [self._pool("pa", 3, 1), self._pool("pb", 7, 2),
+                      self._pool("pc", 5, 3)]
+        mgr = PoolManager(mgr_pools)
+        rng = np.random.RandomState(9)
+        for t in range(1, 10):
+            demands = {}
+            for p in mgr_pools:
+                for n in p.entitlements:
+                    demands[n] = float(rng.uniform(0, 150))
+            for pools in (mgr_pools, solo_pools):
+                for p in pools:
+                    for n in p.entitlements:
+                        p.register_deny(n, demands[n],
+                                        low_priority=False)
+            recs = mgr.tick(float(t))
+            for solo in solo_pools:
+                rec_solo = solo.tick(float(t))
+                rec_mgr = recs[solo.spec.name]
+                for n in rec_solo.allocations:
+                    assert rec_mgr.allocations[n] == pytest.approx(
+                        rec_solo.allocations[n], rel=1e-5,
+                        abs=1e-4), (t, n)
+                    assert rec_mgr.debts[n] == pytest.approx(
+                        rec_solo.debts[n], rel=1e-5, abs=1e-6), (t, n)
+                    assert rec_mgr.priorities[n] == pytest.approx(
+                        rec_solo.priorities[n], rel=1e-5), (t, n)
+
+    def test_mixed_coefficient_groups(self):
+        """Pools with different (static-arg) coefficients tick in
+        separate kernel groups but one manager call."""
+        fast = PriorityCoefficients(gamma_debt=0.3)
+        mgr = PoolManager([self._pool("pa", 4, 1),
+                           self._pool("pb", 4, 2, coeff=fast)])
+        for name, pool in mgr.pools.items():
+            for n in pool.entitlements:
+                pool.register_deny(n, 100.0, low_priority=False)
+        recs = mgr.tick(1.0)
+        assert set(recs) == {"pa", "pb"}
+        assert all(len(r.allocations) == 4 for r in recs.values())
+
+    def test_vmapped_kernel_matches_oracle_per_pool(self):
+        """control_tick_pools vs reference_tick, pool by pool."""
+        rng = np.random.RandomState(42)
+        pools_rows = [random_rows(int(rng.randint(2, 12)), rng)
+                      for _ in range(4)]
+        caps = [float(rng.uniform(50, 800)) for _ in pools_rows]
+        slos = [float(rng.uniform(500, 20000)) for _ in pools_rows]
+        width = max(len(r) for r in pools_rows)
+
+        def padded(vals):
+            return jnp.stack([
+                jnp.concatenate([jnp.asarray(v, jnp.float32),
+                                 jnp.zeros(width - len(v), jnp.float32)])
+                for v in vals])
+
+        states = stack_states([state_from_rows(r) for r in pools_rows])
+        ns, alloc, weights = control_tick_pools(
+            states, jnp.asarray(caps, jnp.float32),
+            padded([[r.measured_tps for r in rows]
+                    for rows in pools_rows]),
+            padded([[r.used_kv for r in rows] for rows in pools_rows]),
+            padded([[r.used_conc for r in rows] for rows in pools_rows]),
+            padded([[r.demand_tps for r in rows] for rows in pools_rows]),
+            jnp.asarray(slos, jnp.float32))
+        alloc = np.asarray(alloc)
+        debt = np.asarray(ns.debt)
+        for k, rows in enumerate(pools_rows):
+            o_rows, o_alloc, _ = reference_tick(rows, caps[k], slos[k])
+            for i in range(len(rows)):
+                assert alloc[k, i] == pytest.approx(
+                    o_alloc[i], rel=REL, abs=ABS), (k, i)
+                assert debt[k, i] == pytest.approx(
+                    o_rows[i].debt, rel=1e-3, abs=1e-4), (k, i)
+            # padding rows stay inert
+            assert (alloc[k, len(rows):] == 0.0).all()
+
+    def test_pad_state_is_inert(self):
+        rows = random_rows(5, np.random.RandomState(0))
+        state = state_from_rows(rows)
+        padded = pad_state(state, 9)
+        assert padded.n_rows == 9
+        assert not np.asarray(padded.bound)[5:].any()

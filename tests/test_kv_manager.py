@@ -1,7 +1,12 @@
 """Paged KV block manager: allocation, extension, fragmentation-free
 reuse, χ accounting — plus hypothesis invariants."""
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r "
+           "requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.serving.kv_manager import KVBlockManager, OutOfPages
 

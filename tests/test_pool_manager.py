@@ -1,0 +1,245 @@
+"""PoolManager routing semantics: ordered routes, spill-over, outages,
+budget/latency-aware ordering, completion attribution — plus the
+multi-pool simulation scenario end-to-end."""
+import pytest
+
+from repro.core import (
+    EntitlementSpec,
+    PoolManager,
+    PoolSpec,
+    QoS,
+    Resources,
+    RouteEntry,
+    ScalingBounds,
+    ServiceClass,
+    TokenPool,
+)
+from repro.gateway import Gateway
+
+
+def mkpool(name, tps=1000.0, slots=4.0, bucket_window_s=1.0):
+    return TokenPool(PoolSpec(
+        name=name, model="m", scaling=ScalingBounds(1, 1),
+        per_replica=Resources(tps, float(1 << 30), slots),
+        default_max_tokens=64, bucket_window_s=bucket_window_s))
+
+
+def ent(name, pool, klass=ServiceClass.GUARANTEED, tps=500.0, conc=4.0):
+    return EntitlementSpec(
+        name=name, tenant_id="t", pool=pool,
+        qos=QoS(service_class=klass, slo_target_ms=500.0),
+        baseline=Resources(tps, 0.0, conc))
+
+
+def mkgateway(ent_tps_a=500.0, ent_tps_b=500.0, **gw_kwargs):
+    """Two 1000-tps pools; the entitlement baselines control the token
+    buckets (bucket window 1 s ⇒ initial budget == baseline tps)."""
+    mgr = PoolManager([mkpool("a"), mkpool("b")])
+    mgr.pool("a").add_entitlement(ent("prod@a", "a", tps=ent_tps_a))
+    mgr.pool("b").add_entitlement(ent("prod@b", "b", tps=ent_tps_b))
+    gw = Gateway(mgr, **gw_kwargs)
+    gw.register_route("key", [("a", "prod@a"), ("b", "prod@b")])
+    return gw
+
+
+class TestRouting:
+    def test_preferred_pool_admits(self):
+        gw = mkgateway()
+        r = gw.handle("key", "r1", 32, 32, now=0.0)
+        assert r.status == 200
+        assert r.pool == "a" and r.entitlement == "prod@a"
+        assert r.spill_hops == 0
+        assert "r1" in gw.manager.pool("a").in_flight
+
+    def test_unknown_key_401(self):
+        gw = mkgateway()
+        assert gw.handle("nope", "r1", 32, 32, now=0.0).status == 401
+
+    def test_spill_on_budget_exhaustion(self):
+        # pool a's bucket only funds one request; the second spills to b
+        gw = mkgateway(ent_tps_a=70.0)
+        r1 = gw.handle("key", "r1", 32, 32, now=0.0)
+        r2 = gw.handle("key", "r2", 32, 32, now=0.0)
+        assert (r1.pool, r2.pool) == ("a", "b")
+        assert r2.spill_hops == 1
+        assert float(gw.store.get("spills:key")) == 1.0
+
+    def test_spill_on_pool_outage(self):
+        gw = mkgateway()
+        gw.manager.pool("a").set_replicas(0)      # outage: a unavailable
+        r = gw.handle("key", "r1", 32, 32, now=0.0)
+        assert r.status == 200 and r.pool == "b"
+        assert r.spill_hops == 1                  # past the dead leg
+
+    def test_all_pools_deny_429_with_best_retry(self):
+        gw = mkgateway(ent_tps_a=1.0, ent_tps_b=1.0)  # nobody affords 64
+        r = gw.handle("key", "r1", 32, 32, now=0.0)
+        assert r.status == 429
+        assert r.reason == "token_budget"
+        assert r.retry_after_s is not None and r.retry_after_s > 0
+        assert float(gw.store.get("denials:prod@a")) == 1.0
+
+    def test_no_live_pool_is_pool_unavailable(self):
+        gw = mkgateway()
+        gw.manager.pool("a").set_replicas(0)
+        gw.manager.pool("b").set_replicas(0)
+        r = gw.handle("key", "r1", 32, 32, now=0.0)
+        assert r.status == 429
+        assert r.reason == "pool_unavailable"
+
+    def test_single_pool_legacy_api(self):
+        pool = mkpool("only")
+        pool.add_entitlement(ent("e", "only"))
+        gw = Gateway(pool)                        # bare TokenPool
+        gw.register_key("k", "e")
+        assert gw.resolve("k") == "e"
+        assert gw.pool is pool
+        r = gw.handle("k", "r1", 16, 16, now=0.0)
+        assert r.status == 200 and r.pool == "only"
+
+    def test_headroom_policy_prefers_budget(self):
+        """With spill_policy="headroom", the leg with the most remaining
+        token-bucket budget wins even if it is not the declared first."""
+        gw = mkgateway(ent_tps_a=70.0, ent_tps_b=500.0,
+                       spill_policy="headroom")
+        r0 = gw.handle("key", "r0", 32, 32, now=0.0)
+        r1 = gw.handle("key", "r1", 32, 32, now=0.0)
+        # b has 500 tokens of headroom vs a's 70 → both land on b,
+        # and a (the declared preference) was never even tried
+        assert (r0.pool, r1.pool) == ("b", "b")
+        assert gw.manager.pool("a").status["prod@a"].denied_total == 0
+
+
+class TestCompletionAttribution:
+    def test_on_complete_settles_admitting_pool(self):
+        gw = mkgateway(ent_tps_a=70.0)
+        gw.handle("key", "r1", 32, 32, now=0.0)   # a
+        gw.handle("key", "r2", 32, 32, now=0.0)   # spilled to b
+        gw.on_complete("r2", 16, latency_s=0.5, now=1.0)
+        a, b = gw.manager.pool("a"), gw.manager.pool("b")
+        assert b.status["prod@b"].completed_total == 1
+        assert a.status["prod@a"].completed_total == 0
+        assert "r2" not in b.in_flight
+        # token accounting attributed to the ADMITTING entitlement
+        assert float(gw.store.get("tokens:prod@b")) == 16.0
+
+    def test_pool_on_complete_returns_record(self):
+        """Satellite: completion/eviction hand back the settled record
+        instead of requiring a read-before-call on pool.in_flight."""
+        pool = mkpool("p")
+        pool.add_entitlement(ent("e", "p"))
+        gw = Gateway(pool)
+        gw.register_key("k", "e")
+        gw.handle("k", "r1", 16, 16, now=0.0)
+        rec = pool.on_complete("r1", 8, now=1.0)
+        assert rec is not None and rec.entitlement == "e"
+        assert pool.on_complete("r1", 8, now=1.0) is None  # idempotent
+
+    def test_pool_on_evict_returns_record(self):
+        pool = mkpool("p")
+        pool.add_entitlement(ent("e", "p"))
+        gw = Gateway(pool)
+        gw.register_key("k", "e")
+        gw.handle("k", "r1", 16, 16, now=0.0)
+        rec = pool.on_evict("r1", now=1.0)
+        assert rec is not None and rec.entitlement == "e"
+        assert pool.status["e"].in_flight == 0
+        assert pool.on_evict("r1", now=1.0) is None
+
+    def test_gateway_on_failure_refunds(self):
+        gw = mkgateway()
+        gw.handle("key", "r1", 32, 32, now=0.0)
+        level_after_admit = gw.manager.pool("a").ledger.bucket(
+            "prod@a").level
+        gw.on_failure("r1", now=0.0)
+        level_after_evict = gw.manager.pool("a").ledger.bucket(
+            "prod@a").level
+        assert level_after_evict == pytest.approx(
+            level_after_admit + 64.0)
+
+
+class TestManagerLifecycle:
+    def test_duplicate_pool_rejected(self):
+        mgr = PoolManager([mkpool("a")])
+        with pytest.raises(ValueError):
+            mgr.adopt(mkpool("a"))
+
+    def test_add_entitlement_routes_by_spec(self):
+        mgr = PoolManager([mkpool("a"), mkpool("b")])
+        mgr.add_entitlement(ent("e", "b"))
+        assert "e" in mgr.pool("b").entitlements
+        assert "e" not in mgr.pool("a").entitlements
+
+    def test_route_requires_a_leg(self):
+        gw = mkgateway()
+        with pytest.raises(ValueError):
+            gw.register_route("k2", [])
+
+    def test_route_entries_accept_dataclass(self):
+        gw = mkgateway()
+        gw.register_route("k2", [RouteEntry("b", "prod@b")])
+        assert gw.handle("k2", "r1", 16, 16, now=0.0).pool == "b"
+
+
+class TestMultiPoolSimulation:
+    def test_outage_spill_scenario_end_to_end(self):
+        """ISSUE acceptance: 2+ pools, spill-over routing, one per-pool
+        outage, running end-to-end via PoolManager's batched tick."""
+        from repro.serving import (MultiPoolSimulator, PoolSite,
+                                   RequestState, Workload)
+        sim = MultiPoolSimulator(
+            workloads=[
+                Workload(name="prod",
+                         service_class=ServiceClass.GUARANTEED,
+                         slots=6, slo_ms=500.0, rate_rps=1.4,
+                         pools=("east", "west")),
+                Workload(name="batch", service_class=ServiceClass.SPOT,
+                         slots=8, slo_ms=30000.0, rate_rps=3.0,
+                         pools=("west", "east")),
+            ],
+            sites=[PoolSite("east", n_replicas=1, replica_slots=8,
+                            replica_tps=120.0),
+                   PoolSite("west", n_replicas=2, replica_slots=8,
+                            replica_tps=120.0)])
+        sim.at(15.0, "fail_replica", pool="east", idx=0)
+        sim.at(30.0, "recover_replica", pool="east", idx=0)
+        res = sim.run(45.0)
+
+        prod = res["per_workload"]["prod"]
+        # the guaranteed tenant rides out the outage via spill-over
+        assert prod["spilled"] > 0
+        assert prod["admitted_by_pool"].get("west", 0) > 0
+        assert prod["admitted_by_pool"].get("east", 0) > 0
+        unavailable = [r for r in sim.requests.values()
+                       if r.entitlement == "prod"
+                       and r.deny_reason == "pool_unavailable"]
+        assert not unavailable
+        # outage visible in east's capacity history, and both pools
+        # ticked through the batched path
+        east_caps = {h.capacity_tps
+                     for h in res["per_pool_history"]["east"]}
+        assert len(east_caps) >= 2
+        assert len(res["per_pool_history"]["west"]) > 30
+        # all admitted requests eventually completed or were in flight
+        done = [r for r in sim.requests.values()
+                if r.state == RequestState.FINISHED]
+        assert len(done) > 0
+
+    def test_failed_replica_requeues_on_same_pool(self):
+        from repro.serving import MultiPoolSimulator, PoolSite, Workload
+        sim = MultiPoolSimulator(
+            workloads=[Workload(name="e",
+                                service_class=ServiceClass.ELASTIC,
+                                slots=8, slo_ms=1000.0, rate_rps=2.0,
+                                pools=("p1", "p2"))],
+            sites=[PoolSite("p1", n_replicas=2, replica_slots=8,
+                            replica_tps=120.0),
+                   PoolSite("p2", n_replicas=1, replica_slots=8,
+                            replica_tps=120.0)])
+        sim.at(10.0, "fail_replica", pool="p1", idx=1)
+        res = sim.run(30.0)
+        from repro.serving import RequestState
+        reqs = [r for r in sim.requests.values() if r.arrival_s < 25]
+        finished = [r for r in reqs
+                    if r.state == RequestState.FINISHED]
+        assert len(finished) >= 0.7 * max(len(reqs), 1)

@@ -1,11 +1,20 @@
 """Property tests: the jit-compiled vectorized control plane must agree
-with the scalar reference implementation (hypothesis-driven)."""
+with the scalar reference implementation (hypothesis-driven).
+
+Deterministic (no-hypothesis) equivalence coverage for the SAME kernel
+— including the multi-pool batched tick — lives in
+``tests/test_control_plane.py`` and always runs."""
 import dataclasses
 
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r "
+           "requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (
     PriorityCoefficients,
