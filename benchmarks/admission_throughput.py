@@ -1,12 +1,24 @@
 """Control-plane throughput: the retained scalar ORACLE (paper-style
 per-entitlement Python loop) vs the unified vectorized tick that now
-drives ``TokenPool.tick`` — plus admission decisions/second and the
-multi-pool batched tick.
+drives ``TokenPool.tick`` — plus admission decisions/second (both the
+raw ``admit_quantum`` kernel and the full gateway request path) and
+the multi-pool batched tick.
 
-The headline row is ``tick_speedup_100k``: the unified tick must be
-≥10× the scalar oracle at 10^5 entitlements (it is usually 100×+)."""
+Headline rows:
+
+- ``tick_speedup_100k`` — the unified tick must be ≥10× the scalar
+  oracle at 10^5 entitlements (usually 100×+);
+- ``gateway_speedup_10000`` — ``Gateway.handle_quantum`` (ONE fused
+  kernel dispatch per quantum + batched scatter) must be ≥5× the
+  per-request scalar gateway loop at 10k requests per quantum.
+
+Pass ``out_json`` to ``main`` to dump the scalar-vs-quantum
+decisions/s trajectory as a ``BENCH_admission.json`` artifact
+(``benchmarks/run.py`` does; CI uploads it)."""
 from __future__ import annotations
 
+import json
+import os
 import time
 
 import jax
@@ -29,12 +41,7 @@ from repro.core import (
     reference_tick,
 )
 from repro.core.control_plane import state_from_rows
-from repro.core.vectorized import (
-    PoolArrays,
-    admit_quantum,
-    arrays_from_pool,
-    tick_batch,
-)
+from repro.core.vectorized import PoolArrays, admit_quantum
 
 
 def scalar_admission_rate(n_requests: int = 2000) -> float:
@@ -88,6 +95,49 @@ def vectorized_admission_rate(n_requests: int = 65536,
                         req_kv=req_kv, **args)
     out[0].block_until_ready()
     return n_requests / (time.perf_counter() - t0)
+
+
+def _bench_gateway(n_entitlements: int):
+    """One big pool of bound elastic tenants behind a gateway — the
+    §4.3 hot path at multi-tenant scale (one key per entitlement)."""
+    from repro.gateway import Gateway
+    pool = TokenPool(PoolSpec(
+        name="p", model="m", scaling=ScalingBounds(1, 1),
+        per_replica=Resources(1e9, 1e15, 1e6)))
+    gw = Gateway(pool)
+    for i in range(n_entitlements):
+        pool.add_entitlement(EntitlementSpec(
+            name=f"e{i}", tenant_id=f"t{i}", pool="p",
+            qos=QoS(ServiceClass.ELASTIC, 1000.0),
+            baseline=Resources(1e6, 0.0, 1e3)))
+        gw.register_key(f"k{i}", f"e{i}", pool="p")
+    return gw
+
+
+def gateway_admission_rates(n_requests: int, n_entitlements: int = 512
+                            ) -> tuple[float, float]:
+    """(scalar gateway loop, batched handle_quantum) decisions/s for
+    ONE scheduling quantum of ``n_requests`` — same workload, fresh
+    identical gateways, full bookkeeping on both paths."""
+    from repro.gateway import QuantumRequest
+
+    gw = _bench_gateway(n_entitlements)
+    t0 = time.perf_counter()
+    for i in range(n_requests):
+        gw.handle(f"k{i % n_entitlements}", f"r{i}", 64, 64, now=0.0)
+    scalar = n_requests / (time.perf_counter() - t0)
+
+    mkreqs = lambda tag: [                                  # noqa: E731
+        QuantumRequest(f"k{i % n_entitlements}", f"{tag}{i}", 64, 64)
+        for i in range(n_requests)]
+    _bench_gateway(n_entitlements).handle_quantum(
+        mkreqs("warm"), now=0.0)        # compile the padded-size kernel
+    gw_q = _bench_gateway(n_entitlements)
+    reqs = mkreqs("q")
+    t0 = time.perf_counter()
+    gw_q.handle_quantum(reqs, now=0.0)
+    quantum = n_requests / (time.perf_counter() - t0)
+    return scalar, quantum
 
 
 def _oracle_rows(n: int, seed: int = 0) -> list[OracleRow]:
@@ -155,7 +205,7 @@ def unified_tick_us(n_entitlements: int, n_pools: int = 1,
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def main(quick: bool = False) -> None:
+def main(quick: bool = False, out_json: str | None = None) -> None:
     n = 2_000 if quick else 100_000
     n_big = 10_000 if quick else 1_000_000
     s = scalar_admission_rate(200 if quick else 2000)
@@ -165,6 +215,27 @@ def main(quick: bool = False) -> None:
         v = vectorized_admission_rate(65536, 4096)
     print(f"admission_scalar,{1e6 / s:.1f},decisions/s={s:.0f}")
     print(f"admission_vectorized,{1e6 / v:.3f},decisions/s={v:.0f}")
+
+    # -- the gateway request path: per-request scalar loop vs ONE
+    # handle_quantum call per batch (kernel + batched scatter)
+    quantum_sizes = [256, 1024] if quick else [1_000, 10_000, 100_000]
+    gw_ents = 64 if quick else 512
+    trajectory = []
+    for nq in quantum_sizes:
+        gs, gq = gateway_admission_rates(nq, n_entitlements=gw_ents)
+        speedup = gq / gs
+        trajectory.append({
+            "requests_per_quantum": nq,
+            "entitlements": gw_ents,
+            "scalar_gateway_dps": round(gs, 1),
+            "quantum_gateway_dps": round(gq, 1),
+            "speedup": round(speedup, 2),
+        })
+        note = ("smoke sizes; acceptance applies to the full run"
+                if quick else "acceptance: >=5x at 10000")
+        print(f"gateway_scalar_{nq},{1e6 / gs:.1f},decisions/s={gs:.0f}")
+        print(f"gateway_quantum_{nq},{1e6 / gq:.2f},decisions/s={gq:.0f}")
+        print(f"gateway_speedup_{nq},{speedup:.1f},x ({note})")
 
     t_oracle = scalar_tick_us(n)
     t_unified = unified_tick_us(n, reps=5 if quick else 20)
@@ -182,7 +253,29 @@ def main(quick: bool = False) -> None:
     print(f"tick_unified_{pools}pools_x_{label},{t_mp:.0f},"
           f"us_per_batched_tick ({t_mp / pools:.0f} us/pool)")
 
+    if out_json:
+        os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump({
+                "benchmark": "admission_throughput",
+                "quick": quick,
+                "admission_trajectory": trajectory,
+                "kernel": {
+                    "scalar_decide_dps": round(s, 1),
+                    "admit_quantum_dps": round(v, 1),
+                },
+                "tick": {
+                    "rows": n,
+                    "scalar_oracle_us": round(t_oracle, 1),
+                    "unified_us": round(t_unified, 1),
+                    "speedup": round(t_oracle / t_unified, 1),
+                },
+            }, f, indent=2)
+        print(f"# wrote {out_json}")
+
 
 if __name__ == "__main__":
     import sys
-    main(quick="--quick" in sys.argv)
+    args = [a for a in sys.argv[1:] if a != "--quick"]
+    main(quick="--quick" in sys.argv,
+         out_json=args[0] if args else None)

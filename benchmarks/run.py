@@ -46,7 +46,11 @@ def main(quick: bool = False) -> None:
     _section("admission throughput (scalar oracle vs unified tick)")
     try:
         from benchmarks.admission_throughput import main as adm
-        adm(quick=quick)
+        # BENCH_admission.json: scalar-vs-quantum gateway decisions/s
+        # trajectory — uploaded as a CI artifact
+        adm(quick=quick, out_json=os.path.join(
+            os.path.dirname(__file__), "artifacts",
+            "BENCH_admission.json"))
     except Exception:                              # noqa: BLE001
         failures.append("admission")
         traceback.print_exc()

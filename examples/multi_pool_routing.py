@@ -9,6 +9,15 @@ returning 429s, and the batched ``PoolManager.tick`` keeps both pools'
 entitlement accounting in one fused control-plane dispatch.  At t=40 s
 east recovers and traffic drains back.
 
+Admission itself runs on the BATCHED quantum path (the simulator's
+default): each step's arrivals go through ``Gateway.handle_quantum`` —
+one fused ``admit_quantum`` dispatch per (pool, leg round), spilled
+requests re-entering the next leg's batch.  Each pool decides its
+batch exactly as the scalar pipeline would; with the opposite-order
+routes below (east-first vs west-first), cross-pool spills settle in
+leg-round order rather than the sequential loop's interleaving
+(``admission_mode="scalar"`` to compare).
+
 Run:  PYTHONPATH=src python examples/multi_pool_routing.py
 """
 from repro.core import ServiceClass

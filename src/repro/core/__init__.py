@@ -42,6 +42,13 @@ from repro.core.priority import (
     service_gap,
 )
 from repro.core.state import CASConflict, StateStore
+from repro.core.vectorized import (
+    QuantumSnapshot,
+    admit_quantum,
+    arrays_from_pool,
+    quantum_snapshot,
+    running_min_live,
+)
 from repro.core.types import (
     AdmissionDecision,
     AdmissionRequest,
@@ -66,12 +73,13 @@ __all__ = [
     "ControlState", "DenyReason", "EntitlementSpec", "EntitlementState",
     "EntitlementStatus", "InFlight", "LeasePod", "Ledger", "OracleRow",
     "PoolManager", "PoolSpec", "PriorityCoefficients", "QoS",
-    "Resources", "RouteEntry", "ScaleDecision", "ScalingBounds",
-    "ServiceClass", "StateStore", "TickInputs", "TickRecord",
-    "TokenBucket", "TokenPool", "VirtualNode", "VirtualNodeProvider",
+    "QuantumSnapshot", "Resources", "RouteEntry", "ScaleDecision",
+    "ScalingBounds", "ServiceClass", "StateStore", "TickInputs",
+    "TickRecord", "TokenBucket", "TokenPool", "VirtualNode",
+    "VirtualNodeProvider", "admit_quantum", "arrays_from_pool",
     "as_manager", "burst_overconsumption", "burst_update",
     "control_tick", "control_tick_pools", "debt_update",
     "kv_bytes_per_token", "max_concurrency", "pool_average_slo",
-    "priority_breakdown", "priority_weight", "reference_tick",
-    "service_gap", "waterfill",
+    "priority_breakdown", "priority_weight", "quantum_snapshot",
+    "reference_tick", "running_min_live", "service_gap", "waterfill",
 ]

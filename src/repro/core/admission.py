@@ -18,6 +18,14 @@ backend.  Checks run in order; a failing check short-circuits:
 Rejections produce HTTP-429 semantics with a Retry-After hint derived
 from the token bucket refill time (budget denials) or a class-scaled
 backoff (priority denials).
+
+This scalar pipeline is the per-request fallback and the DECISION
+ORACLE for the batched hot path: ``vectorized.admit_quantum`` replays
+these five checks for a whole scheduling quantum in one fused
+dispatch (``Gateway.handle_quantum``), and
+``tests/test_admit_quantum.py`` / ``tests/test_gateway_quantum.py``
+pin the two decision-identical — any semantic change here must be
+mirrored in the kernel.
 """
 from __future__ import annotations
 

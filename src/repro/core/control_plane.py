@@ -262,28 +262,32 @@ def bucket_width(n_rows: int) -> int:
     return max(1, 1 << (max(n_rows, 1) - 1).bit_length())
 
 
+def pad_rows(x: jax.Array, n_rows: int, fill=0) -> jax.Array:
+    """Right-pad a row vector to ``n_rows`` (the single source of the
+    padding idiom — ``pad_state``, ``PoolManager.tick`` and the
+    gateway's quantum batches all bucket through this)."""
+    n = x.shape[0]
+    if n == n_rows:
+        return x
+    return jnp.concatenate(
+        [x, jnp.full((n_rows - n,), fill, dtype=x.dtype)])
+
+
 def pad_state(state: ControlState, n_rows: int) -> ControlState:
     """Right-pad a state to ``n_rows`` with inert rows: unbound, zero
     baselines, class 0.  Unbound rows are excluded from every allocation
     mask and their EWMAs see zero inputs, so they stay identically zero."""
-    n = state.n_rows
-    if n == n_rows:
+    if state.n_rows == n_rows:
         return state
-    pad = n_rows - n
-
-    def padded(x, fill=0):
-        return jnp.concatenate(
-            [x, jnp.full((pad,), fill, dtype=x.dtype)])
-
     return ControlState(
-        class_code=padded(state.class_code),
-        bound=padded(state.bound, False),
-        baseline_tps=padded(state.baseline_tps),
-        baseline_kv=padded(state.baseline_kv),
-        baseline_conc=padded(state.baseline_conc),
-        slo_ms=padded(state.slo_ms, 1.0),
-        burst=padded(state.burst),
-        debt=padded(state.debt),
+        class_code=pad_rows(state.class_code, n_rows),
+        bound=pad_rows(state.bound, n_rows, False),
+        baseline_tps=pad_rows(state.baseline_tps, n_rows),
+        baseline_kv=pad_rows(state.baseline_kv, n_rows),
+        baseline_conc=pad_rows(state.baseline_conc, n_rows),
+        slo_ms=pad_rows(state.slo_ms, n_rows, 1.0),
+        burst=pad_rows(state.burst, n_rows),
+        debt=pad_rows(state.debt, n_rows),
     )
 
 

@@ -106,6 +106,28 @@ class Ledger:
     def bucket(self, entitlement: str) -> TokenBucket:
         return self._buckets[entitlement]
 
+    def peek_level(self, entitlement: str, rate_tps: float,
+                   now: float) -> float:
+        """Level the bucket WOULD have after a refill at ``now`` — pure
+        read: no bucket is created and no refill clock advances.  For an
+        entitlement with no bucket yet, this is the full initial level
+        ``ensure`` would create.  Snapshotting code (the batched
+        admission quantum) uses this so observing a pool never mutates
+        it."""
+        b = self._buckets.get(entitlement)
+        if b is None:
+            return rate_tps * self.burst_window_s
+        dt = max(0.0, now - b.last_refill_s)
+        return min(b.capacity(), b.level + dt * b.rate_tps)
+
+    def drop(self, entitlement: str) -> None:
+        """Remove an entitlement's bucket and any outstanding charges
+        (entitlement teardown — the bucket must stop refilling)."""
+        self._buckets.pop(entitlement, None)
+        for rid in [rid for rid, ch in self._charges.items()
+                    if ch.entitlement == entitlement]:
+            del self._charges[rid]
+
     def set_rate(self, entitlement: str, rate_tps: float, now: float) -> None:
         self.ensure(entitlement, rate_tps, now).set_rate(rate_tps, now)
 
@@ -115,6 +137,28 @@ class Ledger:
             return False
         self._charges[charge.request_id] = charge
         return True
+
+    def charge_batch(self, charges: list[Charge], now: float
+                     ) -> list[bool]:
+        """Apply one admission quantum's charges in order: each bucket
+        refills ONCE (all charges share ``now``, so per-charge refills
+        are no-ops after the first) and every charge still re-checks
+        affordability — the ledger stays authoritative even if the
+        caller pre-validated on a snapshot."""
+        refilled: set[str] = set()
+        out = []
+        for ch in charges:
+            b = self._buckets[ch.entitlement]
+            if ch.entitlement not in refilled:
+                b.refill(now)
+                refilled.add(ch.entitlement)
+            if b.level >= ch.charged_tokens:
+                b.level -= ch.charged_tokens
+                self._charges[ch.request_id] = ch
+                out.append(True)
+            else:
+                out.append(False)
+        return out
 
     def settle(self, request_id: str, actual_output_tokens: int,
                now: float) -> float:

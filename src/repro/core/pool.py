@@ -199,10 +199,24 @@ class TokenPool:
         self._rows_dirty = True
         return st.state
 
-    def remove_entitlement(self, name: str) -> None:
+    def remove_entitlement(self, name: str, now: float = 0.0) -> None:
+        """Tear down an entitlement COMPLETELY.  Every piece of state
+        keyed by the name must go: surviving in-flight records would
+        make a later ``on_complete``/``on_evict`` KeyError on the
+        missing status row, a surviving ledger bucket would keep
+        refilling a dead tenant's budget, and surviving demand-window
+        keys would leak into every future ``TickRecord.demand_tps``."""
         self.provider.delete(f"lease-{name}")
+        # evict in-flight requests first (status row must still exist):
+        # charges are refunded, then the whole bucket is dropped anyway
+        for rid in [r.request_id for r in self.in_flight.values()
+                    if r.entitlement == name]:
+            self.on_evict(rid, now)
         self.entitlements.pop(name, None)
         self.status.pop(name, None)
+        self.ledger.drop(name)
+        self._demand_window.pop(name, None)
+        self._demand_tps.pop(name, None)
         self._rows_dirty = True
 
     def expire_entitlements(self, now: float) -> None:
@@ -249,6 +263,25 @@ class TokenPool:
         self.in_flight[rec.request_id] = rec
         self._demand_window[rec.entitlement] = (
             self._demand_window.get(rec.entitlement, 0.0) + demand_tokens)
+
+    def register_admit_batch(self, recs: list[InFlight],
+                             demand_tokens: dict[str, float]) -> None:
+        """One scheduling quantum's admits in a single call — same
+        bookkeeping as :meth:`register_admit`, with the status row
+        resolved once per entitlement and the demand window bumped once
+        per entitlement instead of once per request."""
+        st_cache: dict[str, EntitlementStatus] = {}
+        for rec in recs:
+            st = st_cache.get(rec.entitlement)
+            if st is None:
+                st = st_cache[rec.entitlement] = self.status[rec.entitlement]
+            st.in_flight += 1
+            st.kv_bytes_in_use += rec.kv_bytes
+            st.admitted_total += 1
+            self.in_flight[rec.request_id] = rec
+        for ent, tokens in demand_tokens.items():
+            self._demand_window[ent] = (
+                self._demand_window.get(ent, 0.0) + tokens)
 
     def register_deny(self, entitlement: str, demand_tokens: float,
                       low_priority: bool) -> None:

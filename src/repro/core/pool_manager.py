@@ -107,7 +107,20 @@ class PoolManager:
         the tiebreak.  Preference order breaks exact ties so the
         policy degrades to ``static`` on fresh pools.
         """
-        live = [e for e in entries if self.available(e.pool)]
+        return [e for _, e in self.route_order_indexed(
+            entries, input_tokens, max_tokens, now, policy=policy)]
+
+    def route_order_indexed(self, entries: list[RouteEntry],
+                            input_tokens: int, max_tokens: Optional[int],
+                            now: float, policy: str = "static",
+                            ) -> list[tuple[int, RouteEntry]]:
+        """:meth:`route_order`, but each leg carries its position in the
+        client's DECLARED route.  The gateway reports that position as
+        ``spill_hops`` — re-searching the declared route for the
+        admitting leg (``route.index``) would misattribute repeated
+        legs and, under ``headroom`` reordering, renumbered ones."""
+        live = [(i, e) for i, e in enumerate(entries)
+                if self.available(e.pool)]
         if policy == "static":
             return live
         if policy != "headroom":
@@ -133,7 +146,7 @@ class PoolManager:
             load = pool.pool_in_flight() / conc
             return (affordable, -bucket.level, load, pos)
 
-        return [e for _, e in sorted(enumerate(live), key=score)]
+        return sorted(live, key=score)
 
     # -- completion attribution -------------------------------------------------
     def find_pool_of(self, request_id: str) -> Optional[TokenPool]:
@@ -183,10 +196,8 @@ class PoolManager:
                 max(i.state.n_rows for i in inputs))
 
             def padded(xs):
-                return jnp.stack([
-                    jnp.concatenate([
-                        x, jnp.zeros(width - x.shape[0], x.dtype)])
-                    if x.shape[0] < width else x for x in xs])
+                return jnp.stack(
+                    [control_plane.pad_rows(x, width) for x in xs])
 
             states = control_plane.stack_states(
                 [i.state for i in inputs], width=width)

@@ -6,16 +6,20 @@ The tick math that used to live here is now THE control plane
 execute it directly.  This module keeps:
 
 - :func:`admit_quantum` — exact sequential admission replay for one
-  scheduling quantum as a jit-compiled ``lax.fori_loop`` (used for
-  offline replay / throughput benchmarking of the §4.3 pipeline);
-- :func:`arrays_from_pool` — bridge snapshotting a scalar ``TokenPool``
-  into array form;
+  scheduling quantum as a jit-compiled ``lax.fori_loop``: this IS the
+  gateway's default request path (``Gateway.handle_quantum`` batches
+  each (pool, leg) group through one dispatch);
+- :func:`arrays_from_pool` / :func:`quantum_snapshot` — bridges
+  snapshotting a scalar ``TokenPool`` into array form WITHOUT mutating
+  it;
 - aliases (``PoolArrays``, ``tick_batch``, ``waterfill_batch``, …) so
   existing imports keep working.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -69,20 +73,43 @@ def admit_quantum(arr: ControlState,
                   req_ent: jax.Array,            # i32 [M] entitlement row
                   req_tokens: jax.Array,         # f32 [M] input+max_tokens
                   req_kv: jax.Array,             # f32 [M] kv bytes needed
+                  pool_resident: jax.Array = None,  # i32 [] RESIDENT seqs
+                  req_live: Optional[jax.Array] = None,  # bool [M] padding
+                  weights: Optional[jax.Array] = None,   # f32 [N] Eq. 1
                   coeff: PriorityCoefficients = PriorityCoefficients(),
                   slack: float = 0.0,
-                  ) -> tuple[jax.Array, jax.Array]:
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """Exact sequential admission replay for one scheduling quantum.
 
     Requests are processed in array order (arrival order).  Returns
-    (admitted bool [M], deny_reason int [M]) with reason codes:
-    0=admitted, 1=not_bound, 2=concurrency, 3=token_budget, 4=low_priority.
-    State updates (bucket charge, in-flight increments, running-min
-    threshold) are applied between requests exactly as the scalar
-    controller does — but inside one fused XLA loop.
+    (admitted bool [M], deny_reason int [M], priority f32 [M]) with
+    reason codes: 0=admitted, 1=not_bound, 2=concurrency,
+    3=token_budget, 4=low_priority.  State updates (bucket charge,
+    in-flight increments, running-min threshold) are applied between
+    requests exactly as the scalar controller does — but inside one
+    fused XLA loop.
+
+    ``running_min_priority`` must be seeded with the LIVE priorities of
+    the entitlements that currently own in-flight requests (what
+    ``TokenPool.admission_threshold`` computes — use
+    :func:`running_min_live`), not the stale per-record snapshots;
+    ``pool_resident`` is the pool-wide count of RESIDENT sequences
+    (frozen within a quantum — admission does not place KV, dispatch
+    does) feeding the burst-class free-slot escape of check 3.
+    ``req_live=False`` marks padding rows: they are denied without
+    touching any state, so quanta can be padded to a power-of-two
+    length without retracing or perturbing the replay.  Pass the
+    snapshot's ``weights`` (``QuantumSnapshot.weights``) to reuse the
+    Eq. 1 row weights the ``running_min_priority`` seed was computed
+    from — the SAME array makes self-threshold ties bit-exact by
+    construction; when omitted they are recomputed here.
     """
     M = req_ent.shape[0]
-    weights = priority_batch(arr, pool_avg_slo, coeff)
+    if pool_resident is None:
+        # legacy callers: no resident count ⇒ no free-slot escape
+        pool_resident = jnp.asarray(pool_conc_cap, jnp.float32)
+    if weights is None:
+        weights = priority_batch(arr, pool_avg_slo, coeff)
 
     def body(i, state):
         (bucket, infl, kv, pool_infl, run_min, admitted, reason) = state
@@ -96,7 +123,16 @@ def admit_quantum(arr: ControlState,
         # spot with no explicit limit is bounded by pool concurrency
         is_spot = arr.class_code[e] == CLASS_CODES[ServiceClass.SPOT]
         r_eff = jnp.where((r_lim <= 0) & is_spot, pool_conc_cap, r_lim)
-        ok_conc = (r_eff <= 0) | (infl[e] < r_eff)
+        # Burst-capable classes (Table 1) may exceed r_e while the pool
+        # has idle decode slots and nobody is waiting — the concurrency
+        # dimension of work-conserving backfill (scalar check 3's
+        # BURST_CLASSES escape; the overage then raises b_e and lowers
+        # their priority).  Resident counts are frozen within a quantum,
+        # but contention evolves with the admitted count below.
+        burst_escape = (_BURSTOK[arr.class_code[e]]
+                        & (pool_resident < pool_conc_cap)
+                        & ~(pool_infl > pool_conc_cap))
+        ok_conc = (r_eff <= 0) | (infl[e] < r_eff) | burst_escape
         ok_budget = bucket[e] >= tok
         chi = arr.baseline_kv[e]
         ok_kv = (chi <= 0) | (kv[e] + kvn <= chi)
@@ -104,7 +140,8 @@ def admit_quantum(arr: ControlState,
         shielded = _PROTECTED[arr.class_code[e]]
         ok_prio = shielded | ~contended | (w > run_min * (1.0 - slack))
 
-        admit = ok_bound & ok_conc & ok_budget & ok_kv & ok_prio
+        live = (jnp.bool_(True) if req_live is None else req_live[i])
+        admit = live & ok_bound & ok_conc & ok_budget & ok_kv & ok_prio
         reason_i = jnp.where(
             ~ok_bound, 1,
             jnp.where(~ok_conc, 2,
@@ -127,14 +164,20 @@ def admit_quantum(arr: ControlState,
               running_min_priority,
               jnp.zeros((M,), dtype=bool), jnp.zeros((M,), dtype=jnp.int32))
     out = jax.lax.fori_loop(0, M, body, state0)
-    return out[5], out[6]
+    return out[5], out[6], weights[req_ent]
 
 
-def arrays_from_pool(pool) -> tuple[ControlState, jax.Array, jax.Array,
-                                    jax.Array]:
+def arrays_from_pool(pool, now: float = 0.0
+                     ) -> tuple[ControlState, jax.Array, jax.Array,
+                                jax.Array]:
     """Bridge: snapshot a scalar ``TokenPool`` into array form.
     Returns (ControlState, bucket_levels, in_flight, kv_in_use) with
-    rows in sorted-entitlement-name order (the pool's own row order)."""
+    rows in sorted-entitlement-name order (the pool's own row order).
+
+    Pure read: bucket levels are projected to ``now`` via
+    ``Ledger.peek_level`` — snapshotting neither creates buckets nor
+    advances refill clocks, so observing a pool cannot change any
+    later admission decision."""
     names = sorted(pool.entitlements)
     from repro.core.types import EntitlementState
     cc, bound, btps, bkv, bconc, slo, burst, debt = [], [], [], [], [], [], [], []
@@ -149,8 +192,9 @@ def arrays_from_pool(pool) -> tuple[ControlState, jax.Array, jax.Array,
         slo.append(e.qos.slo_target_ms)
         burst.append(s.burst)
         debt.append(s.debt)
-        levels.append(pool.ledger.ensure(
-            n, e.baseline.tokens_per_second, 0.0).level)
+        levels.append(pool.ledger.peek_level(
+            n, s.effective.tokens_per_second
+            or e.baseline.tokens_per_second, now))
         infl.append(s.resident)          # check 3 counts resident seqs
         kvu.append(s.kv_bytes_in_use)
     arr = ControlState(
@@ -166,3 +210,81 @@ def arrays_from_pool(pool) -> tuple[ControlState, jax.Array, jax.Array,
     return (arr, jnp.array(levels, dtype=jnp.float32),
             jnp.array(infl, dtype=jnp.int32),
             jnp.array(kvu, dtype=jnp.float32))
+
+
+def running_min_live(pool) -> float:
+    """Seed for ``running_min_priority``: the minimum LIVE priority
+    among entitlements that currently own in-flight requests — exactly
+    what ``TokenPool.admission_threshold`` evaluates when the pool is
+    contended (debt/burst evolve after admission, so per-record
+    priority snapshots would overstate the threshold).  +inf when the
+    pool is empty.
+
+    Scalar-oracle form (float64); :func:`quantum_snapshot` seeds the
+    kernel with the float32 equivalent instead so a request whose OWN
+    entitlement sets the threshold ties bit-exactly inside the kernel
+    (the strict ``>`` of check 5 must not flip on a 1-ulp precision
+    gap between the seed and the kernel's weight)."""
+    owners = {r.entitlement for r in pool.in_flight.values()}
+    ws = [pool.priority(e) for e in owners if e in pool.entitlements]
+    return min(ws) if ws else float("inf")
+
+
+def _running_min_f32(pool, weights: jax.Array,
+                     row_of: dict[str, int]) -> float:
+    """float32 twin of :func:`running_min_live`, evaluated on the SAME
+    Eq. 1 weight array handed to ``admit_quantum`` — one computation
+    serves both the seed and the kernel, so a request whose own
+    entitlement sets the threshold ties bit-exactly."""
+    owners = {r.entitlement for r in pool.in_flight.values()}
+    rows = sorted(row_of[e] for e in owners if e in row_of)
+    if not rows:
+        return float("inf")
+    return float(jnp.min(weights[jnp.asarray(rows, jnp.int32)]))
+
+
+@dataclasses.dataclass
+class QuantumSnapshot:
+    """Everything ``admit_quantum`` needs about one pool, snapshotted
+    once per (pool, leg) batch by the gateway.  ``row_of`` maps
+    entitlement name → row index in the arrays; ``weights`` holds the
+    Eq. 1 row weights (pass them back to ``admit_quantum`` so the
+    kernel and the ``running_min_priority`` seed share one array)."""
+
+    names: list[str]
+    row_of: dict[str, int]
+    state: ControlState
+    bucket_level: jax.Array
+    in_flight: jax.Array
+    kv_in_use: jax.Array
+    weights: jax.Array
+    pool_in_flight: int
+    pool_resident: int
+    pool_conc_cap: float
+    running_min_priority: float
+    pool_avg_slo: float
+
+
+def quantum_snapshot(pool, now: float) -> QuantumSnapshot:
+    """Snapshot a ``TokenPool`` for one batched admission quantum.
+    Pure read (see :func:`arrays_from_pool`)."""
+    state, levels, infl, kvu = arrays_from_pool(pool, now)
+    names = sorted(pool.entitlements)
+    row_of = {n: i for i, n in enumerate(names)}
+    avg_slo = float(pool.pool_avg_slo())
+    weights = priority_batch(state, jnp.float32(avg_slo),
+                             pool.spec.coefficients)
+    return QuantumSnapshot(
+        names=names,
+        row_of=row_of,
+        state=state,
+        bucket_level=levels,
+        in_flight=infl,
+        kv_in_use=kvu,
+        weights=weights,
+        pool_in_flight=pool.pool_in_flight(),
+        pool_resident=pool.total_resident(),
+        pool_conc_cap=float(pool.capacity().concurrency),
+        running_min_priority=_running_min_f32(pool, weights, row_of),
+        pool_avg_slo=avg_slo,
+    )

@@ -13,6 +13,19 @@ Responsibilities (paper §4.3):
     service (the callback that closes admission ↔ execution
     accounting), attributed to whichever pool admitted the request.
 
+Two request paths share these semantics:
+
+- :meth:`Gateway.handle` — one request through the scalar §4.3
+  pipeline (``AdmissionController.decide``); the per-request fallback
+  and the parity oracle for the batched path;
+- :meth:`Gateway.handle_quantum` — the DEFAULT hot path at scale: all
+  requests of one scheduling quantum are grouped per (pool, leg), each
+  pool is snapshotted once, and ONE fused ``admit_quantum`` dispatch
+  replays the §4.3 pipeline for the whole group; denials spill into
+  the next leg's batch, so routes keep their ``route_order``
+  semantics.  Requests are padded to a power-of-two per dispatch so
+  quantum-size churn does not retrace the kernel.
+
 State lives in the StateStore (Redis contract): key → route mapping and
 per-entitlement counters, so a real deployment can point this class at
 an actual Redis.
@@ -23,15 +36,30 @@ import dataclasses
 import json
 from typing import Optional, Sequence, Union
 
+import jax.numpy as jnp
+import numpy as np
+
 from repro.core import (
     AdmissionController,
     AdmissionRequest,
+    Charge,
     DenyReason,
+    InFlight,
     RouteEntry,
     StateStore,
     TokenPool,
 )
+from repro.core.control_plane import bucket_width, pad_rows, pad_state
 from repro.core.pool_manager import PoolOrManager, as_manager
+from repro.core.vectorized import admit_quantum, quantum_snapshot
+
+#: ``admit_quantum`` deny-reason codes → gateway deny reasons.
+_REASON_CODES = {
+    1: DenyReason.NOT_BOUND,
+    2: DenyReason.CONCURRENCY,
+    3: DenyReason.TOKEN_BUDGET,
+    4: DenyReason.LOW_PRIORITY,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -48,6 +76,42 @@ class GatewayResponse:
     #: (0 = preferred pool; >0 = request spilled past denied or
     #: unavailable higher-preference legs)
     spill_hops: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantumRequest:
+    """One request of a scheduling quantum (``Gateway.handle_quantum``)."""
+
+    api_key: str
+    request_id: str
+    input_tokens: int
+    max_tokens: Optional[int] = None     # None → each leg's pool default
+    kv_bytes_per_token: float = 0.0
+
+
+@dataclasses.dataclass
+class _Pending:
+    """Per-request routing state while a quantum is in flight."""
+
+    idx: int                             # position in the input quantum
+    req: QuantumRequest
+    legs: list[tuple[int, RouteEntry]]   # (declared position, leg)
+    leg_ptr: int = 0
+    first_reason: Optional[DenyReason] = None
+    first_priority: float = 0.0
+    best_retry: Optional[float] = None
+
+    def current(self) -> tuple[int, RouteEntry]:
+        return self.legs[self.leg_ptr]
+
+    def note_denial(self, reason: Optional[DenyReason], priority: float,
+                    retry: Optional[float]) -> None:
+        if self.first_reason is None:
+            self.first_reason = reason
+            self.first_priority = priority
+        if retry is not None:
+            self.best_retry = (retry if self.best_retry is None
+                               else min(self.best_retry, retry))
 
 
 class Gateway:
@@ -142,19 +206,18 @@ class Gateway:
         if not route:
             return GatewayResponse(status=401, request_id=request_id,
                                    reason="unknown_key")
-        legs = self.manager.route_order(list(route), input_tokens,
-                                        max_tokens, now,
-                                        policy=self.spill_policy)
+        legs = self.manager.route_order_indexed(
+            list(route), input_tokens, max_tokens, now,
+            policy=self.spill_policy)
         first_denial = None
         best_retry: Optional[float] = None
-        for leg in legs:
+        for hop, leg in legs:
             decision = self._controller(leg.pool).decide(AdmissionRequest(
                 entitlement=leg.entitlement, input_tokens=input_tokens,
                 max_tokens=max_tokens, arrival_s=now,
                 request_id=request_id,
                 kv_bytes_per_token=kv_bytes_per_token))
             if decision.admitted:
-                hop = route.index(leg)
                 self.store.incr(f"admits:{leg.entitlement}", 1.0, now)
                 if hop > 0:
                     self.store.incr(f"spills:{api_key}", 1.0, now)
@@ -168,9 +231,15 @@ class Gateway:
                 best_retry = (decision.retry_after_s if best_retry is None
                               else min(best_retry, decision.retry_after_s))
 
-        # every leg denied (or none was available)
-        ent0 = route[0].entitlement
-        self.store.incr(f"denials:{ent0}", 1.0, now)
+        # Every leg denied, or none was available.  The denial is
+        # attributed to the first leg actually TRIED — when the whole
+        # route is down nothing denied it, so the unroutable counter
+        # takes it instead of charging a pool that never saw the
+        # request.
+        if legs:
+            self.store.incr(f"denials:{legs[0][1].entitlement}", 1.0, now)
+        else:
+            self.store.incr(f"unroutable:{api_key}", 1.0, now)
         if first_denial is None:           # no live pool on the route
             return GatewayResponse(
                 status=429, request_id=request_id, retry_after_s=5.0,
@@ -181,6 +250,276 @@ class Gateway:
             reason=(first_denial.reason.value
                     if first_denial.reason else None),
             priority=first_denial.priority)
+
+    # -- batched request path (the scheduling-quantum hot path) -----------------
+    def handle_quantum(self, requests: Sequence[QuantumRequest],
+                       now: float) -> list[GatewayResponse]:
+        """Admit one scheduling quantum of requests through the fused
+        kernel — ONE ``admit_quantum`` dispatch per (pool, leg-round)
+        instead of five Python checks per request.
+
+        Round ``k`` groups every still-undecided request by the pool of
+        the ``k``-th leg of its ``route_order``; each pool is
+        snapshotted once (a pure read), its group replayed through the
+        kernel in arrival order, and the resulting charges/denials are
+        scattered back through the real ledger + pool bookkeeping.
+        Requests denied at round ``k`` re-enter round ``k+1`` with
+        their next leg.  Responses come back in input order.
+
+        Parity contract (pinned by ``tests/test_gateway_quantum.py``):
+        each pool decides its batch exactly as the scalar
+        :meth:`handle` pipeline would decide that arrival sequence, so
+        end-to-end decisions are identical to the sequential handle
+        loop whenever routes are single-leg or share one pool order
+        (prefixes of a common route — the typical deployment, where a
+        pool is only ever reached at one leg depth).  Route sets that
+        interleave pools in DIFFERENT orders are still served
+        deterministically, but leg-round batching admits a pool's
+        round-``k`` arrivals before another request's round-``k+1``
+        spill reaches it — where the sequential loop may interleave
+        the other way.  Likewise ``headroom`` spill rankings are
+        evaluated once at quantum start (per key + token shape), not
+        re-ranked between requests mid-quantum.
+        """
+        if len(requests) == 1:
+            # A one-request quantum replays the sequential walk exactly
+            # (per-pool batches of size one) — skip the snapshot +
+            # kernel dispatch and use the scalar pipeline directly.
+            q = requests[0]
+            return [self.handle(q.api_key, q.request_id, q.input_tokens,
+                                q.max_tokens, now,
+                                kv_bytes_per_token=q.kv_bytes_per_token)]
+        responses: list[Optional[GatewayResponse]] = [None] * len(requests)
+        # Routes are resolved once per distinct (key, token shape) at
+        # quantum start — within a quantum `now` is fixed, so a key's
+        # route (and its headroom ordering) is a constant.
+        route_cache: dict[tuple, Optional[list]] = {}
+        pending: list[_Pending] = []
+        for i, q in enumerate(requests):
+            ck = (q.api_key, q.input_tokens, q.max_tokens)
+            legs = route_cache.get(ck, False)
+            if legs is False:
+                route = self.route(q.api_key, now)
+                legs = None if route is None else \
+                    self.manager.route_order_indexed(
+                        list(route), q.input_tokens, q.max_tokens, now,
+                        policy=self.spill_policy)
+                route_cache[ck] = legs
+            if legs is None:
+                responses[i] = GatewayResponse(
+                    status=401, request_id=q.request_id,
+                    reason="unknown_key")
+                continue
+            pending.append(_Pending(idx=i, req=q, legs=list(legs)))
+
+        while pending:
+            # spills from different pools (and espec-miss skips) land in
+            # group order — restore arrival order so every pool batch
+            # replays its requests exactly as the scalar loop would
+            pending.sort(key=lambda p: p.idx)
+            groups: dict[str, list[_Pending]] = {}
+            for p in pending:
+                if p.leg_ptr >= len(p.legs):
+                    responses[p.idx] = self._finish_denied(p, now)
+                else:
+                    groups.setdefault(p.current()[1].pool, []).append(p)
+            pending = []
+            for pool_name, batch in groups.items():
+                pending.extend(self._admit_batch(pool_name, batch,
+                                                 responses, now))
+        return responses
+
+    def _finish_denied(self, p: _Pending, now: float) -> GatewayResponse:
+        """Route exhausted: the 429 (same attribution as ``handle``)."""
+        if p.legs:
+            self.store.incr(f"denials:{p.legs[0][1].entitlement}",
+                            1.0, now)
+        else:
+            self.store.incr(f"unroutable:{p.req.api_key}", 1.0, now)
+        if p.first_reason is None:         # no live pool on the route
+            return GatewayResponse(
+                status=429, request_id=p.req.request_id,
+                retry_after_s=5.0,
+                reason=DenyReason.POOL_UNAVAILABLE.value)
+        return GatewayResponse(
+            status=429, request_id=p.req.request_id,
+            retry_after_s=p.best_retry, reason=p.first_reason.value,
+            priority=p.first_priority)
+
+    def _admit_batch(self, pool_name: str, batch: list[_Pending],
+                     responses: list, now: float) -> list[_Pending]:
+        """One fused kernel dispatch for one pool's leg-round group;
+        scatters results into ``responses`` / pool state and returns
+        the requests that spill into the next round."""
+        pool = self.manager.pool(pool_name)
+        snap = quantum_snapshot(pool, now)
+        spilled: list[_Pending] = []
+
+        # Legs naming an entitlement the pool has never heard of deny
+        # NOT_BOUND without touching pool state (the scalar pipeline's
+        # espec-is-None early out) — they skip the kernel entirely.
+        kernel_batch: list[_Pending] = []
+        rows, tokens, kvs, eff_max = [], [], [], []
+        for p in batch:
+            leg = p.current()[1]
+            row = snap.row_of.get(leg.entitlement)
+            if row is None:
+                p.note_denial(DenyReason.NOT_BOUND, 0.0, None)
+                p.leg_ptr += 1
+                spilled.append(p)
+                continue
+            mt = (p.req.max_tokens if p.req.max_tokens is not None
+                  else pool.spec.default_max_tokens)
+            kernel_batch.append(p)
+            rows.append(row)
+            tokens.append(float(p.req.input_tokens + mt))
+            kvs.append(float(p.req.input_tokens + mt)
+                       * p.req.kv_bytes_per_token)
+            eff_max.append(mt)
+        if not kernel_batch:
+            return spilled
+
+        m = len(kernel_batch)
+        width = bucket_width(m)
+        n_rows = snap.state.n_rows
+        row_width = bucket_width(n_rows)
+
+        def padvec(xs, dtype):
+            a = np.zeros(width, dtype)
+            a[:m] = xs
+            return a
+
+        live = np.zeros(width, bool)
+        live[:m] = True
+        admitted, reasons, req_w = admit_quantum(
+            pad_state(snap.state, row_width),
+            pad_rows(snap.bucket_level, row_width),
+            pad_rows(snap.in_flight, row_width),
+            pad_rows(snap.kv_in_use, row_width),
+            pool_in_flight=jnp.int32(snap.pool_in_flight),
+            pool_conc_cap=jnp.float32(snap.pool_conc_cap),
+            running_min_priority=jnp.float32(snap.running_min_priority),
+            pool_avg_slo=jnp.float32(snap.pool_avg_slo),
+            req_ent=padvec(rows, np.int32),
+            req_tokens=padvec(tokens, np.float32),
+            req_kv=padvec(kvs, np.float32),
+            pool_resident=jnp.int32(snap.pool_resident),
+            req_live=live,
+            weights=pad_rows(snap.weights, row_width),
+            coeff=pool.spec.coefficients,
+            slack=pool.spec.admission_slack)
+        admitted = np.asarray(admitted)[:m]
+        reasons = np.asarray(reasons)[:m]
+        req_w = np.asarray(req_w)[:m]
+
+        # -- scatter, pass 1: the quantum's charges, in replay order.
+        # Buckets are ensured once per entitlement; the ledger re-checks
+        # every charge (it stays authoritative if f32/f64 disagree on an
+        # exact budget boundary — those flip to budget denials below).
+        ledger = pool.ledger
+        ensured: set = set()
+        charge_js, charges = [], []
+        for j, p in enumerate(kernel_batch):
+            if not admitted[j]:
+                continue
+            ent = p.current()[1].entitlement
+            if ent not in ensured:
+                st = pool.status[ent]
+                ledger.ensure(
+                    ent, st.effective.tokens_per_second
+                    or pool.entitlements[ent].baseline.tokens_per_second,
+                    now)
+                ensured.add(ent)
+            charge_js.append(j)
+            charges.append(Charge(
+                request_id=p.req.request_id, entitlement=ent,
+                charged_tokens=float(tokens[j]),
+                input_tokens=p.req.input_tokens,
+                max_tokens=int(eff_max[j]), admitted_at=now))
+        charged = dict(zip(charge_js, ledger.charge_batch(charges, now)))
+
+        # -- scatter, pass 2a: admits.  Applied in ONE
+        # ``register_admit_batch`` and counter increments are
+        # aggregated — the StateStore and status dicts are hit once per
+        # distinct key per quantum, not per request.
+        n_admits: dict = {}
+        n_spills: dict = {}
+        admit_recs: list[InFlight] = []
+        demand: dict = {}
+        deny_js: list[int] = []
+        for j, p in enumerate(kernel_batch):
+            if not (admitted[j] and charged[j]):
+                deny_js.append(j)
+                continue
+            hop, leg = p.current()
+            ent = leg.entitlement
+            w = float(req_w[j])
+            admit_recs.append(InFlight(
+                request_id=p.req.request_id, entitlement=ent,
+                priority=w, kv_bytes=float(kvs[j]),
+                charged_tokens=int(tokens[j]), admitted_at=now))
+            demand[ent] = demand.get(ent, 0.0) + float(tokens[j])
+            n_admits[ent] = n_admits.get(ent, 0) + 1
+            if hop > 0:
+                key = p.req.api_key
+                n_spills[key] = n_spills.get(key, 0) + 1
+            responses[p.idx] = GatewayResponse(
+                status=200, request_id=p.req.request_id,
+                priority=w, pool=pool_name, entitlement=ent,
+                spill_hops=hop)
+        pool.register_admit_batch(admit_recs, demand)
+        for ent, k in n_admits.items():
+            self.store.incr(f"admits:{ent}", float(k), now)
+        for key, k in n_spills.items():
+            self.store.incr(f"spills:{key}", float(k), now)
+
+        # -- scatter, pass 2b: denials.  Runs AFTER the quantum's
+        # admits are registered, so Retry-After hints reflect the pool
+        # the retrying client will actually face (the scalar loop's
+        # hints see only the admits that preceded each request).
+        for j in deny_js:
+            p = kernel_batch[j]
+            ent = p.current()[1].entitlement
+            w = float(req_w[j])
+            code = 3 if admitted[j] else int(reasons[j])
+            reason = _REASON_CODES[code]
+            retry = self._deny_hint(pool, pool_name, ent, reason,
+                                    float(tokens[j]), w, now)
+            pool.register_deny(
+                ent, 0.0 if reason is DenyReason.NOT_BOUND
+                else float(tokens[j]),
+                low_priority=reason is DenyReason.LOW_PRIORITY)
+            p.note_denial(reason, w if reason is DenyReason.LOW_PRIORITY
+                          else 0.0, retry)
+            p.leg_ptr += 1
+            spilled.append(p)
+        return spilled
+
+    def _deny_hint(self, pool: TokenPool, pool_name: str, ent: str,
+                   reason: DenyReason, tokens: float, w: float,
+                   now: float) -> Optional[float]:
+        """Retry-After for a kernel denial — the scalar pipeline's
+        §4.3 hint formulas, evaluated on the post-quantum pool state
+        (all of this batch's admits applied): the hint describes what
+        a client retrying AFTER this quantum will face."""
+        ctrl = self._controller(pool_name)
+        if reason is DenyReason.NOT_BOUND:
+            return 5.0
+        if reason is DenyReason.CONCURRENCY:
+            return ctrl._concurrency_backoff(ent)
+        if reason is DenyReason.TOKEN_BUDGET:
+            espec = pool.entitlements[ent]
+            st = pool.status[ent]
+            bucket = pool.ledger.ensure(
+                ent, st.effective.tokens_per_second
+                or espec.baseline.tokens_per_second, now)
+            if not bucket.can_afford(tokens, now):
+                return min(pool.ledger.retry_after(ent, tokens, now),
+                           60.0)
+            return 1.0                       # KV headroom denial
+        threshold = (pool.admission_threshold()
+                     * (1.0 - pool.spec.admission_slack))
+        return ctrl._priority_backoff(w, threshold)
 
     # -- completion callback ----------------------------------------------------------
     def on_complete(self, request_id: str, actual_output_tokens: int,

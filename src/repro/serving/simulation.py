@@ -406,10 +406,23 @@ class MultiPoolSimulator:
                  dt: float = 0.02, seed: int = 0,
                  accounting_interval_s: float = 1.0,
                  bucket_window_s: float = 4.0,
-                 spill_policy: str = "static") -> None:
+                 spill_policy: str = "static",
+                 admission_mode: str = "quantum") -> None:
         from repro.core import PoolManager
         from repro.gateway import Gateway
 
+        if admission_mode not in ("quantum", "scalar"):
+            raise ValueError(f"unknown admission_mode {admission_mode!r};"
+                             " expected 'quantum' or 'scalar'")
+        #: "quantum" (default) batches each dt-step's arrivals through
+        #: ``Gateway.handle_quantum`` — one fused kernel dispatch per
+        #: (pool, leg round); "scalar" keeps the per-request
+        #: ``Gateway.handle`` pipeline.  Per pool both decide the same
+        #: arrival sequence identically; when workloads declare pools
+        #: in DIFFERENT orders, cross-pool spills settle in leg-round
+        #: order rather than the scalar loop's interleaving (see
+        #: ``Gateway.handle_quantum``).
+        self.admission_mode = admission_mode
         self.dt = dt
         self.workloads = {w.name: w for w in workloads}
         self.sites = {s.name: s for s in sites}
@@ -475,6 +488,7 @@ class MultiPoolSimulator:
         self._next_arrival: dict[str, float] = {
             w.name: w.start_s for w in workloads}
         self.tick_records: dict[str, list] = {s.name: [] for s in sites}
+        self._step_batch: list = []     # quantum mode: this step's batch
 
     # -- event API -----------------------------------------------------------
     def at(self, t: float, kind: str, **payload) -> None:
@@ -487,7 +501,7 @@ class MultiPoolSimulator:
     def _alive(self, pool: str) -> list[ReplicaSim]:
         return [r for r in self.replicas[pool] if r.alive]
 
-    def _arrive(self, w: Workload, now: float, attempt: int = 0) -> None:
+    def _new_request(self, w: Workload, now: float) -> Request:
         self._req_counter += 1
         rid = f"{w.name}-{self._req_counter}"
         req = Request(request_id=rid, entitlement=w.name,
@@ -495,9 +509,10 @@ class MultiPoolSimulator:
                       max_tokens=w.out_tokens, arrival_s=now,
                       api_key=w.name)
         self.requests[rid] = req
-        resp = self.gateway.handle(
-            w.name, rid, input_tokens=w.in_tokens,
-            max_tokens=w.out_tokens, now=now)
+        return req
+
+    def _apply_response(self, w: Workload, attempt: int, req: Request,
+                        resp, now: float) -> None:
         if resp.status != 200:
             req.state = RequestState.DENIED
             req.deny_reason = resp.reason
@@ -511,7 +526,31 @@ class MultiPoolSimulator:
         req.admitted_s = now
         req.pool = resp.pool
         req.spill_hops = resp.spill_hops
-        heapq.heappush(self.waiting[resp.pool], (-req.priority, now, rid))
+        heapq.heappush(self.waiting[resp.pool],
+                       (-req.priority, now, req.request_id))
+
+    def _arrive(self, w: Workload, now: float, attempt: int = 0) -> None:
+        """Scalar per-request admission (the parity oracle path)."""
+        req = self._new_request(w, now)
+        resp = self.gateway.handle(
+            w.name, req.request_id, input_tokens=w.in_tokens,
+            max_tokens=w.out_tokens, now=now)
+        self._apply_response(w, attempt, req, resp, now)
+
+    def _arrive_batch(self, batch: list, now: float) -> None:
+        """Quantum admission: ONE ``handle_quantum`` call for all of a
+        step's arrivals (new + due retries), in arrival order."""
+        from repro.gateway import QuantumRequest
+        if not batch:
+            return
+        reqs = [self._new_request(w, now) for w, _ in batch]
+        resps = self.gateway.handle_quantum(
+            [QuantumRequest(api_key=w.name, request_id=r.request_id,
+                            input_tokens=w.in_tokens,
+                            max_tokens=w.out_tokens)
+             for (w, _), r in zip(batch, reqs)], now)
+        for (w, attempt), req, resp in zip(batch, reqs, resps):
+            self._apply_response(w, attempt, req, resp, now)
 
     def _dispatch(self, now: float) -> None:
         for pname, waiting in self.waiting.items():
@@ -549,7 +588,12 @@ class MultiPoolSimulator:
         elif kind == "retry":
             w = self.workloads[payload["workload"]]
             if now < w.end_s:
-                self._arrive(w, now, attempt=payload["attempt"])
+                if self.admission_mode == "quantum":
+                    # retries join the step's quantum (ahead of new
+                    # arrivals — same order the scalar path processes)
+                    self._step_batch.append((w, payload["attempt"]))
+                else:
+                    self._arrive(w, now, attempt=payload["attempt"])
         else:
             raise ValueError(kind)
 
@@ -560,17 +604,24 @@ class MultiPoolSimulator:
                        for p in self.manager.pools.values())
         next_tick = interval
         steps = int(duration_s / self.dt)
+        quantum = self.admission_mode == "quantum"
         for _ in range(steps):
+            self._step_batch = []
             while self._events and self._events[0][0] <= now:
                 _, _, kind, payload = heapq.heappop(self._events)
                 self._handle_event(kind, payload, now)
             for w in self.workloads.values():
                 while (self._next_arrival[w.name] <= now
                        and w.start_s <= now < w.end_s):
-                    self._arrive(w, now)
+                    if quantum:
+                        self._step_batch.append((w, 0))
+                    else:
+                        self._arrive(w, now)
                     self._next_arrival[w.name] += 1.0 / w.rate_rps
                 if now >= w.end_s:
                     self._next_arrival[w.name] = 1e18
+            if quantum:
+                self._arrive_batch(self._step_batch, now)
             self._dispatch(now)
             self._advance_replicas(now)
             if now >= next_tick:

@@ -1,0 +1,274 @@
+"""Decision parity of the fused ``admit_quantum`` kernel with the
+scalar §4.3 ``AdmissionController`` pipeline — deterministic pins for
+the regimes where the seed kernel DISAGREED with the oracle (burst
+escape, live thresholds, snapshot mutation).  The hypothesis-randomized
+sweep of the same property lives in ``test_vectorized_equiv.py``."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Resources, ServiceClass
+
+#: scalar DenyReason → admit_quantum reason code (0 = admitted)
+REASON_TO_CODE = {
+    None: 0,
+    "entitlement_not_bound": 1,
+    "concurrency_limit": 2,
+    "token_budget": 3,
+    "low_priority": 4,
+}
+
+
+def mkpool_for_quantum(pool_conc=3.0, default_max_tokens=64,
+                       slack=0.0, pool_tps=1000.0):
+    from repro.core import PoolSpec, ScalingBounds, TokenPool
+    spec = PoolSpec(name="p", model="m", scaling=ScalingBounds(1, 1),
+                    per_replica=Resources(pool_tps, float(1 << 40),
+                                          pool_conc),
+                    default_max_tokens=default_max_tokens,
+                    admission_slack=slack, bucket_window_s=1.0)
+    return TokenPool(spec)
+
+
+def qent(name, klass, tps, conc, slo, kv=0.0):
+    from repro.core import EntitlementSpec, QoS
+    return EntitlementSpec(
+        name=name, tenant_id=name, pool="p",
+        qos=QoS(service_class=klass, slo_target_ms=slo),
+        baseline=Resources(tps, kv, conc))
+
+
+def seed_inflight(pool, name, queued, resident, rid_prefix="bg"):
+    """Place pre-existing requests on an entitlement: ``queued`` admitted
+    but waiting + ``resident`` holding decode slots.  Record priorities
+    are deliberately junk (0.0): the admission threshold must come from
+    LIVE priorities, never the per-record snapshots."""
+    from repro.core.pool import InFlight
+    for k in range(queued + resident):
+        rid = f"{rid_prefix}-{name}-{k}"
+        pool.register_admit(InFlight(rid, name, 0.0, 0.0, 64, 0.0), 64.0)
+        if k < resident:
+            pool.on_start(rid)
+
+
+def run_quantum_vs_scalar(pool, reqs, slack=0.0):
+    """Kernel replay on a snapshot vs sequential scalar decides on the
+    LIVE pool.  ``reqs``: list of (ent_name, input_tokens, max_tokens,
+    kv_bytes_per_token).  Returns (kernel, scalar) decision lists of
+    (admitted, reason_code)."""
+    from repro.core import AdmissionController, AdmissionRequest
+    from repro.core.vectorized import admit_quantum, quantum_snapshot
+
+    snap = quantum_snapshot(pool, 0.0)
+    rows, toks, kvs = [], [], []
+    for name, n_in, n_out, kv_bpt in reqs:
+        mt = (n_out if n_out is not None
+              else pool.spec.default_max_tokens)
+        rows.append(snap.row_of[name])
+        toks.append(float(n_in + mt))
+        kvs.append(float(n_in + mt) * kv_bpt)
+    admitted, reason, _ = admit_quantum(
+        snap.state, snap.bucket_level, snap.in_flight, snap.kv_in_use,
+        pool_in_flight=jnp.int32(snap.pool_in_flight),
+        pool_conc_cap=jnp.float32(snap.pool_conc_cap),
+        running_min_priority=jnp.float32(snap.running_min_priority),
+        pool_avg_slo=jnp.float32(snap.pool_avg_slo),
+        req_ent=jnp.array(rows, jnp.int32),
+        req_tokens=jnp.array(toks, jnp.float32),
+        req_kv=jnp.array(kvs, jnp.float32),
+        pool_resident=jnp.int32(snap.pool_resident),
+        weights=snap.weights,          # what the gateway passes
+        coeff=pool.spec.coefficients, slack=slack)
+    kernel = list(zip((bool(a) for a in np.asarray(admitted)),
+                      (int(r) for r in np.asarray(reason))))
+
+    ac = AdmissionController(pool)
+    scalar = []
+    for i, (name, n_in, n_out, kv_bpt) in enumerate(reqs):
+        d = ac.decide(AdmissionRequest(
+            entitlement=name, input_tokens=n_in, max_tokens=n_out,
+            arrival_s=0.0, request_id=f"r{i}",
+            kv_bytes_per_token=kv_bpt))
+        scalar.append((d.admitted, REASON_TO_CODE[
+            d.reason.value if d.reason else None]))
+    return kernel, scalar
+
+
+class TestAdmitQuantum:
+    def test_matches_scalar_controller(self):
+        """Sequential fori_loop replay == scalar controller decisions on
+        a frozen pool snapshot."""
+        pool = mkpool_for_quantum(pool_conc=3.0)
+        pool.add_entitlement(qent("a", ServiceClass.GUARANTEED,
+                                  500.0, 2, 200.0))
+        pool.add_entitlement(qent("b", ServiceClass.ELASTIC,
+                                  300.0, 2, 1000.0))
+        pool.add_entitlement(qent("c", ServiceClass.SPOT,
+                                  0.0, 2, 30000.0))
+        pool.ledger.set_rate("c", 100.0, 0.0)
+        pool.ledger.bucket("c").level = 400.0
+
+        names = sorted(pool.entitlements)
+        reqs = [(names[i % 3], 64, 64, 0.0) for i in range(8)]
+        kernel, scalar = run_quantum_vs_scalar(pool, reqs)
+        assert kernel == scalar
+
+
+class TestAdmitQuantumRegressions:
+    """Deterministic pins for the scalar/kernel decision-parity bugs
+    fixed in this PR — each would fail on the pre-fix kernel."""
+
+    def test_burst_class_over_re_admitted_with_free_slots(self):
+        """A burst-capable class over its r_e must be admitted while
+        the pool has idle slots and nobody waits (scalar check 3's
+        BURST_CLASSES escape; the old kernel always denied reason 2)."""
+        pool = mkpool_for_quantum(pool_conc=8.0)
+        pool.add_entitlement(qent("el", ServiceClass.ELASTIC,
+                                  400.0, 2, 1000.0))
+        seed_inflight(pool, "el", queued=0, resident=2)   # at r_e
+        assert pool.has_free_slots() and not pool.contended()
+
+        kernel, scalar = run_quantum_vs_scalar(
+            pool, [("el", 32, 32, 0.0)])
+        assert scalar == [(True, 0)]          # the oracle admits
+        assert kernel == scalar               # old kernel: (False, 2)
+
+    def test_guaranteed_over_re_still_denied(self):
+        """GUARANTEED is not burst-capable (Table 1): over r_e it denies
+        on concurrency even with free slots — the escape must not
+        over-open."""
+        pool = mkpool_for_quantum(pool_conc=8.0)
+        pool.add_entitlement(qent("g", ServiceClass.GUARANTEED,
+                                  400.0, 2, 200.0))
+        seed_inflight(pool, "g", queued=0, resident=2)
+        kernel, scalar = run_quantum_vs_scalar(pool, [("g", 32, 32, 0.0)])
+        assert scalar == [(False, 2)]
+        assert kernel == scalar
+
+    def test_burst_escape_closed_when_contended(self):
+        """The escape closes as soon as requests wait: burst classes
+        over r_e deny on concurrency in a contended pool even though
+        idle slots exist (they belong to the queue, not to bursts)."""
+        pool = mkpool_for_quantum(pool_conc=4.0)
+        pool.add_entitlement(qent("el", ServiceClass.ELASTIC,
+                                  400.0, 1, 1000.0))
+        pool.add_entitlement(qent("sp", ServiceClass.SPOT,
+                                  0.0, 0.0, 30000.0))
+        pool.ledger.set_rate("sp", 400.0, 0.0)
+        seed_inflight(pool, "el", queued=0, resident=1)   # at r_e
+        seed_inflight(pool, "sp", queued=3, resident=2)
+        assert pool.has_free_slots()          # 3 resident < 4 slots
+        assert pool.contended()               # 6 admitted > 4 slots
+        kernel, scalar = run_quantum_vs_scalar(
+            pool, [("el", 32, 32, 0.0)])
+        assert scalar == [(False, 2)]
+        assert kernel == scalar
+
+    def test_running_min_seeded_from_live_priorities(self):
+        """Check 5's threshold is the LIVE minimum priority among
+        in-flight owners (``admission_threshold``), not the stale
+        record snapshots and not +inf: a higher-priority burst request
+        must clear it, an equal-priority one must not (strict >)."""
+        from repro.core.vectorized import quantum_snapshot
+        pool = mkpool_for_quantum(pool_conc=2.0)
+        pool.add_entitlement(qent("el", ServiceClass.ELASTIC,
+                                  0.0, 0.0, 1000.0))
+        pool.add_entitlement(qent("sp", ServiceClass.SPOT,
+                                  0.0, 0.0, 30000.0))
+        pool.ledger.set_rate("el", 400.0, 0.0)
+        pool.ledger.set_rate("sp", 400.0, 0.0)
+        pool.ledger.bucket("el").level = 400.0
+        pool.ledger.bucket("sp").level = 400.0
+        seed_inflight(pool, "sp", queued=3, resident=0)
+        assert pool.contended()
+
+        snap = quantum_snapshot(pool, 0.0)
+        assert snap.running_min_priority == pytest.approx(
+            pool.priority("sp"))              # live seed, not inf/stale
+
+        kernel, scalar = run_quantum_vs_scalar(
+            pool, [("el", 32, 32, 0.0),       # elastic outranks spot
+                   ("sp", 32, 32, 0.0)])      # spot == own threshold
+        assert scalar == [(True, 0), (False, 4)]
+        assert kernel == scalar
+
+    def test_snapshot_does_not_mutate_pool(self):
+        """arrays_from_pool was creating buckets with last_refill_s=0 —
+        snapshotting must be a pure read that projects levels to
+        ``now`` without touching the ledger."""
+        from repro.core.vectorized import arrays_from_pool
+        pool = mkpool_for_quantum()
+        pool.add_entitlement(qent("a", ServiceClass.ELASTIC,
+                                  100.0, 2, 1000.0), now=5.0)
+        bucket = pool.ledger.bucket("a")
+        bucket.level = 20.0
+        _, levels, _, _ = arrays_from_pool(pool, now=5.5)
+        # projected half a second of refill, without advancing the clock
+        assert float(levels[0]) == pytest.approx(70.0)
+        assert (bucket.level, bucket.last_refill_s) == (20.0, 5.0)
+        # a missing bucket is reported at its would-be initial level but
+        # NOT created (the seed bug left a last_refill_s=0 bucket behind)
+        pool.ledger.drop("a")
+        _, levels2, _, _ = arrays_from_pool(pool, now=5.5)
+        assert float(levels2[0]) == pytest.approx(100.0)
+        with pytest.raises(KeyError):
+            pool.ledger.bucket("a")
+
+    def test_admission_slack_threading(self):
+        """slack > 0 softens the strict threshold exactly as the scalar
+        controller's (1 − slack) multiplier does."""
+        pool = mkpool_for_quantum(pool_conc=2.0, slack=0.5)
+        pool.add_entitlement(qent("s1", ServiceClass.SPOT,
+                                  0.0, 0.0, 30000.0))
+        pool.add_entitlement(qent("s2", ServiceClass.SPOT,
+                                  0.0, 0.0, 30000.0))
+        pool.ledger.set_rate("s1", 400.0, 0.0)
+        pool.ledger.set_rate("s2", 400.0, 0.0)
+        pool.ledger.bucket("s1").level = 400.0
+        pool.ledger.bucket("s2").level = 400.0
+        seed_inflight(pool, "s1", queued=3, resident=0)
+        assert pool.contended()
+        # equal-priority spot is denied at slack=0 (strict >) but
+        # admitted with slack (w > 0.5·w)
+        kernel, scalar = run_quantum_vs_scalar(
+            pool, [("s2", 32, 32, 0.0)], slack=0.5)
+        assert scalar == [(True, 0)]
+        assert kernel == scalar
+
+    def test_padding_rows_are_inert(self):
+        """req_live=False rows must not charge buckets, bump counts, or
+        move the running threshold."""
+        from repro.core.vectorized import admit_quantum, quantum_snapshot
+        pool = mkpool_for_quantum(pool_conc=4.0)
+        pool.add_entitlement(qent("a", ServiceClass.ELASTIC,
+                                  100.0, 4, 1000.0))
+        snap = quantum_snapshot(pool, 0.0)
+        # 1 real request + 3 padding rows aimed at the same entitlement
+        admitted, reason, _ = admit_quantum(
+            snap.state, snap.bucket_level, snap.in_flight,
+            snap.kv_in_use,
+            pool_in_flight=jnp.int32(0),
+            pool_conc_cap=jnp.float32(4.0),
+            running_min_priority=jnp.float32(np.inf),
+            pool_avg_slo=jnp.float32(snap.pool_avg_slo),
+            req_ent=jnp.zeros(4, jnp.int32),
+            req_tokens=jnp.full(4, 60.0, jnp.float32),
+            req_kv=jnp.zeros(4, jnp.float32),
+            pool_resident=jnp.int32(0),
+            req_live=jnp.array([True, False, False, False]))
+        assert list(np.asarray(admitted)) == [True, False, False, False]
+        # bucket holds 100 tokens: had the padding charged 60 each, a
+        # follow-up real request after the real charge would be denied
+        admitted2, _, _ = admit_quantum(
+            snap.state, snap.bucket_level - 60.0, snap.in_flight,
+            snap.kv_in_use,
+            pool_in_flight=jnp.int32(1),
+            pool_conc_cap=jnp.float32(4.0),
+            running_min_priority=jnp.float32(np.inf),
+            pool_avg_slo=jnp.float32(snap.pool_avg_slo),
+            req_ent=jnp.zeros(4, jnp.int32),
+            req_tokens=jnp.full(4, 30.0, jnp.float32),
+            req_kv=jnp.zeros(4, jnp.float32),
+            pool_resident=jnp.int32(0),
+            req_live=jnp.array([True, False, False, False]))
+        assert bool(np.asarray(admitted2)[0])

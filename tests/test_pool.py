@@ -277,3 +277,56 @@ class TestExpiry:
         assert pool.status["e"].state == EntitlementState.BOUND
         pool.tick(6.0)
         assert pool.status["e"].state == EntitlementState.EXPIRED
+
+
+class TestRemoveEntitlement:
+    """`remove_entitlement` must tear down EVERY piece of state keyed by
+    the name — the seed leaked the ledger bucket, the demand-window
+    keys, and any in-flight records (whose later completion callbacks
+    then KeyError'd on the missing status row)."""
+
+    def _pool_with_inflight(self):
+        from repro.core import Charge
+        from repro.core.pool import InFlight
+        pool = mkpool(tps=200.0)
+        pool.add_entitlement(ent("g1", ServiceClass.GUARANTEED, 80.0))
+        pool.add_entitlement(ent("g2", ServiceClass.GUARANTEED, 80.0))
+        # admit one request on g1 exactly as the §4.3 pipeline would
+        pool.ledger.charge(Charge("r1", "g1", 64.0, 32, 32, 0.0), 0.0)
+        pool.register_admit(InFlight("r1", "g1", 1.0, 128.0, 64, 0.0),
+                            64.0)
+        pool.on_start("r1")
+        return pool
+
+    def test_in_flight_records_settled(self):
+        pool = self._pool_with_inflight()
+        pool.remove_entitlement("g1", now=0.5)
+        assert "r1" not in pool.in_flight
+        # the old code left the record: on_complete then raised
+        # KeyError on pool.status["g1"]; now it is a clean no-op
+        assert pool.on_complete("r1", 16, now=1.0) is None
+        assert pool.on_evict("r1", now=1.0) is None
+        assert pool.pool_in_flight() == 0
+        assert pool.total_resident() == 0
+
+    def test_ledger_bucket_dropped(self):
+        pool = self._pool_with_inflight()
+        pool.remove_entitlement("g1", now=0.5)
+        with pytest.raises(KeyError):
+            pool.ledger.bucket("g1")     # no bucket left refilling
+
+    def test_demand_keys_leave_future_tick_records(self):
+        pool = self._pool_with_inflight()
+        pool.tick(1.0)
+        assert "g1" in pool.history[-1].demand_tps    # pre-removal
+        pool.remove_entitlement("g1", now=1.5)
+        rec = pool.tick(2.0)
+        assert "g1" not in rec.demand_tps
+        assert "g1" not in rec.allocations
+        assert "g2" in rec.demand_tps
+
+    def test_remove_without_inflight_still_clean(self):
+        pool = mkpool(tps=200.0)
+        pool.add_entitlement(ent("g1", ServiceClass.GUARANTEED, 80.0))
+        pool.remove_entitlement("g1")
+        assert pool.tick(1.0).demand_tps == {}

@@ -242,54 +242,73 @@ class TestTickBatch:
                 <= float(cap) * 1.01)
 
 
-class TestAdmitQuantum:
-    def test_matches_scalar_controller(self):
-        """Sequential fori_loop replay == scalar controller decisions on
-        a frozen pool snapshot."""
-        from repro.core import (AdmissionController, AdmissionRequest,
-                                EntitlementSpec, PoolSpec, QoS,
-                                ScalingBounds, TokenPool)
-        from repro.core.vectorized import admit_quantum, arrays_from_pool
+# Deterministic (always-run) parity coverage for the same kernel lives
+# in ``tests/test_admit_quantum.py`` — including the regression pins
+# for the burst-escape / live-threshold / snapshot-mutation fixes.
+from test_admit_quantum import (  # noqa: E402
+    mkpool_for_quantum as _mkpool_for_quantum,
+    qent as _qent,
+    run_quantum_vs_scalar as _run_quantum_vs_scalar,
+    seed_inflight as _seed_inflight,
+)
 
-        spec = PoolSpec(name="p", model="m", scaling=ScalingBounds(1, 1),
-                        per_replica=Resources(1000.0, 1 << 30, 3.0),
-                        default_max_tokens=64)
-        pool = TokenPool(spec)
+# value grids exactly representable in float32 so scalar (f64) and
+# kernel (f32) comparisons can only tie when the operands are identical
+_SLO_GRID = [125.0, 1000.0, 32000.0]
+_BURST_GRID = [0.0, 0.5, 1.5]
+_DEBT_GRID = [-0.125, 0.0, 0.5]
+_TPS_GRID = [0.0, 64.0, 256.0]
+_LEVEL_GRID = [0.0, 64.0, 192.0, 1024.0]
+_CHI_GRID = [0.0, 2048.0, 8192.0]
 
-        def ent(name, klass, tps, conc, slo):
-            return EntitlementSpec(
-                name=name, tenant_id=name, pool="p",
-                qos=QoS(service_class=klass, slo_target_ms=slo),
-                baseline=Resources(tps, 0.0, conc))
 
-        pool.add_entitlement(ent("a", ServiceClass.GUARANTEED, 500.0, 2, 200.0))
-        pool.add_entitlement(ent("b", ServiceClass.ELASTIC, 300.0, 2, 1000.0))
-        pool.add_entitlement(ent("c", ServiceClass.SPOT, 0.0, 2, 30000.0))
-        pool.ledger.set_rate("c", 100.0, 0.0)
-        pool.ledger.bucket("c").level = 400.0
+class TestAdmitQuantumParityRandomized:
+    """Hypothesis sweep of the regimes the deterministic test misses:
+    burst-over-r_e with free slots, contended pools with live
+    thresholds, KV exhaustion, admission slack — the kernel must make
+    the scalar §4.3 pipeline's decisions request for request."""
 
-        names = sorted(pool.entitlements)
-        arr, levels, infl, kvu = arrays_from_pool(pool)
-        # a quantum of 8 requests round-robining the entitlements
-        reqs = [(names[i % 3], 64, 64) for i in range(8)]
-        req_ent = jnp.array([names.index(e) for e, _, _ in reqs], jnp.int32)
-        req_tokens = jnp.array([float(i + o) for _, i, o in reqs], jnp.float32)
-        req_kv = jnp.zeros(len(reqs), jnp.float32)
+    @given(data=st.data())
+    @settings(max_examples=60, deadline=None, derandomize=True)
+    def test_decision_parity(self, data):
+        from repro.core import EntitlementState
 
-        admitted_vec, reasons_vec = admit_quantum(
-            arr, levels, infl, kvu,
-            pool_in_flight=jnp.int32(0),
-            pool_conc_cap=jnp.float32(3.0),
-            running_min_priority=jnp.float32(np.inf),
-            pool_avg_slo=jnp.float32(pool.pool_avg_slo()),
-            req_ent=req_ent, req_tokens=req_tokens, req_kv=req_kv,
-            coeff=spec.coefficients)
+        pool_conc = data.draw(st.sampled_from([2.0, 4.0, 8.0]),
+                              label="pool_conc")
+        slack = data.draw(st.sampled_from([0.0, 0.25]), label="slack")
+        pool = _mkpool_for_quantum(pool_conc=pool_conc, slack=slack,
+                                   pool_tps=4096.0)
 
-        ac = AdmissionController(pool)
-        scalar = []
-        for i, (e, n_in, n_out) in enumerate(reqs):
-            d = ac.decide(AdmissionRequest(
-                entitlement=e, input_tokens=n_in, max_tokens=n_out,
-                arrival_s=0.0, request_id=f"r{i}"))
-            scalar.append(d.admitted)
-        assert list(np.asarray(admitted_vec)) == scalar
+        classes = data.draw(st.lists(st.sampled_from(CLASSES),
+                                     min_size=3, max_size=3),
+                            label="classes")
+        names = [f"e{i}" for i in range(3)]
+        for i, (name, klass) in enumerate(zip(names, classes)):
+            pool.add_entitlement(_qent(
+                name, klass,
+                tps=data.draw(st.sampled_from(_TPS_GRID)),
+                conc=data.draw(st.sampled_from([0.0, 1.0, 2.0])),
+                slo=data.draw(st.sampled_from(_SLO_GRID)),
+                kv=data.draw(st.sampled_from(_CHI_GRID))))
+            st_ = pool.status[name]
+            st_.burst = data.draw(st.sampled_from(_BURST_GRID))
+            st_.debt = data.draw(st.sampled_from(_DEBT_GRID))
+            if data.draw(st.booleans(), label=f"degraded{i}"):
+                st_.state = EntitlementState.DEGRADED
+            bucket = pool.ledger.bucket(name)
+            bucket.level = data.draw(st.sampled_from(_LEVEL_GRID))
+            st_.kv_bytes_in_use = data.draw(
+                st.sampled_from([0.0, 1024.0]))
+            _seed_inflight(
+                pool, name,
+                queued=data.draw(st.integers(0, 3)),
+                resident=data.draw(st.integers(0, 2)))
+
+        reqs = [(data.draw(st.sampled_from(names)),
+                 data.draw(st.sampled_from([8, 32])),
+                 data.draw(st.sampled_from([None, 16, 64])),
+                 data.draw(st.sampled_from([0.0, 16.0])))
+                for _ in range(8)]
+
+        kernel, scalar = _run_quantum_vs_scalar(pool, reqs, slack=slack)
+        assert kernel == scalar
