@@ -1,0 +1,211 @@
+"""Experiment 3 — entitlement-driven autoscaling + cross-pool
+rebalancing (the paper's consistency story, beyond-paper at fleet
+scale).
+
+Scenario: "A coding assistant (guaranteed) and an analytics tenant
+(elastic) share pool *east*; a batch pipeline rides spot.  At t=20 s
+the analytics demand surges 4×.  At t=30 s — mid-surge — east loses
+two replicas to a node failure, and the replacement capacity takes
+``provision_lag_s`` to come up."
+
+What the closed control loop (admission → batched tick → plan_fleet →
+authorize/provision → admission) must show:
+
+  C1  the surge raises east's desired replicas (scale_up:demand) —
+      the SAME demand signal that admission uses (denied demand
+      included) drives provisioning;
+  C2  during the outage east is SCARCE (need > maxReplicas): the
+      starved elastic tenant accumulates debt and is MIGRATED to the
+      slack pool *west*, its debt carried across the move;
+  C3  guaranteed-class P99 stays bounded through surge + outage
+      (reservations + spill-over + rebalancing absorb the pressure);
+  C4  after the surge ends, cooldown hysteresis drains east back down
+      (scale-down, no flapping).
+
+Also benchmarked: one fused ``plan_fleet`` dispatch planning 8 / 64 /
+512 pools (the fleet-scale headline).  Pass ``out_json`` to dump
+``BENCH_autoscale.json`` (plan latency + surge P99 trajectory) —
+``benchmarks/run.py`` does; CI uploads it.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import FleetPlannerConfig, ServiceClass
+from repro.core.fleet import plan_fleet
+from repro.serving import MultiPoolSimulator, PoolSite, Workload
+
+
+def build(provision_lag_s: float = 3.0) -> MultiPoolSimulator:
+    workloads = [
+        Workload(name="assist", service_class=ServiceClass.GUARANTEED,
+                 slots=4, slo_ms=500.0, rate_rps=1.0, in_tokens=64,
+                 out_tokens=64, pools=("east", "west"), max_retries=2),
+        # the surging analytics tenant — entitled on east only; the
+        # REBALANCER (not a client route) moves it when east starves it
+        Workload(name="analytics", service_class=ServiceClass.ELASTIC,
+                 slots=8, slo_ms=2000.0, rate_rps=0.8, in_tokens=64,
+                 out_tokens=64, pools=("east",), max_retries=2),
+        Workload(name="batch", service_class=ServiceClass.SPOT,
+                 slots=4, slo_ms=30000.0, rate_rps=0.6, in_tokens=64,
+                 out_tokens=64, pools=("east",), max_retries=1),
+    ]
+    sim = MultiPoolSimulator(
+        workloads,
+        sites=[PoolSite("east", n_replicas=2, replica_slots=8,
+                        replica_tps=120.0, max_replicas=3),
+               PoolSite("west", n_replicas=1, replica_slots=8,
+                        replica_tps=120.0, max_replicas=3)],
+        autoscale=True,
+        provision_lag_s=provision_lag_s, drain_s=2.0,
+        planner_config=FleetPlannerConfig(
+            cooldown_ticks=5, debt_migrate_threshold=0.2,
+            starve_persistence_ticks=3, migrate_cooldown_ticks=15))
+    sim.at(20.0, "set_rate", workload="analytics", rate=3.2)  # 4× surge
+    sim.at(30.0, "fail_replica", pool="east", idx=1)
+    sim.at(30.0, "fail_replica", pool="east", idx=2)
+    sim.at(55.0, "recover_replica", pool="east", idx=1)
+    sim.at(55.0, "recover_replica", pool="east", idx=2)
+    sim.at(65.0, "set_rate", workload="analytics", rate=0.8)  # surge ends
+    return sim
+
+
+def windowed_p99(sim: MultiPoolSimulator, workload: str,
+                 windows: list[tuple[str, float, float]]) -> dict:
+    out = {}
+    for label, t0, t1 in windows:
+        e2es = [r.e2e for r in sim.requests.values()
+                if r.entitlement == workload and r.e2e is not None
+                and t0 <= r.arrival_s < t1]
+        out[label] = (float(np.percentile(e2es, 99)) if e2es
+                      else float("nan"))
+    return out
+
+
+def plan_latency_us(n_pools: int, reps: int = 50) -> float:
+    """One fused plan_fleet dispatch for ``n_pools`` pools (the
+    fleet-scale headline: 512 pools plan in one kernel call)."""
+    import jax.numpy as jnp
+    rng = np.random.RandomState(0)
+    f32 = lambda a: jnp.asarray(a, jnp.float32)          # noqa: E731
+    args = dict(
+        current=jnp.asarray(rng.randint(1, 8, n_pools), jnp.int32),
+        lo=jnp.ones(n_pools, jnp.int32),
+        hi=jnp.full(n_pools, 8, jnp.int32),
+        per_tps=f32(np.full(n_pools, 240.0)),
+        per_kv=f32(np.zeros(n_pools)),
+        per_conc=f32(np.full(n_pools, 16.0)),
+        res_tps=f32(rng.uniform(0, 960, n_pools)),
+        res_kv=f32(np.zeros(n_pools)),
+        res_conc=f32(rng.uniform(0, 32, n_pools)),
+        demand_tps=f32(rng.uniform(0, 2000, n_pools)),
+        ewma_prev=f32(rng.uniform(0, 2000, n_pools)),
+        seeded=jnp.ones(n_pools, bool),
+        low_ticks=jnp.zeros(n_pools, jnp.int32))
+    plan_fleet(**args)[0].block_until_ready()            # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = plan_fleet(**args)
+    out[0].block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(duration: float = 90.0) -> dict:
+    sim = build()
+    res = sim.run(duration)
+
+    east = sim.replica_timeline["east"]
+    west = sim.replica_timeline["west"]
+    peak_east = max((n for t, n in east if t < 30.0), default=0)
+    surge_scaled = any(n >= 3 for t, n in east if 20.0 <= t < 30.0)
+    west_scaled = max((n for _, n in west), default=0)
+    final_east = east[-1][1] if east else 0
+
+    migrations = res["migrations"]
+    debt_moves = [m for m in migrations if m.debt > 0.0]
+
+    windows = [("before", 5.0, 20.0), ("surge", 20.0, 30.0),
+               ("outage", 30.0, 55.0), ("after", 70.0, duration)]
+    p99 = windowed_p99(sim, "assist", windows)
+    scale_reasons = {}
+    for _, plan in sim.plans:
+        for d in plan.decisions.values():
+            scale_reasons[d.reason] = scale_reasons.get(d.reason, 0) + 1
+
+    return {
+        "p99_assist": p99,
+        "peak_east_before_outage": peak_east,
+        "surge_scaled_east": surge_scaled,
+        "west_peak": west_scaled,
+        "final_east": final_east,
+        "migrations": [
+            {"entitlement": m.entitlement, "src": m.src, "dst": m.dst,
+             "debt": round(m.debt, 4), "reason": m.reason}
+            for m in migrations],
+        "debt_carried_moves": len(debt_moves),
+        "scale_reasons": scale_reasons,
+        "per_workload": {
+            w: {k: s[k] for k in ("finished", "denied_total",
+                                  "e2e_p99")}
+            for w, s in res["per_workload"].items()},
+        "replica_timeline": {"east": east, "west": west},
+    }
+
+
+def main(duration: float = 90.0, out_json: str | None = None) -> None:
+    r = run(duration)
+    p99 = r["p99_assist"]
+    print("experiment3,metric,value,claim")
+    print(f"experiment3,p99_assist_before,{p99['before']:.2f},baseline")
+    print(f"experiment3,p99_assist_surge,{p99['surge']:.2f},bounded")
+    print(f"experiment3,p99_assist_outage,{p99['outage']:.2f},bounded")
+    print(f"experiment3,surge_scaled_east,{r['surge_scaled_east']},"
+          "True (scale_up:demand before the outage)")
+    print(f"experiment3,west_peak_replicas,{r['west_peak']},"
+          ">1 (rebalanced demand provisions west)")
+    print(f"experiment3,final_east_replicas,{r['final_east']},"
+          "scale-down after the surge")
+    print(f"experiment3,migrations,{len(r['migrations'])},>=1")
+    print(f"experiment3,debt_carried_moves,{r['debt_carried_moves']},"
+          ">=1 (debt preserved across the move)")
+    for m in r["migrations"]:
+        print(f"experiment3,migrated,{m['entitlement']}:"
+              f"{m['src']}->{m['dst']},debt={m['debt']} ({m['reason']})")
+    up = r["scale_reasons"].get("scale_up:demand", 0)
+    down = r["scale_reasons"].get("scale_down", 0)
+    print(f"experiment3,scale_up_demand_decisions,{up},>=1")
+    print(f"experiment3,scale_down_decisions,{down},>=1")
+
+    lat = [{"pools": n, "plan_us": round(plan_latency_us(n), 1)}
+           for n in (8, 64, 512)]
+    for row in lat:
+        print(f"experiment3,plan_fleet_{row['pools']}pools,"
+              f"{row['plan_us']},us_per_fused_plan")
+
+    if out_json:
+        os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
+        # an empty P99 window is NaN — not valid strict JSON; ship null
+        p99_json = {k: (None if np.isnan(v) else round(v, 3))
+                    for k, v in p99.items()}
+        with open(out_json, "w") as f:
+            json.dump({
+                "benchmark": "experiment3_autoscale",
+                "duration_s": duration,
+                "plan_latency": lat,
+                "surge_p99_trajectory": p99_json,
+                "migrations": r["migrations"],
+                "scale_reasons": r["scale_reasons"],
+                "replica_timeline": r["replica_timeline"],
+            }, f, indent=2)
+        print(f"# wrote {out_json}")
+
+
+if __name__ == "__main__":
+    import sys
+    args = [a for a in sys.argv[1:] if not a.startswith("--")]
+    main(duration=float(args[0]) if args else 90.0,
+         out_json=args[1] if len(args) > 1 else None)

@@ -3,6 +3,8 @@ benches.  Prints ``name,value,details`` CSV rows.
 
   experiment1   paper §5.2 Figs 2–4 (cross-class protection)
   experiment2   paper §5.3 Fig 5/6 + Table 2 (SLO fair share, debt)
+  experiment3   fleet autoscaling + cross-pool rebalancing (closed
+                control loop; plan_fleet latency at 8/64/512 pools)
   admission     control-plane throughput (scalar oracle vs unified tick)
   kernels       kernel/oracle micro-timings
   roofline      per-cell roofline table from dry-run artifacts (if
@@ -41,6 +43,21 @@ def main(quick: bool = False) -> None:
         e2(duration=60.0 if quick else 300.0)
     except Exception:                              # noqa: BLE001
         failures.append("experiment2")
+        traceback.print_exc()
+
+    _section("experiment3: fleet autoscaling + rebalancing")
+    try:
+        from benchmarks.experiment3_autoscale import main as e3
+        # BENCH_autoscale.json: plan_fleet latency (8/64/512 pools) +
+        # the surge P99 trajectory — uploaded as a CI artifact.  The
+        # scenario's event timeline (surge end 65 s, scale-down after
+        # cooldown) is fixed, so even --quick must run past it.
+        e3(duration=80.0 if quick else 90.0,
+           out_json=os.path.join(
+               os.path.dirname(__file__), "artifacts",
+               "BENCH_autoscale.json"))
+    except Exception:                              # noqa: BLE001
+        failures.append("experiment3")
         traceback.print_exc()
 
     _section("admission throughput (scalar oracle vs unified tick)")

@@ -10,12 +10,26 @@ Public API surface:
 - pool_manager: PoolManager (batched fleet tick + spill-over routing)
 - admission: AdmissionController (the §4.3 five-check pipeline)
 - virtual_node: VirtualNodeProvider (scheduler-as-admission, §4.1)
-- autoscaler: entitlement-driven capacity planning
+- autoscaler: entitlement-driven capacity planning (single-pool oracle)
+- fleet: FleetPlanner — one fused plan_fleet dispatch for the whole
+  fleet + cross-pool entitlement rebalancing with carried debt
 - vectorized: batched admission replay + control-plane bridges
 - ledger / state: token buckets and the Redis-contract state store
 """
 from repro.core.admission import AdmissionController
-from repro.core.autoscaler import Autoscaler, AutoscalerConfig, ScaleDecision
+from repro.core.autoscaler import (
+    Autoscaler,
+    AutoscalerConfig,
+    ScaleDecision,
+    replicas_for,
+)
+from repro.core.fleet import (
+    FleetPlan,
+    FleetPlanner,
+    FleetPlannerConfig,
+    RebalanceProposal,
+    plan_fleet,
+)
 from repro.core.control_plane import (
     ControlState,
     OracleRow,
@@ -25,6 +39,7 @@ from repro.core.control_plane import (
 )
 from repro.core.ledger import Charge, Ledger, TokenBucket
 from repro.core.pool import (
+    EntitlementMigration,
     InFlight,
     TickInputs,
     TickRecord,
@@ -70,16 +85,19 @@ from repro.core.virtual_node import LeasePod, VirtualNode, VirtualNodeProvider
 __all__ = [
     "AdmissionController", "AdmissionDecision", "AdmissionRequest",
     "Autoscaler", "AutoscalerConfig", "CASConflict", "Charge",
-    "ControlState", "DenyReason", "EntitlementSpec", "EntitlementState",
-    "EntitlementStatus", "InFlight", "LeasePod", "Ledger", "OracleRow",
-    "PoolManager", "PoolSpec", "PriorityCoefficients", "QoS",
-    "QuantumSnapshot", "Resources", "RouteEntry", "ScaleDecision",
+    "ControlState", "DenyReason", "EntitlementMigration",
+    "EntitlementSpec", "EntitlementState", "EntitlementStatus",
+    "FleetPlan", "FleetPlanner", "FleetPlannerConfig", "InFlight",
+    "LeasePod", "Ledger", "OracleRow", "PoolManager", "PoolSpec",
+    "PriorityCoefficients", "QoS", "QuantumSnapshot",
+    "RebalanceProposal", "Resources", "RouteEntry", "ScaleDecision",
     "ScalingBounds", "ServiceClass", "StateStore", "TickInputs",
     "TickRecord", "TokenBucket", "TokenPool", "VirtualNode",
     "VirtualNodeProvider", "admit_quantum", "arrays_from_pool",
     "as_manager", "burst_overconsumption", "burst_update",
     "control_tick", "control_tick_pools", "debt_update",
-    "kv_bytes_per_token", "max_concurrency", "pool_average_slo",
-    "priority_breakdown", "priority_weight", "quantum_snapshot",
-    "reference_tick", "running_min_live", "service_gap", "waterfill",
+    "kv_bytes_per_token", "max_concurrency", "plan_fleet",
+    "pool_average_slo", "priority_breakdown", "priority_weight",
+    "quantum_snapshot", "reference_tick", "replicas_for",
+    "running_min_live", "service_gap", "waterfill",
 ]

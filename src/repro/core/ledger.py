@@ -128,6 +128,36 @@ class Ledger:
                     if ch.entitlement == entitlement]:
             del self._charges[rid]
 
+    # -- migration (cross-pool entitlement rebalancing) ------------------------
+    def detach(self, entitlement: str
+               ) -> tuple[Optional[TokenBucket], list[Charge]]:
+        """Remove and RETURN an entitlement's bucket + outstanding
+        charges so they can be re-attached on another pool's ledger.
+        Unlike :meth:`drop`, nothing is forgotten: the accrued bucket
+        level and every admission-time charge (still owed a refund on
+        completion) travel with the entitlement."""
+        bucket = self._buckets.pop(entitlement, None)
+        charges = [ch for ch in self._charges.values()
+                   if ch.entitlement == entitlement]
+        for ch in charges:
+            del self._charges[ch.request_id]
+        return bucket, charges
+
+    def attach(self, entitlement: str, bucket: Optional[TokenBucket],
+               charges: list[Charge], now: float) -> None:
+        """Adopt a migrated bucket + charges.  The bucket keeps its
+        accrued level and refill rate; only the burst window is
+        re-based to THIS ledger's window (clamping the level if the
+        new capacity is smaller) — the target pool's TPM semantics
+        apply from the moment of the move."""
+        if bucket is not None:
+            bucket.refill(now)
+            bucket.burst_window_s = self.burst_window_s
+            bucket.level = min(bucket.level, bucket.capacity())
+            self._buckets[entitlement] = bucket
+        for ch in charges:
+            self._charges[ch.request_id] = ch
+
     def set_rate(self, entitlement: str, rate_tps: float, now: float) -> None:
         self.ensure(entitlement, rate_tps, now).set_rate(rate_tps, now)
 

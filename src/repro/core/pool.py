@@ -86,6 +86,25 @@ class TickInputs:
 
 
 @dataclasses.dataclass
+class EntitlementMigration:
+    """Everything one entitlement owns, detached from its pool and
+    ready to re-attach elsewhere (``PoolManager.migrate_entitlement``).
+
+    Invariants (documented in ``core.fleet``): the ledger bucket keeps
+    its accrued level and outstanding charges, the status keeps debt /
+    burst / usage counters, and in-flight records follow the
+    entitlement so completions settle on the NEW owner."""
+
+    espec: EntitlementSpec
+    status: EntitlementStatus
+    bucket: object                       # Optional[TokenBucket]
+    charges: list
+    in_flight: list
+    demand_window: float
+    demand_tps: float
+
+
+@dataclasses.dataclass
 class TickRecord:
     """Per-tick observability snapshot (drives the experiment figures)."""
 
@@ -157,6 +176,10 @@ class TokenPool:
         self._rows_dirty = True
         self._row_names: list[str] = []
         self._static_rows: Optional[dict[str, np.ndarray]] = None
+        # Replica count last AUTHORIZED by the fleet planner (None until
+        # a planner has run: the virtual node then still advertises the
+        # full entitleable ceiling).
+        self._authorized: Optional[int] = None
         # Entitleable capacity: what may ever be promised (maxReplicas).
         self.provider.create_node(spec.name, self.entitleable_capacity())
 
@@ -168,9 +191,77 @@ class TokenPool:
         """Runtime capacity from live replicas."""
         return self.spec.per_replica.scale(self.replicas)
 
-    def set_replicas(self, n: int) -> None:
-        """Autoscaler / failure-injection entry point."""
+    def set_replicas(self, n: int, planned: bool = False) -> list[str]:
+        """Autoscaler / failure-injection entry point.
+
+        ``planned=False`` (failure injection, recovery, the scalar
+        oracle) moves RUNTIME capacity only: the virtual node keeps its
+        promise ceiling, entitlements stay bound, and the scarcity
+        shows up as shrunken allocations + debt (paper Exp. 2 — an
+        outage must not unbind tenants).  ``planned=True`` (the fleet
+        planner) is a deliberate capacity decision: the promise ceiling
+        moves with it through :meth:`authorize_replicas`, preempting
+        the least-protected leases if the committed reservations no
+        longer fit.  Returns the preempted entitlement names (always
+        empty for unplanned changes)."""
         self.replicas = max(0, n)
+        if planned:
+            return self.authorize_replicas(n)
+        return []
+
+    def authorize_replicas(self, n: int) -> list[str]:
+        """Move the virtual node's promise ceiling to ``n`` replicas
+        (the fleet planner's decision).  A shrink below the committed
+        lease reservations preempts in reverse-protection order (the
+        §4.1 scheduler pass); a grow reschedules pending leases.
+        Entitlement states are re-synced from the lease outcomes —
+        preempted entitlements degrade, re-bound ones recover.
+        Returns the entitlement names whose leases were preempted."""
+        n = max(0, int(n))
+        self._authorized = n
+        preempted = self.provider.set_capacity(
+            self.spec.name, self.spec.per_replica.scale(n))
+        self._sync_lease_states()
+        prefix = "lease-"
+        return [name[len(prefix):] for name in preempted
+                if name.startswith(prefix)]
+
+    def _sync_lease_states(self) -> None:
+        """Reconcile entitlement Bound/Degraded states with the actual
+        lease bind outcomes after a virtual-node capacity change."""
+        for name, st in self.status.items():
+            if st.state not in (EntitlementState.BOUND,
+                                EntitlementState.DEGRADED):
+                continue
+            bound = self.provider.is_bound(f"lease-{name}")
+            st.state = (EntitlementState.BOUND if bound
+                        else EntitlementState.DEGRADED)
+
+    def reserved_baseline(self) -> Resources:
+        """Σ baselines the pool has promised to keep provisionable —
+        dedicated/guaranteed/elastic entitlements in Bound OR Degraded
+        state (a Degraded promise is precisely what the planner must
+        raise capacity for).  Spot/preemptible reserve nothing.  This
+        is the reserved floor of the scale policy (``core.autoscaler``
+        / ``core.fleet``)."""
+        from repro.core.types import PROTECTED_CLASSES
+        total = Resources.zero()
+        for name, espec in self.entitlements.items():
+            st = self.status[name]
+            if st.state not in (EntitlementState.BOUND,
+                                EntitlementState.DEGRADED):
+                continue
+            klass = espec.qos.service_class
+            if klass in PROTECTED_CLASSES or klass is ServiceClass.ELASTIC:
+                total = total + espec.baseline
+        return total
+
+    def demand_snapshot(self) -> dict[str, float]:
+        """Public copy of the per-entitlement demand EWMA (tok/s) the
+        accounting tick maintains — the same values the latest
+        ``TickRecord.demand_tps`` carries.  Planners read THIS, never
+        the private accounting dicts."""
+        return dict(self._demand_tps)
 
     # -- entitlement lifecycle --------------------------------------------------
     def add_entitlement(self, espec: EntitlementSpec, now: float = 0.0
@@ -217,7 +308,81 @@ class TokenPool:
         self.ledger.drop(name)
         self._demand_window.pop(name, None)
         self._demand_tps.pop(name, None)
+        # the freed reservation may have re-bound pending leases
+        self._sync_lease_states()
         self._rows_dirty = True
+
+    def detach_entitlement(self, name: str, now: float = 0.0
+                           ) -> EntitlementMigration:
+        """Detach an entitlement for migration to another pool
+        (``PoolManager.migrate_entitlement``).  Unlike
+        :meth:`remove_entitlement` nothing is torn down: the ledger
+        bucket (accrued level + outstanding charges), the status row
+        (debt, burst, usage counters), the in-flight records and the
+        demand signal all travel with the entitlement — only the lease
+        reservation is released here."""
+        if name not in self.entitlements:
+            raise KeyError(f"no entitlement {name!r} in pool "
+                           f"{self.spec.name!r}")
+        self.provider.delete(f"lease-{name}")
+        recs = [r for r in self.in_flight.values() if r.entitlement == name]
+        for r in recs:
+            del self.in_flight[r.request_id]
+        bucket, charges = self.ledger.detach(name)
+        mig = EntitlementMigration(
+            espec=self.entitlements.pop(name),
+            status=self.status.pop(name),
+            bucket=bucket, charges=charges, in_flight=recs,
+            demand_window=self._demand_window.pop(name, 0.0),
+            demand_tps=self._demand_tps.pop(name, 0.0))
+        # the freed reservation may have re-bound a previously
+        # preempted/pending lease — Degraded stickiness here would deny
+        # a now-bound tenant with NOT_BOUND until the next authorize
+        self._sync_lease_states()
+        self._rows_dirty = True
+        return mig
+
+    def attach_entitlement(self, mig: EntitlementMigration,
+                           now: float = 0.0) -> EntitlementState:
+        """Adopt a migrated entitlement: submit its lease on THIS
+        pool's virtual node (baseline reserve, same rule as
+        :meth:`add_entitlement`) and restore every piece of carried
+        state.  Debt is preserved verbatim — an underserved tenant
+        arrives at the new pool with the priority boost it is owed
+        (cross-pool debt, ROADMAP item 4)."""
+        espec = mig.espec
+        name = espec.name
+        if name in self.entitlements:
+            raise ValueError(f"entitlement {name!r} already in pool "
+                             f"{self.spec.name!r}")
+        espec.pool = self.spec.name
+        self.entitlements[name] = espec
+        st = mig.status
+        self.status[name] = st
+        reserve = (espec.baseline
+                   if espec.qos.service_class not in
+                   (ServiceClass.SPOT, ServiceClass.PREEMPTIBLE)
+                   else Resources.zero())
+        lease = LeasePod(
+            name=f"lease-{name}",
+            entitlement=name,
+            request=reserve,
+            protection_weight=prio.CLASS_WEIGHT[espec.qos.service_class],
+        )
+        bound = self.provider.submit(self.spec.name, lease)
+        st.state = (EntitlementState.BOUND if bound
+                    else EntitlementState.DEGRADED)
+        if mig.bucket is not None:
+            self.ledger.attach(name, mig.bucket, mig.charges, now)
+        else:
+            self.ledger.ensure(name, espec.baseline.tokens_per_second, now)
+            self.ledger.attach(name, None, mig.charges, now)
+        for rec in mig.in_flight:
+            self.in_flight[rec.request_id] = rec
+        self._demand_window[name] = mig.demand_window
+        self._demand_tps[name] = mig.demand_tps
+        self._rows_dirty = True
+        return st.state
 
     def expire_entitlements(self, now: float) -> None:
         for name, espec in self.entitlements.items():

@@ -58,6 +58,16 @@ class PoolManager:
 
     def __init__(self, pools: Iterable[TokenPool] = ()) -> None:
         self.pools: dict[str, TokenPool] = {}
+        #: fleet capacity planner (created lazily by ``plan_quantum``;
+        #: assign one to customize ``FleetPlannerConfig``)
+        self.planner = None
+        #: ``hook(pool, decision, now)`` — when set, scale decisions
+        #: are handed to it instead of applied instantly, so a
+        #: deployment (or ``MultiPoolSimulator``) can model
+        #: provisioning lag and scale-down draining.  The promise
+        #: ceiling (``authorize_replicas``) always moves at decision
+        #: time regardless.
+        self.provision_hook = None
         for p in pools:
             self.adopt(p)
 
@@ -91,6 +101,21 @@ class PoolManager:
         pool = self.pools.get(name)
         return pool is not None and pool.replicas > 0
 
+    def owner_of(self, entitlement: str,
+                 hint: Optional[str] = None) -> Optional[str]:
+        """Pool currently holding ``entitlement`` (``hint`` = the pool
+        a route leg *claims*, checked first).  Rebalancing migrates
+        entitlements between pools, so a stored route's legs can go
+        stale — resolution follows the entitlement, not the leg."""
+        if hint is not None:
+            pool = self.pools.get(hint)
+            if pool is not None and entitlement in pool.entitlements:
+                return hint
+        for name, pool in self.pools.items():
+            if entitlement in pool.entitlements:
+                return name
+        return None
+
     # -- routing ---------------------------------------------------------------
     def route_order(self, entries: list[RouteEntry], input_tokens: int,
                     max_tokens: Optional[int], now: float,
@@ -118,8 +143,18 @@ class PoolManager:
         client's DECLARED route.  The gateway reports that position as
         ``spill_hops`` — re-searching the declared route for the
         admitting leg (``route.index``) would misattribute repeated
-        legs and, under ``headroom`` reordering, renumbered ones."""
-        live = [(i, e) for i, e in enumerate(entries)
+        legs and, under ``headroom`` reordering, renumbered ones.
+
+        Legs follow MIGRATED entitlements: a leg whose entitlement the
+        rebalancer has moved to another pool is rewritten to the
+        current owner, so stored routes keep working across
+        cross-pool rebalances."""
+        remapped = []
+        for e in entries:
+            owner = self.owner_of(e.entitlement, hint=e.pool)
+            remapped.append(e if owner is None or owner == e.pool
+                            else RouteEntry(owner, e.entitlement))
+        live = [(i, e) for i, e in enumerate(remapped)
                 if self.available(e.pool)]
         if policy == "static":
             return live
@@ -220,6 +255,75 @@ class PoolManager:
                     now, inp.names, burst[k, :n], debt[k, :n],
                     alloc[k, :n], weights[k, :n])
         return records
+
+
+    # -- fleet capacity planning -------------------------------------------------
+    def migrate_entitlement(self, name: str, src: str, dst: str,
+                            now: float = 0.0):
+        """Move ``name`` from pool ``src`` to pool ``dst``, carrying
+        its ledger bucket level, debt/burst, in-flight records and
+        demand signal (invariants: ``core.fleet`` module docstring).
+        The destination's authorized ceiling is raised first if a
+        planner had shrunk it, so the arriving reserve does not
+        spuriously degrade.  Returns the entitlement's state on the
+        destination."""
+        from repro.core.autoscaler import replicas_for
+        from repro.core.types import ServiceClass
+
+        spool, dpool = self.pools[src], self.pools[dst]
+        espec = spool.entitlements[name]
+        if dpool._authorized is not None \
+                and espec.qos.service_class not in (
+                    ServiceClass.SPOT, ServiceClass.PREEMPTIBLE):
+            node = dpool.provider.node(dst)
+            needed = replicas_for(node.allocated + espec.baseline,
+                                  dpool.spec.per_replica)
+            needed = min(int(np.ceil(min(needed, 1e9))),
+                         dpool.spec.scaling.max_replicas)
+            if needed > dpool._authorized:
+                dpool.authorize_replicas(needed)
+        mig = spool.detach_entitlement(name, now)
+        return dpool.attach_entitlement(mig, now)
+
+    def plan_quantum(self, now: float, records=None):
+        """One closed-loop planning round for the fleet: batched tick →
+        ONE fused ``plan_fleet`` dispatch → apply.
+
+        Per decision the pool's PROMISE ceiling moves immediately
+        (``authorize_replicas`` — a shrink below committed reservations
+        preempts leases via the virtual-node scheduler pass), while
+        LIVE replicas move through ``provision_hook`` when one is set
+        (provisioning lag / drain modelling) or instantly otherwise.
+        Rebalance proposals are then executed via
+        :meth:`migrate_entitlement`.  Pass the tick's ``records`` to
+        reuse an accounting tick this quantum already ran."""
+        from repro.core.fleet import FleetPlanner
+
+        if records is None:
+            records = self.tick(now)
+        if self.planner is None:
+            self.planner = FleetPlanner()
+        plan = self.planner.plan(self.pools, records, now)
+        for name, d in plan.decisions.items():
+            pool = self.pools[name]
+            if pool._authorized != d.desired:
+                prev = (pool._authorized if pool._authorized is not None
+                        else d.current)
+                if prev != d.desired:
+                    plan.scale_events[name] = (prev, d.desired)
+                preempted = pool.authorize_replicas(d.desired)
+                if preempted:
+                    plan.preempted[name] = preempted
+            if d.desired != d.current:
+                if self.provision_hook is not None:
+                    self.provision_hook(pool, d, now)
+                else:
+                    pool.set_replicas(d.desired)
+        for prop in plan.migrations:
+            self.migrate_entitlement(prop.entitlement, prop.src,
+                                     prop.dst, now)
+            plan.applied.append(prop)
+        return plan
 
 
 PoolOrManager = Union[TokenPool, PoolManager]

@@ -521,6 +521,29 @@ class Gateway:
                      * (1.0 - pool.spec.admission_slack))
         return ctrl._priority_backoff(w, threshold)
 
+    # -- fleet planning -----------------------------------------------------------
+    def plan_quantum(self, now: float, records=None):
+        """Run one fleet planning round (``PoolManager.plan_quantum``)
+        and surface it in the gateway's stats store: per-pool replica
+        gauges, scale-up/down counters, and migration counters —
+        the same observability surface the admission counters use."""
+        plan = self.manager.plan_quantum(now, records=records)
+        for name, d in plan.decisions.items():
+            self.store.set(f"replicas:{name}", float(d.desired), now)
+        # count authorization TRANSITIONS, not convergence rounds —
+        # under provisioning lag `desired > current` repeats every
+        # plan until the replicas come live
+        for name, (old, new) in plan.scale_events.items():
+            if new > old:
+                self.store.incr(f"scale_ups:{name}", 1.0, now)
+            elif new < old:
+                self.store.incr(f"scale_downs:{name}", 1.0, now)
+        for prop in plan.applied:
+            self.store.incr(f"migrations:{prop.entitlement}", 1.0, now)
+            self.store.set(f"migrated_to:{prop.entitlement}", prop.dst,
+                           now)
+        return plan
+
     # -- completion callback ----------------------------------------------------------
     def on_complete(self, request_id: str, actual_output_tokens: int,
                     latency_s: float, now: float) -> None:

@@ -65,11 +65,19 @@ class ReplicaSim:
     rate_tps: float
     prefill_tps: float = 4000.0
     alive: bool = True
+    #: scale-down drain: no new dispatch, residual work completes
+    draining: bool = False
+    #: replica lost to a FAILURE (cannot be re-provisioned until the
+    #: matching recover event, unlike a scaled-down slot)
+    failed: bool = False
     active: dict = dataclasses.field(default_factory=dict)
     # req_id → [remaining_out_tokens, prefill_remaining_tokens]
 
     def load(self) -> int:
         return len(self.active)
+
+    def serving(self) -> bool:
+        return self.alive and not self.draining
 
 
 def dispatch_waiting(waiting: list, alive: list[ReplicaSim],
@@ -382,6 +390,10 @@ class PoolSite:
     n_replicas: int = 1
     replica_slots: int = 16
     replica_tps: float = 240.0
+    #: autoscaling ceiling (0 → n_replicas, i.e. a fixed fleet).  With
+    #: ``autoscale=True`` the fleet starts at ``n_replicas`` live and
+    #: the planner provisions up to this many.
+    max_replicas: int = 0
 
 
 class MultiPoolSimulator:
@@ -407,8 +419,12 @@ class MultiPoolSimulator:
                  accounting_interval_s: float = 1.0,
                  bucket_window_s: float = 4.0,
                  spill_policy: str = "static",
-                 admission_mode: str = "quantum") -> None:
-        from repro.core import PoolManager
+                 admission_mode: str = "quantum",
+                 autoscale: bool = False,
+                 planner_config=None,
+                 provision_lag_s: float = 2.0,
+                 drain_s: float = 2.0) -> None:
+        from repro.core import FleetPlanner, PoolManager
         from repro.gateway import Gateway
 
         if admission_mode not in ("quantum", "scalar"):
@@ -436,12 +452,16 @@ class MultiPoolSimulator:
              for w in workloads]))
         self.charge_factor = charge_factor
 
+        self.autoscale = autoscale
+        self.provision_lag_s = provision_lag_s
+        self.drain_s = drain_s
         self.manager = PoolManager()
         self.replicas: dict[str, list[ReplicaSim]] = {}
         for s in sites:
+            max_r = s.max_replicas or s.n_replicas
             spec = PoolSpec(
                 name=s.name, model="sim-model",
-                scaling=ScalingBounds(1, s.n_replicas),
+                scaling=ScalingBounds(1, max_r),
                 per_replica=Resources(s.replica_tps * charge_factor, 0.0,
                                       float(s.replica_slots)),
                 coefficients=coeff,
@@ -449,10 +469,24 @@ class MultiPoolSimulator:
                 bucket_window_s=bucket_window_s)
             pool = self.manager.add_pool(spec)
             pool.set_replicas(s.n_replicas)
+            # fleet sized to the autoscaling ceiling; slots beyond the
+            # initial n_replicas start dead, awaiting provisioning
             self.replicas[s.name] = [
                 ReplicaSim(f"{s.name}/r{i}", s.replica_slots,
-                           s.replica_tps)
-                for i in range(s.n_replicas)]
+                           s.replica_tps, alive=i < s.n_replicas)
+                for i in range(max_r)]
+        if autoscale:
+            self.manager.planner = FleetPlanner(planner_config)
+            self.manager.provision_hook = self._provision
+        #: replicas scheduled to come live (pool → replica indices)
+        self._incoming: dict[str, set[int]] = {s.name: set() for s in sites}
+        #: per-replica drain deadline (replica name → t)
+        self._drain_deadline: dict[str, float] = {}
+        #: (t, FleetPlan) per planning round (autoscale mode)
+        self.plans: list = []
+        #: per-pool (t, live_replicas) trajectory, sampled at each tick
+        self.replica_timeline: dict[str, list[tuple[float, int]]] = {
+            s.name: [] for s in sites}
 
         self.gateway = Gateway(self.manager, spill_policy=spill_policy)
         for w in workloads:
@@ -499,7 +533,92 @@ class MultiPoolSimulator:
 
     # -- internals ------------------------------------------------------------
     def _alive(self, pool: str) -> list[ReplicaSim]:
+        """Replicas still decoding — includes DRAINING ones, whose
+        residual work must finish even though they accept no new
+        dispatch (scale-down drains; see :meth:`_serving`)."""
         return [r for r in self.replicas[pool] if r.alive]
+
+    def _serving(self, pool: str) -> list[ReplicaSim]:
+        """Replicas eligible for new dispatch (alive, not draining)."""
+        return [r for r in self.replicas[pool] if r.serving()]
+
+    def _sync_replicas(self, pool: str) -> None:
+        """Pool runtime capacity follows the SERVING replica count:
+        a draining replica stops counting the moment the planner
+        marks it (admission must see the post-decision capacity)."""
+        self.manager.pool(pool).set_replicas(len(self._serving(pool)))
+
+    # -- provisioning-lag model (the fleet planner's provision hook) ----------
+    def _provision(self, pool, decision, now: float) -> None:
+        """Apply a ScaleDecision to the simulated fleet.
+
+        Scale-up: each missing replica becomes live ``provision_lag_s``
+        seconds from now (draining slots are un-drained first — they
+        are already warm).  Scale-down: surplus serving replicas drain
+        — no new dispatch, residual requests finish (bounded by
+        ``drain_s``, after which leftovers are re-queued) — and the
+        pool's admission capacity drops immediately."""
+        pname = pool.spec.name
+        fleet = self.replicas[pname]
+        incoming = self._incoming[pname]
+        eff = len(self._serving(pname)) + len(incoming)
+        target = decision.desired
+        if target > eff:
+            want = target - eff
+            # warm slots first: cancel drains in progress
+            for r in fleet:
+                if want <= 0:
+                    break
+                if r.alive and r.draining:
+                    r.draining = False
+                    self._drain_deadline.pop(r.name, None)
+                    want -= 1
+            for i, r in enumerate(fleet):
+                if want <= 0:
+                    break
+                if not r.alive and not r.failed and i not in incoming:
+                    incoming.add(i)
+                    self.at(now + self.provision_lag_s, "replica_live",
+                            pool=pname, idx=i)
+                    want -= 1
+        elif target < eff:
+            shrink = eff - target
+            # cancel not-yet-live arrivals first (cheapest to undo)
+            for i in sorted(incoming, reverse=True):
+                if shrink <= 0:
+                    break
+                incoming.discard(i)
+                shrink -= 1
+            serving = sorted(self._serving(pname), key=ReplicaSim.load)
+            for r in serving:
+                if shrink <= 0:
+                    break
+                r.draining = True
+                self._drain_deadline[r.name] = now + self.drain_s
+                shrink -= 1
+        self._sync_replicas(pname)
+
+    def _complete_drains(self, now: float) -> None:
+        """Retire draining replicas that emptied (or hit the drain
+        deadline — leftovers re-queue on the same pool, like a
+        failure)."""
+        for pname, fleet in self.replicas.items():
+            for r in fleet:
+                if not (r.alive and r.draining):
+                    continue
+                if r.active and now < self._drain_deadline.get(
+                        r.name, now):
+                    continue
+                for rid in list(r.active):
+                    req = self.requests[rid]
+                    req.state = RequestState.QUEUED
+                    req.replica = None
+                    heapq.heappush(self.waiting[pname],
+                                   (-req.priority, req.arrival_s, rid))
+                    del r.active[rid]
+                r.alive = False
+                r.draining = False
+                self._drain_deadline.pop(r.name, None)
 
     def _new_request(self, w: Workload, now: float) -> Request:
         self._req_counter += 1
@@ -554,7 +673,7 @@ class MultiPoolSimulator:
 
     def _dispatch(self, now: float) -> None:
         for pname, waiting in self.waiting.items():
-            dispatch_waiting(waiting, self._alive(pname), self.requests,
+            dispatch_waiting(waiting, self._serving(pname), self.requests,
                              self.manager.pool(pname).on_start)
 
     def _advance_replicas(self, now: float) -> None:
@@ -571,6 +690,8 @@ class MultiPoolSimulator:
             pname = payload["pool"]
             replica = self.replicas[pname][payload["idx"]]
             replica.alive = False
+            replica.failed = True
+            replica.draining = False
             # in-flight requests on the dead node are re-queued on the
             # SAME pool (their charge lives in its ledger)
             for rid in list(replica.active):
@@ -580,11 +701,29 @@ class MultiPoolSimulator:
                 heapq.heappush(self.waiting[pname],
                                (-req.priority, req.arrival_s, rid))
                 del replica.active[rid]
-            self.manager.pool(pname).set_replicas(len(self._alive(pname)))
+            self._sync_replicas(pname)
         elif kind == "recover_replica":
-            pname = payload["pool"]
-            self.replicas[pname][payload["idx"]].alive = True
-            self.manager.pool(pname).set_replicas(len(self._alive(pname)))
+            replica = self.replicas[payload["pool"]][payload["idx"]]
+            replica.failed = False
+            replica.alive = True
+            self._sync_replicas(payload["pool"])
+        elif kind == "replica_live":
+            # provisioning completed (scheduled by ``_provision``);
+            # ignored if the planner cancelled it or the slot failed
+            pname, idx = payload["pool"], payload["idx"]
+            if idx not in self._incoming[pname]:
+                return
+            self._incoming[pname].discard(idx)
+            replica = self.replicas[pname][idx]
+            if replica.failed:
+                return
+            replica.alive = True
+            replica.draining = False
+            self._sync_replicas(pname)
+        elif kind == "set_rate":
+            # demand change (e.g. the experiment-3 surge): takes effect
+            # from the next arrival on
+            self.workloads[payload["workload"]].rate_rps = payload["rate"]
         elif kind == "retry":
             w = self.workloads[payload["workload"]]
             if now < w.end_s:
@@ -622,12 +761,22 @@ class MultiPoolSimulator:
                     self._next_arrival[w.name] = 1e18
             if quantum:
                 self._arrive_batch(self._step_batch, now)
+            if self.autoscale:
+                self._complete_drains(now)
             self._dispatch(now)
             self._advance_replicas(now)
             if now >= next_tick:
                 recs = self.manager.tick(now)   # ONE batched dispatch
                 for pname, rec in recs.items():
                     self.tick_records[pname].append(rec)
+                if self.autoscale:
+                    # close the loop: tick outputs → ONE fused
+                    # plan_fleet dispatch → authorize/provision/migrate
+                    plan = self.gateway.plan_quantum(now, records=recs)
+                    self.plans.append((now, plan))
+                for pname in self.replicas:
+                    self.replica_timeline[pname].append(
+                        (now, self.manager.pool(pname).replicas))
                 next_tick += interval
             now += self.dt
         return self.summary()
@@ -653,4 +802,7 @@ class MultiPoolSimulator:
             "per_workload": per,
             "per_pool_history": {n: p.history
                                  for n, p in self.manager.pools.items()},
+            "replica_timeline": self.replica_timeline,
+            "migrations": [prop for _, plan in self.plans
+                           for prop in plan.applied],
         }

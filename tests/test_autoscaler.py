@@ -1,0 +1,227 @@
+"""Scalar Autoscaler coverage: reserved-floor dominance, headroom
+scale-up, cooldown hysteresis, min/max clamping, demand seeding, and
+the per-instance-config regression.  The scalar planner is the parity
+oracle for the fleet kernel (``tests/test_fleet.py``)."""
+import pytest
+
+from repro.core import (
+    Autoscaler,
+    AutoscalerConfig,
+    EntitlementSpec,
+    EntitlementState,
+    PoolSpec,
+    QoS,
+    Resources,
+    ScalingBounds,
+    ServiceClass,
+    TokenPool,
+)
+
+
+def mkpool(name="p", lo=1, hi=10, per_tps=240.0, per_conc=16.0):
+    return TokenPool(PoolSpec(
+        name=name, model="m", scaling=ScalingBounds(lo, hi),
+        per_replica=Resources(per_tps, 0.0, per_conc)))
+
+
+def ent(name, klass=ServiceClass.GUARANTEED, tps=240.0, conc=2.0,
+        pool="p"):
+    return EntitlementSpec(
+        name=name, tenant_id="t", pool=pool,
+        qos=QoS(service_class=klass, slo_target_ms=500.0),
+        baseline=Resources(tps, 0.0, conc))
+
+
+class TestReservedFloor:
+    def test_reserved_dominates_idle_demand(self):
+        """Zero demand: the pool still provisions every promised
+        baseline (paper: entitlements authorize autoscaling)."""
+        pool = mkpool()
+        pool.add_entitlement(ent("a", ServiceClass.GUARANTEED, 480.0))
+        pool.add_entitlement(ent("b", ServiceClass.ELASTIC, 240.0))
+        a = Autoscaler(pool)
+        a.observe_demand(0.0)
+        d = a.plan()
+        assert d.desired == 3                # ceil(720 / 240)
+        assert d.reason == "scale_up:reserved"
+        assert d.reserved_tps == pytest.approx(720.0)
+
+    def test_spot_reserves_nothing(self):
+        pool = mkpool()
+        pool.add_entitlement(ent("s", ServiceClass.SPOT, 0.0, conc=8.0))
+        pool.add_entitlement(ent("pre", ServiceClass.PREEMPTIBLE, 0.0))
+        a = Autoscaler(pool)
+        a.observe_demand(0.0)
+        assert a.reserved_tps() == 0.0
+        assert a.plan().desired == 1
+
+    def test_degraded_counts_toward_floor(self):
+        """A Degraded entitlement is an accepted promise the pool
+        cannot currently honor — exactly what must raise capacity
+        (otherwise a planner-shrunk pool could never grow back)."""
+        pool = mkpool()
+        pool.add_entitlement(ent("a", ServiceClass.GUARANTEED, 480.0))
+        pool.status["a"].state = EntitlementState.DEGRADED
+        a = Autoscaler(pool)
+        a.observe_demand(0.0)
+        assert a.plan().desired == 2
+
+    def test_expired_does_not_count(self):
+        pool = mkpool()
+        pool.add_entitlement(ent("a", ServiceClass.GUARANTEED, 480.0))
+        pool.status["a"].state = EntitlementState.EXPIRED
+        a = Autoscaler(pool)
+        assert a.reserved_tps() == 0.0
+
+    def test_concurrency_dimension_floors_too(self):
+        """The reserved floor is three-dimensional: a pool whose
+        concurrency promises exceed what the tps floor would provision
+        must scale for the slots."""
+        pool = mkpool(per_tps=240.0, per_conc=4.0)
+        pool.add_entitlement(ent("a", ServiceClass.GUARANTEED,
+                                 tps=240.0, conc=12.0))
+        a = Autoscaler(pool)
+        a.observe_demand(0.0)
+        assert a.plan().desired == 3         # ceil(12 / 4), not 240/240
+
+
+class TestHeadroomScaleUp:
+    def test_demand_above_reserved_scales_up(self):
+        pool = mkpool()
+        pool.add_entitlement(ent("a", ServiceClass.GUARANTEED, 240.0))
+        a = Autoscaler(pool)
+        a.observe_demand(790.0)              # seeds the EWMA
+        d = a.plan()
+        assert d.desired == 4                # ceil(790·1.2 / 240) = ⌈3.95⌉
+        assert d.reason == "scale_up:demand"
+
+    def test_demand_seeded_with_first_observation(self):
+        """Cold start must NOT decay up from 0.0 — the first
+        observation IS the estimate (an empty-history EWMA of 0 would
+        under-provision the first minutes of a launch)."""
+        pool = mkpool()
+        a = Autoscaler(pool)
+        a.observe_demand(960.0)
+        assert a.demand_tps == pytest.approx(960.0)
+        d = a.plan()
+        assert d.desired == 5                # not ceil(480·1.2/240)
+
+    def test_ewma_smooths_after_seed(self):
+        a = Autoscaler(mkpool())
+        a.observe_demand(1000.0)
+        a.observe_demand(0.0)
+        assert a.demand_tps == pytest.approx(500.0)   # γ = 0.5
+
+    def test_step_reads_tick_record_demand(self):
+        """Satellite: step() feeds on the TickRecord the control plane
+        emits — not the pool's private accounting dicts."""
+        pool = mkpool()
+        pool.add_entitlement(ent("a", ServiceClass.GUARANTEED, 240.0))
+        pool.register_deny("a", 960.0, low_priority=False)
+        rec = pool.tick(1.0)                 # demand EWMA ≈ 480
+        a = Autoscaler(pool)
+        d = a.step(rec)
+        assert d.demand_tps == pytest.approx(
+            sum(rec.demand_tps.values()))
+        assert pool.replicas == d.desired    # applied
+
+    def test_step_without_record_uses_public_snapshot(self):
+        pool = mkpool()
+        pool.add_entitlement(ent("a", ServiceClass.GUARANTEED, 240.0))
+        pool.register_deny("a", 960.0, low_priority=False)
+        pool.tick(1.0)
+        a = Autoscaler(pool)
+        d = a.step()
+        assert d.demand_tps == pytest.approx(
+            sum(pool.demand_snapshot().values()))
+
+
+class TestHysteresis:
+    def mkscaled(self, cooldown=3):
+        pool = mkpool()
+        pool.add_entitlement(ent("a", ServiceClass.GUARANTEED, 240.0))
+        pool.set_replicas(6)
+        return pool, Autoscaler(
+            pool, AutoscalerConfig(cooldown_ticks=cooldown))
+
+    def test_scale_down_held_during_cooldown(self):
+        pool, a = self.mkscaled(cooldown=3)
+        for _ in range(2):
+            a.observe_demand(0.0)
+            d = a.plan()
+            assert (d.desired, d.reason) == (6, "hold:cooldown")
+        a.observe_demand(0.0)
+        d = a.plan()
+        assert d.reason == "scale_down"
+        assert d.desired == 1
+
+    def test_flap_resets_cooldown(self):
+        """A demand spike mid-cooldown resets the low-tick counter:
+        scale-down needs CONSECUTIVE low ticks."""
+        pool, a = self.mkscaled(cooldown=3)
+        a.observe_demand(0.0)
+        assert a.plan().reason == "hold:cooldown"
+        a.observe_demand(8000.0)             # spike: scale-up resets
+        assert a.plan().reason.startswith("scale_up")
+        for _ in range(2):
+            a.observe_demand(0.0)
+            d = a.plan()
+        assert d.reason == "hold:cooldown"   # counter restarted
+
+    def test_scale_up_is_immediate(self):
+        pool, a = self.mkscaled()
+        pool.set_replicas(1)
+        a.observe_demand(2000.0)
+        d = a.plan()
+        assert d.desired == 10 and d.reason == "scale_up:demand"
+
+    def test_steady_resets_counter(self):
+        pool, a = self.mkscaled(cooldown=2)
+        a.observe_demand(0.0)
+        assert a.plan().reason == "hold:cooldown"
+        pool.set_replicas(1)                 # external change → steady
+        a.observe_demand(0.0)
+        assert a.plan().reason == "steady"
+        pool.set_replicas(6)
+        a.observe_demand(0.0)
+        assert a.plan().reason == "hold:cooldown"   # count restarted
+
+
+class TestClamping:
+    def test_max_clamp(self):
+        pool = mkpool(hi=3)
+        a = Autoscaler(pool)
+        a.observe_demand(1e6)
+        assert a.plan().desired == 3
+
+    def test_min_clamp(self):
+        pool = mkpool(lo=2)
+        pool.set_replicas(2)
+        a = Autoscaler(pool)
+        a.observe_demand(0.0)
+        assert a.plan().desired == 2
+
+    def test_unsatisfiable_dimension_clamps_to_max(self):
+        """per-replica KV of 0 with a KV baseline: need is infinite —
+        clamp to maxReplicas instead of overflowing the ceil."""
+        pool = mkpool(hi=4)
+        pool.add_entitlement(EntitlementSpec(
+            name="kv", tenant_id="t", pool="p",
+            qos=QoS(service_class=ServiceClass.GUARANTEED),
+            baseline=Resources(10.0, 1 << 30, 1.0)))
+        a = Autoscaler(pool)
+        a.observe_demand(0.0)
+        assert a.plan().desired == 4
+
+
+class TestConfigIsolation:
+    def test_config_not_shared_between_instances(self):
+        """Regression (satellite): the old ``config: AutoscalerConfig
+        = AutoscalerConfig()`` default was ONE instance shared by every
+        autoscaler — tuning one retuned all.  Defaults must be
+        per-instance (and frozen)."""
+        import dataclasses
+        a1, a2 = Autoscaler(mkpool("p1")), Autoscaler(mkpool("p2"))
+        assert a1.config is not a2.config
+        with pytest.raises(dataclasses.FrozenInstanceError):
+            a1.config.headroom = 9.9
