@@ -140,6 +140,169 @@ def gateway_admission_rates(n_requests: int, n_entitlements: int = 512
     return scalar, quantum
 
 
+def _resident_pool(n: int, seed: int = 0) -> TokenPool:
+    """One pool with ``n`` resident mixed-class entitlements and a
+    seeded demand signal — the end-to-end ``TokenPool.tick`` workload."""
+    from repro.core.types import PoolSpec as PS
+    pool = TokenPool(PS(
+        name="p", model="m", scaling=ScalingBounds(1, 1),
+        per_replica=Resources(100.0 * n, 1e18, 1e9),
+        history_maxlen=8))
+    rng = np.random.RandomState(seed)
+    classes = list(ServiceClass)
+    for i in range(n):
+        klass = classes[rng.randint(0, 5)]
+        base = (0.0 if klass in (ServiceClass.SPOT,
+                                 ServiceClass.PREEMPTIBLE)
+                else float(rng.uniform(10, 100)))
+        pool.add_entitlement(EntitlementSpec(
+            name=f"e{i}", tenant_id=f"t{i}", pool="p",
+            qos=QoS(klass, float(rng.uniform(100, 30000))),
+            baseline=Resources(base, 0.0, 8.0)))
+    # seed a demand window directly in the resident columns (one
+    # vectorized write — this is setup, not the measured path)
+    alive = pool.store.col["alive"]
+    pool.store.col["demand_window"][alive] = rng.uniform(
+        0, 200, int(alive.sum()))
+    return pool
+
+
+def _gather_shell_tick(shell: dict, now: float) -> None:
+    """The PRE-RESIDENT tick shell, kept here as the benchmark
+    baseline: gather every row from plain-Python status dataclasses +
+    demand dicts (O(n) attribute/dict work per tick), run the same
+    fused kernel, scatter results back per name and re-rate each
+    dict-backed ledger bucket per name.  ``shell`` holds exactly what
+    the old ``TokenPool`` held — plain ``EntitlementStatus`` objects,
+    a standalone dict-of-``TokenBucket`` ledger, and the spec-derived
+    static row cache — so the baseline measures the historical
+    dataclass/dict cost, not today's view-property overhead."""
+    from repro.core import control_plane
+    from repro.core.types import EntitlementState
+
+    names = shell["names"]
+    statuses = shell["statuses"]
+    demand_tps = shell["demand_tps"]
+    n = len(names)
+    bound = np.zeros(n, bool)
+    burst = np.zeros(n, np.float32)
+    debt = np.zeros(n, np.float32)
+    measured = np.zeros(n, np.float32)
+    used_kv = np.zeros(n, np.float32)
+    used_conc = np.zeros(n, np.float32)
+    demand = np.zeros(n, np.float32)
+    for i, name in enumerate(names):
+        st = statuses[name]
+        bound[i] = st.state == EntitlementState.BOUND
+        burst[i] = st.burst
+        debt[i] = st.debt
+        measured[i] = st.measured_tps
+        used_kv[i] = st.kv_bytes_in_use
+        used_conc[i] = float(st.resident)
+        demand[i] = demand_tps.get(name, 0.0)
+    width = control_plane.bucket_width(n)
+    pad = width - n
+
+    def padvec(x):
+        return (jnp.concatenate([jnp.asarray(x),
+                                 jnp.zeros(pad, x.dtype)])
+                if pad else jnp.asarray(x))
+
+    state = control_plane.pad_state(PoolArrays(
+        class_code=jnp.asarray(shell["class_code"]),
+        bound=jnp.asarray(bound),
+        baseline_tps=jnp.asarray(shell["baseline_tps"]),
+        baseline_kv=jnp.asarray(shell["baseline_kv"]),
+        baseline_conc=jnp.asarray(shell["baseline_conc"]),
+        slo_ms=jnp.asarray(shell["slo_ms"]),
+        burst=jnp.asarray(burst), debt=jnp.asarray(debt)), width)
+    new_state, alloc, weights = control_tick(
+        state, jnp.float32(shell["capacity_tps"]),
+        padvec(measured), padvec(used_kv), padvec(used_conc),
+        padvec(demand), jnp.float32(10_000.0),
+        coeff=shell["coeff"])
+    new_burst = np.asarray(new_state.burst)[:n]
+    new_debt = np.asarray(new_state.debt)[:n]
+    alloc_f = [float(a) for a in np.asarray(alloc)[:n]]
+    ledger = shell["ledger"]
+    for i, name in enumerate(names):
+        st = statuses[name]
+        st.burst = float(new_burst[i])
+        st.debt = float(new_debt[i])
+        ledger.set_rate(name, alloc_f[i], now)
+    # the old TickRecord materialized every dict eagerly
+    dict(zip(names, alloc_f))
+    {nm: float(weights[i]) for i, nm in enumerate(names)}
+    {nm: statuses[nm].debt for nm in names}
+
+
+def _shell_state(pool: TokenPool) -> dict:
+    """Detach a pool's state into the plain-Python form the
+    pre-resident ``TokenPool`` kept: dataclass statuses, a standalone
+    dict-backed ledger, demand dicts, cached static rows."""
+    from repro.core import Ledger
+    from repro.core.vectorized import CLASS_CODES as CC
+
+    names = sorted(pool.entitlements)
+    es = [pool.entitlements[n] for n in names]
+    ledger = Ledger(burst_window_s=pool.spec.bucket_window_s)
+    for n, e in zip(names, es):
+        ledger.ensure(n, e.baseline.tokens_per_second, 0.0)
+    return {
+        "names": names,
+        "statuses": {n: pool.store.snapshot_status(n) for n in names},
+        "demand_tps": pool.demand_snapshot(),
+        "ledger": ledger,
+        "capacity_tps": pool.capacity().tokens_per_second,
+        "coeff": pool.spec.coefficients,
+        "class_code": np.array([CC[e.qos.service_class] for e in es],
+                               np.int32),
+        "baseline_tps": np.array(
+            [e.baseline.tokens_per_second for e in es], np.float32),
+        "baseline_kv": np.array([e.baseline.kv_bytes for e in es],
+                                np.float32),
+        "baseline_conc": np.array([e.baseline.concurrency for e in es],
+                                  np.float32),
+        "slo_ms": np.array([e.qos.slo_target_ms for e in es],
+                           np.float32),
+    }
+
+
+def pool_tick_rates(sizes: list[int], shell_reps: int = 3,
+                    resident_reps: int = 20) -> list[dict]:
+    """End-to-end ``TokenPool.tick`` µs/tick trajectory: the resident
+    path (arrays are truth, vectorized absorb) vs the gather/scatter
+    shell baseline (per-name dict loops around the same kernel)."""
+    rows = []
+    for n in sizes:
+        shell = _shell_state(_resident_pool(n))
+        reps_s = max(1, shell_reps if n <= 10_000 else 1)
+        t = 1.0
+        _gather_shell_tick(shell, t)                   # warm the kernel
+        t0 = time.perf_counter()
+        for _ in range(reps_s):
+            t += 1.0
+            _gather_shell_tick(shell, t)
+        shell_us = (time.perf_counter() - t0) / reps_s * 1e6
+
+        pool = _resident_pool(n)
+        reps_r = max(1, resident_reps if n <= 100_000 else 5)
+        t = 1.0
+        pool.tick(t)                                   # warm the kernel
+        t0 = time.perf_counter()
+        for _ in range(reps_r):
+            t += 1.0
+            pool.tick(t)
+        resident_us = (time.perf_counter() - t0) / reps_r * 1e6
+        rows.append({
+            "rows": n,
+            "gather_shell_us_per_tick": round(shell_us, 1),
+            "resident_us_per_tick": round(resident_us, 1),
+            "speedup": round(shell_us / resident_us, 2),
+        })
+    return rows
+
+
 def _oracle_rows(n: int, seed: int = 0) -> list[OracleRow]:
     """A mixed-class fleet with random baselines, SLOs and demand."""
     rng = np.random.RandomState(seed)
@@ -253,6 +416,22 @@ def main(quick: bool = False, out_json: str | None = None) -> None:
     print(f"tick_unified_{pools}pools_x_{label},{t_mp:.0f},"
           f"us_per_batched_tick ({t_mp / pools:.0f} us/pool)")
 
+    # -- end-to-end TokenPool.tick: resident arrays vs the old
+    # gather/scatter shell (per-name dict loops around the same kernel)
+    tick_sizes = [1_000, 4_096] if quick \
+        else [1_000, 10_000, 100_000, 1_000_000]
+    tick_rows = pool_tick_rates(tick_sizes)
+    note = ("smoke sizes; acceptance applies to the full run"
+            if quick else "acceptance: >=5x at 100000")
+    for row in tick_rows:
+        nr = row["rows"]
+        print(f"pool_tick_shell_{nr},{row['gather_shell_us_per_tick']:.0f},"
+              "us_per_tick")
+        print(f"pool_tick_resident_{nr},"
+              f"{row['resident_us_per_tick']:.0f},us_per_tick")
+        print(f"pool_tick_resident_speedup_{nr},{row['speedup']:.1f},"
+              f"x ({note})")
+
     if out_json:
         os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
         with open(out_json, "w") as f:
@@ -272,6 +451,18 @@ def main(quick: bool = False, out_json: str | None = None) -> None:
                 },
             }, f, indent=2)
         print(f"# wrote {out_json}")
+        # BENCH_tick.json: the resident-vs-gather-shell TokenPool.tick
+        # trajectory (CI artifact next to BENCH_admission/BENCH_autoscale)
+        tick_json = os.path.join(os.path.dirname(out_json) or ".",
+                                 "BENCH_tick.json")
+        with open(tick_json, "w") as f:
+            json.dump({
+                "benchmark": "pool_tick_resident",
+                "quick": quick,
+                "acceptance": "resident >=5x gather shell at 100k rows",
+                "tick_trajectory": tick_rows,
+            }, f, indent=2)
+        print(f"# wrote {tick_json}")
 
 
 if __name__ == "__main__":

@@ -6,6 +6,9 @@ Public API surface:
 - control_plane: THE tick — jit-compiled array-of-rows state machine
   (single pool and vmapped multi-pool), plus the scalar test oracle
 - priority: Eq. (1)-(3) scalar oracle math
+- resident: ResidentStore — the structure-of-arrays that OWNS each
+  pool's control-plane state (statuses, buckets and snapshots are
+  views over its rows)
 - pool: TokenPool controller (stateful shell over the control plane)
 - pool_manager: PoolManager (batched fleet tick + spill-over routing)
 - admission: AdmissionController (the §4.3 five-check pipeline)
@@ -37,7 +40,8 @@ from repro.core.control_plane import (
     control_tick_pools,
     reference_tick,
 )
-from repro.core.ledger import Charge, Ledger, TokenBucket
+from repro.core.ledger import Charge, Ledger, RowBucket, TokenBucket
+from repro.core.resident import ResidentStatus, ResidentStore
 from repro.core.pool import (
     EntitlementMigration,
     InFlight,
@@ -90,7 +94,8 @@ __all__ = [
     "FleetPlan", "FleetPlanner", "FleetPlannerConfig", "InFlight",
     "LeasePod", "Ledger", "OracleRow", "PoolManager", "PoolSpec",
     "PriorityCoefficients", "QoS", "QuantumSnapshot",
-    "RebalanceProposal", "Resources", "RouteEntry", "ScaleDecision",
+    "RebalanceProposal", "ResidentStatus", "ResidentStore",
+    "Resources", "RouteEntry", "RowBucket", "ScaleDecision",
     "ScalingBounds", "ServiceClass", "StateStore", "TickInputs",
     "TickRecord", "TokenBucket", "TokenPool", "VirtualNode",
     "VirtualNodeProvider", "admit_quantum", "arrays_from_pool",

@@ -44,6 +44,12 @@ BURSTOK_MASK = jnp.array([True, False, True, True, True])   # Table 1 "Burst"
 DEBTOK_MASK = jnp.array([False, False, True, False, False])  # debt classes
 ELASTIC_MASK = jnp.array([False, False, True, False, False])
 
+#: Python-side trace counters: a jitted kernel's body only executes as
+#: Python while TRACING, so bumping a counter inside it counts compiled
+#: variants.  Tests pin that entitlement churn within a pow2 resident
+#: bucket never retraces (``tests/test_resident.py``).
+TRACE_COUNTS: dict[str, int] = {"control_tick": 0, "admit_quantum": 0}
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -192,6 +198,7 @@ def _tick_impl(state: ControlState, capacity_tps: jax.Array,
     """Tick body shared by the single-pool and vmapped entry points.
     Mirrors the scalar controller's steps 2–5: burst EWMA → priority →
     allocation → debt EWMA."""
+    TRACE_COUNTS["control_tick"] += 1          # executes at trace time only
     delta = burst_delta_rows(measured_tps, used_kv, used_conc, state)
     burst = ewma(state.burst, delta, coeff.gamma_burst)
     s1 = dataclasses.replace(state, burst=burst)

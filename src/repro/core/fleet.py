@@ -233,10 +233,12 @@ class FleetPlanner:
                     record: Optional[TickRecord]) -> float:
         """Total demand (tok/s) — the sum of the demand EWMAs the tick
         emits (admitted + denied demand, so denial pressure raises
-        capacity)."""
-        demand = (record.demand_tps if record is not None
-                  else pool.demand_snapshot())
-        return float(sum(demand.values()))
+        capacity).  Without a tick record this is one masked column sum
+        over the pool's resident arrays (``demand_total_tps``), not a
+        per-name dict walk."""
+        if record is None:
+            return pool.demand_total_tps()
+        return float(sum(record.demand_tps.values()))
 
     def _arrays(self, pools: dict[str, TokenPool],
                 records: dict[str, TickRecord]) -> tuple[list, dict]:

@@ -16,11 +16,26 @@ entitlement λ_e (tokens/second) as a token bucket:
     the completion callback *refunds* the unused portion
     (max_tokens − actual output), closing the admission/execution gap.
 
+Storage has two modes sharing one semantics:
+
+  - **resident** (``Ledger(store=...)`` — what ``TokenPool`` uses):
+    bucket level / rate / refill-clock live as float64 COLUMNS of the
+    pool's :class:`~repro.core.resident.ResidentStore`;
+    :class:`RowBucket` is a view over one row with the exact
+    ``TokenBucket`` API, and ``set_rate_rows`` updates every bucket of
+    an accounting tick as one vectorized row operation (the per-name
+    ``set_rate`` loop the tick used to run was O(n) Python);
+  - **standalone** (no store): plain ``TokenBucket`` objects in a dict,
+    for tests and detached/migrating buckets.
+
 Deterministic; time is an explicit argument.
 """
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional, Union
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -73,6 +88,77 @@ class TokenBucket:
         return deficit / self.rate_tps
 
 
+class RowBucket:
+    """``TokenBucket``-API view over one resident-store row.
+
+    Level / rate / refill clock live in the store's float64 bucket
+    columns (the arrays are the truth); this object carries no state of
+    its own, so two views of the same row can never diverge.
+    """
+
+    __slots__ = ("_store", "_slot")
+
+    def __init__(self, store, slot: int) -> None:
+        self._store = store
+        self._slot = slot
+
+    # -- column-backed fields (same names as the dataclass) -------------------
+    @property
+    def rate_tps(self) -> float:
+        return float(self._store.col["bucket_rate"][self._slot])
+
+    @rate_tps.setter
+    def rate_tps(self, v: float) -> None:
+        self._store.col["bucket_rate"][self._slot] = v
+
+    @property
+    def level(self) -> float:
+        return float(self._store.col["bucket_level"][self._slot])
+
+    @level.setter
+    def level(self, v: float) -> None:
+        self._store.col["bucket_level"][self._slot] = v
+
+    @property
+    def burst_window_s(self) -> float:
+        return float(self._store.col["bucket_window"][self._slot])
+
+    @burst_window_s.setter
+    def burst_window_s(self, v: float) -> None:
+        self._store.col["bucket_window"][self._slot] = v
+
+    @property
+    def last_refill_s(self) -> float:
+        return float(self._store.col["bucket_refill"][self._slot])
+
+    @last_refill_s.setter
+    def last_refill_s(self, v: float) -> None:
+        self._store.col["bucket_refill"][self._slot] = v
+
+    # -- TokenBucket semantics, verbatim --------------------------------------
+    capacity = TokenBucket.capacity
+    refill = TokenBucket.refill
+    set_rate = TokenBucket.set_rate
+    can_afford = TokenBucket.can_afford
+    charge = TokenBucket.charge
+    refund = TokenBucket.refund
+    time_until_affordable = TokenBucket.time_until_affordable
+
+    def to_token_bucket(self) -> TokenBucket:
+        """Materialize a detached plain bucket (migration payloads)."""
+        return TokenBucket(rate_tps=self.rate_tps,
+                           burst_window_s=self.burst_window_s,
+                           level=self.level,
+                           last_refill_s=self.last_refill_s)
+
+    def __repr__(self) -> str:
+        return (f"RowBucket(slot={self._slot}, rate_tps={self.rate_tps}, "
+                f"level={self.level}, window={self.burst_window_s})")
+
+
+Bucket = Union[TokenBucket, RowBucket]
+
+
 @dataclasses.dataclass
 class Charge:
     """Record of an admission-time charge, so completion can refund."""
@@ -88,23 +174,56 @@ class Charge:
 class Ledger:
     """Per-entitlement token buckets + outstanding charges."""
 
-    def __init__(self, burst_window_s: float = 4.0) -> None:
+    def __init__(self, burst_window_s: float = 4.0, store=None) -> None:
+        #: standalone mode only; resident mode derives buckets from the
+        #: store columns (``has_bucket`` + the bucket_* columns)
         self._buckets: dict[str, TokenBucket] = {}
         self._charges: dict[str, Charge] = {}
         self.burst_window_s = burst_window_s
+        self._store = store
 
-    def ensure(self, entitlement: str, rate_tps: float, now: float) -> TokenBucket:
-        b = self._buckets.get(entitlement)
-        if b is None:
-            b = TokenBucket(rate_tps=rate_tps,
-                            burst_window_s=self.burst_window_s,
-                            level=rate_tps * self.burst_window_s,
-                            last_refill_s=now)
-            self._buckets[entitlement] = b
-        return b
+    # -- bucket resolution (both modes) ----------------------------------------
+    def _slot(self, entitlement: str) -> int:
+        """Resident slot of an entitlement's bucket row; KeyError when
+        the entitlement is unknown OR holds no bucket (dict-miss parity
+        with the standalone mode)."""
+        slot = self._store.slot_of[entitlement]
+        if not self._store.col["has_bucket"][slot]:
+            raise KeyError(entitlement)
+        return slot
 
-    def bucket(self, entitlement: str) -> TokenBucket:
-        return self._buckets[entitlement]
+    def bucket(self, entitlement: str) -> Bucket:
+        if self._store is None:
+            return self._buckets[entitlement]
+        return RowBucket(self._store, self._slot(entitlement))
+
+    def has_bucket(self, entitlement: str) -> bool:
+        if self._store is None:
+            return entitlement in self._buckets
+        slot = self._store.slot_of.get(entitlement)
+        return slot is not None and bool(
+            self._store.col["has_bucket"][slot])
+
+    def ensure(self, entitlement: str, rate_tps: float,
+               now: float) -> Bucket:
+        if self._store is None:
+            b = self._buckets.get(entitlement)
+            if b is None:
+                b = TokenBucket(rate_tps=rate_tps,
+                                burst_window_s=self.burst_window_s,
+                                level=rate_tps * self.burst_window_s,
+                                last_refill_s=now)
+                self._buckets[entitlement] = b
+            return b
+        slot = self._store.slot_of[entitlement]
+        c = self._store.col
+        if not c["has_bucket"][slot]:
+            c["has_bucket"][slot] = True
+            c["bucket_rate"][slot] = rate_tps
+            c["bucket_window"][slot] = self.burst_window_s
+            c["bucket_level"][slot] = rate_tps * self.burst_window_s
+            c["bucket_refill"][slot] = now
+        return RowBucket(self._store, slot)
 
     def peek_level(self, entitlement: str, rate_tps: float,
                    now: float) -> float:
@@ -114,16 +233,36 @@ class Ledger:
         ``ensure`` would create.  Snapshotting code (the batched
         admission quantum) uses this so observing a pool never mutates
         it."""
-        b = self._buckets.get(entitlement)
-        if b is None:
+        try:
+            b = self.bucket(entitlement)
+        except KeyError:
             return rate_tps * self.burst_window_s
         dt = max(0.0, now - b.last_refill_s)
         return min(b.capacity(), b.level + dt * b.rate_tps)
 
+    def peek_levels(self, rates: np.ndarray, now: float) -> np.ndarray:
+        """Vectorized :meth:`peek_level` over EVERY resident row (pure
+        read; resident mode only).  ``rates`` supplies the would-be
+        initial rate for rows without a bucket (the effective-or-
+        baseline fallback the scalar path uses).  Rows are in slot
+        order — one O(width) numpy expression replaces the per-name
+        loop the admission snapshot used to run."""
+        c = self._store.col
+        cap = c["bucket_rate"] * c["bucket_window"]
+        dt = np.maximum(0.0, now - c["bucket_refill"])
+        projected = np.minimum(cap, c["bucket_level"]
+                               + dt * c["bucket_rate"])
+        return np.where(c["has_bucket"], projected,
+                        np.asarray(rates, np.float64)
+                        * self.burst_window_s)
+
     def drop(self, entitlement: str) -> None:
         """Remove an entitlement's bucket and any outstanding charges
         (entitlement teardown — the bucket must stop refilling)."""
-        self._buckets.pop(entitlement, None)
+        if self._store is None:
+            self._buckets.pop(entitlement, None)
+        else:
+            self.drop_bucket_only(entitlement)
         for rid in [rid for rid, ch in self._charges.items()
                     if ch.entitlement == entitlement]:
             del self._charges[rid]
@@ -135,13 +274,35 @@ class Ledger:
         charges so they can be re-attached on another pool's ledger.
         Unlike :meth:`drop`, nothing is forgotten: the accrued bucket
         level and every admission-time charge (still owed a refund on
-        completion) travel with the entitlement."""
-        bucket = self._buckets.pop(entitlement, None)
+        completion) travel with the entitlement.  Resident-mode buckets
+        are materialized into detached ``TokenBucket`` objects (the row
+        is about to be recycled)."""
+        bucket: Optional[TokenBucket]
+        if self._store is None:
+            bucket = self._buckets.pop(entitlement, None)
+        else:
+            try:
+                bucket = RowBucket(
+                    self._store, self._slot(entitlement)).to_token_bucket()
+            except KeyError:
+                bucket = None
+            self.drop_bucket_only(entitlement)
         charges = [ch for ch in self._charges.values()
                    if ch.entitlement == entitlement]
         for ch in charges:
             del self._charges[ch.request_id]
         return bucket, charges
+
+    def drop_bucket_only(self, entitlement: str) -> None:
+        """Clear a resident bucket row without touching charges."""
+        slot = self._store.slot_of.get(entitlement)
+        if slot is not None:
+            c = self._store.col
+            c["has_bucket"][slot] = False
+            c["bucket_level"][slot] = 0.0
+            c["bucket_rate"][slot] = 0.0
+            c["bucket_refill"][slot] = 0.0
+            c["bucket_window"][slot] = 0.0
 
     def attach(self, entitlement: str, bucket: Optional[TokenBucket],
                charges: list[Charge], now: float) -> None:
@@ -154,15 +315,53 @@ class Ledger:
             bucket.refill(now)
             bucket.burst_window_s = self.burst_window_s
             bucket.level = min(bucket.level, bucket.capacity())
-            self._buckets[entitlement] = bucket
+            if self._store is None:
+                self._buckets[entitlement] = bucket
+            else:
+                slot = self._store.slot_of[entitlement]
+                c = self._store.col
+                c["has_bucket"][slot] = True
+                c["bucket_rate"][slot] = bucket.rate_tps
+                c["bucket_window"][slot] = bucket.burst_window_s
+                c["bucket_level"][slot] = bucket.level
+                c["bucket_refill"][slot] = bucket.last_refill_s
         for ch in charges:
             self._charges[ch.request_id] = ch
 
     def set_rate(self, entitlement: str, rate_tps: float, now: float) -> None:
         self.ensure(entitlement, rate_tps, now).set_rate(rate_tps, now)
 
+    def set_rate_rows(self, mask: np.ndarray, rates: np.ndarray,
+                      now: float) -> None:
+        """One accounting tick's rate updates as a single vectorized row
+        operation (resident mode): for every row where ``mask`` is
+        True, apply exactly ``TokenBucket.set_rate`` — refill at the
+        old rate, adopt the (non-negative) new rate, clamp to the new
+        capacity.  Masked rows without a bucket yet get a fresh one at
+        the new rate, matching what ``ensure`` + ``set_rate`` would
+        create.  ``mask``/``rates`` are full-width (slot-indexed)."""
+        c = self._store.col
+        has = c["has_bucket"] & mask
+        rate = c["bucket_rate"]
+        window = c["bucket_window"]
+        dt = np.maximum(0.0, now - c["bucket_refill"])
+        refilled = np.minimum(rate * window,
+                              c["bucket_level"] + dt * rate)
+        new_rate = np.maximum(0.0, np.asarray(rates, np.float64))
+        clamped = np.minimum(refilled, new_rate * window)
+        fresh = mask & ~c["has_bucket"]
+        c["bucket_level"][:] = np.where(
+            has, clamped,
+            np.where(fresh, new_rate * self.burst_window_s,
+                     c["bucket_level"]))
+        c["bucket_rate"][:] = np.where(mask, new_rate, rate)
+        c["bucket_window"][:] = np.where(
+            fresh, self.burst_window_s, window)
+        c["bucket_refill"][:] = np.where(mask, now, c["bucket_refill"])
+        c["has_bucket"][:] = c["has_bucket"] | mask
+
     def charge(self, charge: Charge, now: float) -> bool:
-        b = self._buckets[charge.entitlement]
+        b = self.bucket(charge.entitlement)
         if not b.charge(charge.charged_tokens, now):
             return False
         self._charges[charge.request_id] = charge
@@ -178,7 +377,7 @@ class Ledger:
         refilled: set[str] = set()
         out = []
         for ch in charges:
-            b = self._buckets[ch.entitlement]
+            b = self.bucket(ch.entitlement)
             if ch.entitlement not in refilled:
                 b.refill(now)
                 refilled.add(ch.entitlement)
@@ -200,14 +399,14 @@ class Ledger:
             return 0.0
         actual = ch.input_tokens + actual_output_tokens
         refund = max(0.0, ch.charged_tokens - actual)
-        self._buckets[ch.entitlement].refund(refund, now)
+        self.bucket(ch.entitlement).refund(refund, now)
         return float(actual)
 
     def cancel(self, request_id: str, now: float) -> None:
         """Request failed/evicted before producing tokens: full refund."""
         ch = self._charges.pop(request_id, None)
         if ch is not None:
-            self._buckets[ch.entitlement].refund(ch.charged_tokens, now)
+            self.bucket(ch.entitlement).refund(ch.charged_tokens, now)
 
     def retry_after(self, entitlement: str, tokens: float, now: float) -> float:
-        return self._buckets[entitlement].time_until_affordable(tokens, now)
+        return self.bucket(entitlement).time_until_affordable(tokens, now)

@@ -17,14 +17,21 @@ the controller
   5. pushes λ̂_e into the token-bucket ledger that funds admission.
 
 Steps 2–4 execute on the UNIFIED control plane
-(``core.control_plane.control_tick``): this class is a thin stateful
-shell that gathers entitlement state into a ``ControlState`` array of
-rows, runs the fused jit-compiled tick, and scatters allocations /
-debts / priorities back into the ledger and per-entitlement status.
-The old scalar dict-loop survives only as the test oracle
+(``core.control_plane.control_tick``).  State ownership is RESIDENT
+(``core.resident``): every control-plane column — statics, the
+burst/debt EWMAs, window accumulators, KV/concurrency in use, token
+bucket levels — lives in one structure-of-arrays per pool, padded to a
+power-of-two capacity with free-slot recycling, mirrored as a cached
+device ``ControlState``.  ``pool.status[name]`` hands out
+``ResidentStatus`` VIEWS over rows (dicts are views, arrays are
+truth), the accounting-window fold in :meth:`TokenPool._measure` is a
+handful of vectorized column expressions, and :meth:`TokenPool.tick`
+runs the fused kernel directly over the resident arrays — per-tick
+Python work no longer scales with the entitlement count.  The old
+scalar dict-loop survives only as the test oracle
 (``control_plane.reference_tick``); ``waterfill`` below is part of that
-oracle.  ``PoolManager`` batches many pools through the same kernel via
-the split ``begin_tick`` / ``apply_tick`` halves.
+oracle.  ``PoolManager`` batches many pools through the same kernel by
+stacking their resident arrays.
 
 Entitlement *creation* is admitted through the virtual-node scheduler
 (`core.virtual_node`) against the pool's entitleable capacity
@@ -37,6 +44,8 @@ paper's Experiment 2.
 from __future__ import annotations
 
 import dataclasses
+import math
+from collections import deque
 from typing import Optional
 
 import jax.numpy as jnp
@@ -45,6 +54,7 @@ import numpy as np
 from repro.core import control_plane, priority as prio
 from repro.core.control_plane import CLASS_CODES, ControlState
 from repro.core.ledger import Ledger
+from repro.core.resident import ResidentStatus, ResidentStore, _DictView
 from repro.core.types import (
     EntitlementSpec,
     EntitlementState,
@@ -54,6 +64,10 @@ from repro.core.types import (
     ServiceClass,
 )
 from repro.core.virtual_node import LeasePod, VirtualNodeProvider
+
+#: class codes (DED/GUAR/ELASTIC) whose baseline counts toward the
+#: reserved provisioning floor — see ``TokenPool.reserved_baseline``.
+_RESERVING_CLASS = np.array([True, True, True, False, False])
 
 
 @dataclasses.dataclass
@@ -67,13 +81,24 @@ class InFlight:
     charged_tokens: int
     admitted_at: float
     resident: bool = False       # dispatched to a decode worker
+    #: (pool, entitlement) of the route leg the client PREFERRED when
+    #: this request was admitted by a later (spill) leg — None when the
+    #: request was served by its first leg.  Drives per-request
+    #: cross-pool debt transfer on completion
+    #: (``PoolManager.transfer_spill_debt``).
+    spill_from: Optional[tuple] = None
+    #: actual settled token cost (input + actual output), stamped by
+    #: ``on_complete`` so callers can attribute service without
+    #: re-reading the ledger charge (already popped by then)
+    settled_tokens: float = 0.0
 
 
 @dataclasses.dataclass
 class TickInputs:
     """Gathered per-tick state, ready for the control-plane kernel.
-    Produced by ``TokenPool.begin_tick``; ``PoolManager`` stacks these
-    across pools for the batched tick."""
+    Produced by ``TokenPool.begin_tick`` (live rows, compacted in slot
+    order); ``PoolManager`` batches pools on the full resident arrays
+    instead."""
 
     names: list[str]
     state: ControlState
@@ -93,7 +118,9 @@ class EntitlementMigration:
     Invariants (documented in ``core.fleet``): the ledger bucket keeps
     its accrued level and outstanding charges, the status keeps debt /
     burst / usage counters, and in-flight records follow the
-    entitlement so completions settle on the NEW owner."""
+    entitlement so completions settle on the NEW owner.  The payload is
+    fully MATERIALIZED (plain ``EntitlementStatus`` / ``TokenBucket``):
+    the source row is recycled the moment the entitlement detaches."""
 
     espec: EntitlementSpec
     status: EntitlementStatus
@@ -104,18 +131,94 @@ class EntitlementMigration:
     demand_tps: float
 
 
-@dataclasses.dataclass
 class TickRecord:
-    """Per-tick observability snapshot (drives the experiment figures)."""
+    """Per-tick observability snapshot (drives the experiment figures).
 
-    t: float
-    capacity_tps: float
-    allocations: dict[str, float]
-    priorities: dict[str, float]
-    debts: dict[str, float]
-    bursts: dict[str, float]
-    in_flight: dict[str, int]
-    demand_tps: dict[str, float]
+    The resident tick hands this class raw kernel-output ARRAYS; the
+    per-name dicts (``allocations``/``priorities``/``debts``/…) are
+    materialized lazily on first access and cached — observability
+    costs nothing until somebody looks.  The dict-kwargs constructor is
+    kept for oracles and tests that build records by hand."""
+
+    _DICT_FIELDS = ("allocations", "priorities", "debts", "bursts",
+                    "in_flight", "demand_tps")
+    __slots__ = ("t", "capacity_tps", "_names", "_arrays", "_cache")
+
+    def __init__(self, t: float, capacity_tps: float,
+                 allocations: Optional[dict] = None,
+                 priorities: Optional[dict] = None,
+                 debts: Optional[dict] = None,
+                 bursts: Optional[dict] = None,
+                 in_flight: Optional[dict] = None,
+                 demand_tps: Optional[dict] = None) -> None:
+        self.t = t
+        self.capacity_tps = capacity_tps
+        self._names: Optional[list[str]] = None
+        self._arrays: Optional[dict] = None
+        self._cache = {
+            "allocations": {} if allocations is None else allocations,
+            "priorities": {} if priorities is None else priorities,
+            "debts": {} if debts is None else debts,
+            "bursts": {} if bursts is None else bursts,
+            "in_flight": {} if in_flight is None else in_flight,
+            "demand_tps": {} if demand_tps is None else demand_tps,
+        }
+
+    @classmethod
+    def from_arrays(cls, t: float, capacity_tps: float, names: list[str],
+                    allocations: np.ndarray, priorities: np.ndarray,
+                    debts: np.ndarray, bursts: np.ndarray,
+                    in_flight: np.ndarray, demand_tps: np.ndarray
+                    ) -> "TickRecord":
+        """Lazy record over compact per-live-row arrays (row i ↔
+        ``names[i]``).  The arrays must be snapshots the caller will
+        not mutate."""
+        rec = cls(t, capacity_tps)
+        rec._names = names
+        rec._arrays = {
+            "allocations": allocations, "priorities": priorities,
+            "debts": debts, "bursts": bursts, "in_flight": in_flight,
+            "demand_tps": demand_tps,
+        }
+        rec._cache = {}
+        return rec
+
+    def _dict(self, key: str) -> dict:
+        d = self._cache.get(key)
+        if d is None:
+            conv = int if key == "in_flight" else float
+            arr = self._arrays[key]
+            d = {n: conv(arr[i]) for i, n in enumerate(self._names)}
+            self._cache[key] = d
+        return d
+
+    @property
+    def allocations(self) -> dict:
+        return self._dict("allocations")
+
+    @property
+    def priorities(self) -> dict:
+        return self._dict("priorities")
+
+    @property
+    def debts(self) -> dict:
+        return self._dict("debts")
+
+    @property
+    def bursts(self) -> dict:
+        return self._dict("bursts")
+
+    @property
+    def in_flight(self) -> dict:
+        return self._dict("in_flight")
+
+    @property
+    def demand_tps(self) -> dict:
+        return self._dict("demand_tps")
+
+    def __repr__(self) -> str:
+        return (f"TickRecord(t={self.t}, capacity_tps={self.capacity_tps},"
+                f" rows={len(self._names) if self._names is not None else len(self._cache.get('allocations', {}))})")
 
 
 def waterfill(capacity: float, want: dict[str, float],
@@ -162,20 +265,21 @@ class TokenPool:
         self.spec = spec
         self.provider = provider or VirtualNodeProvider()
         self.replicas = spec.scaling.min_replicas
+        #: the resident structure-of-arrays — source of truth for every
+        #: control-plane column (``core.resident``)
+        self.store = ResidentStore()
         self.entitlements: dict[str, EntitlementSpec] = {}
-        self.status: dict[str, EntitlementStatus] = {}
-        self.ledger = Ledger(burst_window_s=spec.bucket_window_s)
+        #: name → ResidentStatus VIEW over the entitlement's row
+        self.status: dict[str, ResidentStatus] = {}
+        self.ledger = Ledger(burst_window_s=spec.bucket_window_s,
+                             store=self.store)
         self.in_flight: dict[str, InFlight] = {}
-        self.history: list[TickRecord] = []
+        #: bounded tick history (spec.history_maxlen; None = unbounded)
+        self.history: deque = deque(maxlen=spec.history_maxlen)
         self._last_tick = now
-        self._demand_window: dict[str, float] = {}
-        self._demand_tps: dict[str, float] = {}
-        # Row layout cache for the control plane (rebuilt on membership
-        # or spec changes; row order is sorted-name, matching
-        # ``vectorized.arrays_from_pool``).
-        self._rows_dirty = True
-        self._row_names: list[str] = []
-        self._static_rows: Optional[dict[str, np.ndarray]] = None
+        #: TTL deadlines for the (rare) entitlements that declare one —
+        #: expiry scans these, not the whole membership
+        self._ttl_deadline: dict[str, float] = {}
         # Replica count last AUTHORIZED by the fleet planner (None until
         # a planner has run: the virtual node then still advertises the
         # full entitleable ceiling).
@@ -243,32 +347,66 @@ class TokenPool:
         state (a Degraded promise is precisely what the planner must
         raise capacity for).  Spot/preemptible reserve nothing.  This
         is the reserved floor of the scale policy (``core.autoscaler``
-        / ``core.fleet``)."""
-        from repro.core.types import PROTECTED_CLASSES
-        total = Resources.zero()
-        for name, espec in self.entitlements.items():
-            st = self.status[name]
-            if st.state not in (EntitlementState.BOUND,
-                                EntitlementState.DEGRADED):
-                continue
-            klass = espec.qos.service_class
-            if klass in PROTECTED_CLASSES or klass is ServiceClass.ELASTIC:
-                total = total + espec.baseline
-        return total
+        / ``core.fleet``) — computed as three masked column sums over
+        the resident arrays."""
+        from repro.core.resident import STATE_CODES
+        c = self.store.col
+        sc = c["state_code"]
+        mask = (c["alive"]
+                & ((sc == STATE_CODES[EntitlementState.BOUND])
+                   | (sc == STATE_CODES[EntitlementState.DEGRADED]))
+                & _RESERVING_CLASS[c["class_code"]])
+        return Resources(
+            float(np.sum(c["baseline_tps"][mask], dtype=np.float64)),
+            float(np.sum(c["baseline_kv"][mask], dtype=np.float64)),
+            float(np.sum(c["baseline_conc"][mask], dtype=np.float64)))
 
     def demand_snapshot(self) -> dict[str, float]:
         """Public copy of the per-entitlement demand EWMA (tok/s) the
         accounting tick maintains — the same values the latest
         ``TickRecord.demand_tps`` carries.  Planners read THIS, never
-        the private accounting dicts."""
-        return dict(self._demand_tps)
+        the resident columns directly."""
+        col = self.store.col["demand_tps"]
+        return {n: float(col[s]) for n, s in self.store.slot_of.items()}
+
+    def demand_total_tps(self) -> float:
+        """Σ demand EWMA over the pool — one masked column sum (what
+        fleet planning aggregates per pool)."""
+        return float(np.sum(
+            self.store.col["demand_tps"][self.store.col["alive"]]))
+
+    # -- legacy private surfaces (dict facades over the columns) --------------
+    @property
+    def _demand_tps(self) -> _DictView:
+        return _DictView(self.store, "demand_tps")
+
+    @property
+    def _demand_window(self) -> _DictView:
+        return _DictView(self.store, "demand_window")
 
     # -- entitlement lifecycle --------------------------------------------------
+    def _write_statics(self, slot: int, espec: EntitlementSpec) -> None:
+        """Spec-derived static columns for one row — the single place
+        both `add_entitlement` and `attach_entitlement` initialize
+        from, so a future static column cannot diverge between the
+        create and migration paths."""
+        c = self.store.col
+        c["class_code"][slot] = CLASS_CODES[espec.qos.service_class]
+        c["baseline_tps"][slot] = espec.baseline.tokens_per_second
+        c["baseline_kv"][slot] = espec.baseline.kv_bytes
+        c["baseline_conc"][slot] = espec.baseline.concurrency
+        c["slo_ms"][slot] = espec.qos.slo_target_ms
+
     def add_entitlement(self, espec: EntitlementSpec, now: float = 0.0
                         ) -> EntitlementState:
+        slot = self.store.allocate(espec.name)
         self.entitlements[espec.name] = espec
-        st = EntitlementStatus(created_at=now)
+        self._write_statics(slot, espec)
+        self.store.col["created_at"][slot] = now
+        st = ResidentStatus(self.store, slot)
         self.status[espec.name] = st
+        if espec.ttl_s is not None:
+            self._ttl_deadline[espec.name] = now + espec.ttl_s
         # Lease request: protected + elastic reserve their baseline on
         # the virtual node; spot/preemptible request nothing.
         reserve = (espec.baseline
@@ -285,9 +423,6 @@ class TokenPool:
         st.state = EntitlementState.BOUND if bound else EntitlementState.DEGRADED
         # Fund the bucket at baseline immediately; ticks refine it.
         self.ledger.ensure(espec.name, espec.baseline.tokens_per_second, now)
-        self._demand_window.setdefault(espec.name, 0.0)
-        self._demand_tps.setdefault(espec.name, 0.0)
-        self._rows_dirty = True
         return st.state
 
     def remove_entitlement(self, name: str, now: float = 0.0) -> None:
@@ -295,8 +430,9 @@ class TokenPool:
         keyed by the name must go: surviving in-flight records would
         make a later ``on_complete``/``on_evict`` KeyError on the
         missing status row, a surviving ledger bucket would keep
-        refilling a dead tenant's budget, and surviving demand-window
-        keys would leak into every future ``TickRecord.demand_tps``."""
+        refilling a dead tenant's budget, and a surviving resident row
+        would leak into every future tick.  The freed row is zeroed
+        (inert under every kernel mask) and recycled."""
         self.provider.delete(f"lease-{name}")
         # evict in-flight requests first (status row must still exist):
         # charges are refunded, then the whole bucket is dropped anyway
@@ -306,21 +442,22 @@ class TokenPool:
         self.entitlements.pop(name, None)
         self.status.pop(name, None)
         self.ledger.drop(name)
-        self._demand_window.pop(name, None)
-        self._demand_tps.pop(name, None)
+        self._ttl_deadline.pop(name, None)
+        if name in self.store:
+            self.store.release(name)
         # the freed reservation may have re-bound pending leases
         self._sync_lease_states()
-        self._rows_dirty = True
 
     def detach_entitlement(self, name: str, now: float = 0.0
                            ) -> EntitlementMigration:
         """Detach an entitlement for migration to another pool
         (``PoolManager.migrate_entitlement``).  Unlike
-        :meth:`remove_entitlement` nothing is torn down: the ledger
+        :meth:`remove_entitlement` nothing is forgotten: the ledger
         bucket (accrued level + outstanding charges), the status row
         (debt, burst, usage counters), the in-flight records and the
-        demand signal all travel with the entitlement — only the lease
-        reservation is released here."""
+        demand signal are all MATERIALIZED into the migration payload
+        — only the lease reservation is released here, and the
+        resident row is recycled."""
         if name not in self.entitlements:
             raise KeyError(f"no entitlement {name!r} in pool "
                            f"{self.spec.name!r}")
@@ -329,17 +466,21 @@ class TokenPool:
         for r in recs:
             del self.in_flight[r.request_id]
         bucket, charges = self.ledger.detach(name)
+        slot = self.store.slot_of[name]
+        c = self.store.col
         mig = EntitlementMigration(
             espec=self.entitlements.pop(name),
-            status=self.status.pop(name),
+            status=self.store.snapshot_status(name),
             bucket=bucket, charges=charges, in_flight=recs,
-            demand_window=self._demand_window.pop(name, 0.0),
-            demand_tps=self._demand_tps.pop(name, 0.0))
+            demand_window=float(c["demand_window"][slot]),
+            demand_tps=float(c["demand_tps"][slot]))
+        self.status.pop(name, None)
+        self._ttl_deadline.pop(name, None)
+        self.store.release(name)
         # the freed reservation may have re-bound a previously
         # preempted/pending lease — Degraded stickiness here would deny
         # a now-bound tenant with NOT_BOUND until the next authorize
         self._sync_lease_states()
-        self._rows_dirty = True
         return mig
 
     def attach_entitlement(self, mig: EntitlementMigration,
@@ -347,18 +488,23 @@ class TokenPool:
         """Adopt a migrated entitlement: submit its lease on THIS
         pool's virtual node (baseline reserve, same rule as
         :meth:`add_entitlement`) and restore every piece of carried
-        state.  Debt is preserved verbatim — an underserved tenant
-        arrives at the new pool with the priority boost it is owed
-        (cross-pool debt, ROADMAP item 4)."""
+        state into a fresh resident row.  Debt is preserved verbatim —
+        an underserved tenant arrives at the new pool with the
+        priority boost it is owed (cross-pool debt, ROADMAP item 4)."""
         espec = mig.espec
         name = espec.name
         if name in self.entitlements:
             raise ValueError(f"entitlement {name!r} already in pool "
                              f"{self.spec.name!r}")
         espec.pool = self.spec.name
+        slot = self.store.allocate(name)
         self.entitlements[name] = espec
-        st = mig.status
+        self._write_statics(slot, espec)
+        self.store.load_status(slot, mig.status)
+        st = ResidentStatus(self.store, slot)
         self.status[name] = st
+        if espec.ttl_s is not None:
+            self._ttl_deadline[name] = mig.status.created_at + espec.ttl_s
         reserve = (espec.baseline
                    if espec.qos.service_class not in
                    (ServiceClass.SPOT, ServiceClass.PREEMPTIBLE)
@@ -379,27 +525,35 @@ class TokenPool:
             self.ledger.attach(name, None, mig.charges, now)
         for rec in mig.in_flight:
             self.in_flight[rec.request_id] = rec
-        self._demand_window[name] = mig.demand_window
-        self._demand_tps[name] = mig.demand_tps
-        self._rows_dirty = True
+        self.store.col["demand_window"][slot] = mig.demand_window
+        self.store.col["demand_tps"][slot] = mig.demand_tps
         return st.state
 
     def expire_entitlements(self, now: float) -> None:
-        for name, espec in self.entitlements.items():
-            st = self.status[name]
-            if (espec.ttl_s is not None
-                    and now - st.created_at >= espec.ttl_s
-                    and st.state != EntitlementState.EXPIRED):
-                st.state = EntitlementState.EXPIRED
-                self.provider.delete(f"lease-{name}")
+        """TTL pass — scans only the entitlements that DECLARE a TTL
+        (deadlines indexed at add/attach), so the common no-TTL pool
+        pays nothing here."""
+        if not self._ttl_deadline:
+            return
+        for name in [n for n, dl in self._ttl_deadline.items()
+                     if now >= dl]:
+            del self._ttl_deadline[name]
+            st = self.status.get(name)
+            if st is None or st.state == EntitlementState.EXPIRED:
+                continue
+            st.state = EntitlementState.EXPIRED
+            self.provider.delete(f"lease-{name}")
 
     # -- priority --------------------------------------------------------------
     def pool_avg_slo(self) -> float:
         if self.spec.fixed_avg_slo_ms is not None:
             return self.spec.fixed_avg_slo_ms
-        targets = [e.qos.slo_target_ms for e in self.entitlements.values()
-                   if self.status[e.name].state == EntitlementState.BOUND]
-        return prio.pool_average_slo(targets)
+        bound = self.store.col["bound"]
+        n = int(np.count_nonzero(bound))
+        if n == 0:
+            return prio.pool_average_slo([])
+        return float(np.sum(self.store.col["slo_ms"][bound],
+                            dtype=np.float64) / n)
 
     def priority(self, name: str) -> float:
         """Live Eq. 1 weight for ONE entitlement (admission check 5).
@@ -426,8 +580,8 @@ class TokenPool:
         st.kv_bytes_in_use += rec.kv_bytes
         st.admitted_total += 1
         self.in_flight[rec.request_id] = rec
-        self._demand_window[rec.entitlement] = (
-            self._demand_window.get(rec.entitlement, 0.0) + demand_tokens)
+        slot = self.store.slot_of[rec.entitlement]
+        self.store.col["demand_window"][slot] += demand_tokens
 
     def register_admit_batch(self, recs: list[InFlight],
                              demand_tokens: dict[str, float]) -> None:
@@ -435,7 +589,7 @@ class TokenPool:
         bookkeeping as :meth:`register_admit`, with the status row
         resolved once per entitlement and the demand window bumped once
         per entitlement instead of once per request."""
-        st_cache: dict[str, EntitlementStatus] = {}
+        st_cache: dict[str, ResidentStatus] = {}
         for rec in recs:
             st = st_cache.get(rec.entitlement)
             if st is None:
@@ -444,9 +598,9 @@ class TokenPool:
             st.kv_bytes_in_use += rec.kv_bytes
             st.admitted_total += 1
             self.in_flight[rec.request_id] = rec
+        window = self.store.col["demand_window"]
         for ent, tokens in demand_tokens.items():
-            self._demand_window[ent] = (
-                self._demand_window.get(ent, 0.0) + tokens)
+            window[self.store.slot_of[ent]] += tokens
 
     def register_deny(self, entitlement: str, demand_tokens: float,
                       low_priority: bool) -> None:
@@ -455,8 +609,8 @@ class TokenPool:
         if low_priority:
             st.denied_low_priority += 1
         # Denied demand still counts as demand (drives backfill/scaling).
-        self._demand_window[entitlement] = (
-            self._demand_window.get(entitlement, 0.0) + demand_tokens)
+        slot = self.store.slot_of[entitlement]
+        self.store.col["demand_window"][slot] += demand_tokens
 
     def on_start(self, request_id: str) -> None:
         """Backend callback: the request acquired a decode slot (its KV
@@ -475,7 +629,8 @@ class TokenPool:
         Returns the settled ``InFlight`` record (None if unknown) so
         callers attribute the completion WITHOUT re-reading
         ``self.in_flight`` — the record is already popped by the time
-        this returns, and read-after-call would silently miss."""
+        this returns, and read-after-call would silently miss.  The
+        record's ``settled_tokens`` is stamped with the actual cost."""
         rec = self.in_flight.pop(request_id, None)
         if rec is None:
             return None
@@ -488,6 +643,7 @@ class TokenPool:
         actual = self.ledger.settle(request_id, actual_output_tokens, now)
         st.window_tokens += actual
         st.tokens_total += actual
+        rec.settled_tokens = actual
         return rec
 
     def on_evict(self, request_id: str, now: float) -> Optional[InFlight]:
@@ -509,7 +665,7 @@ class TokenPool:
         return len(self.in_flight)
 
     def total_resident(self) -> int:
-        return sum(st.resident for st in self.status.values())
+        return int(self.store.col["resident"].sum())
 
     def has_free_slots(self) -> bool:
         return self.total_resident() < self.capacity().concurrency
@@ -549,140 +705,161 @@ class TokenPool:
 
     # -- the accounting tick ------------------------------------------------------
     #
-    # Split into gather (``begin_tick``) → fused control-plane kernel →
-    # scatter (``apply_tick``) so ``PoolManager`` can stack the gathered
-    # inputs of many pools and dispatch ONE batched kernel for all of
-    # them.  ``tick`` composes the three for the single-pool case.
+    # The resident path: ``_measure`` folds the accounting window with a
+    # handful of vectorized column expressions, ``tick`` runs the fused
+    # kernel over the FULL resident arrays (free slots are inert
+    # unbound rows; the shape is the pow2 store capacity, so membership
+    # churn never retraces), and ``_absorb_tick`` adopts the kernel's
+    # output arrays as the new truth.  ``begin_tick``/``apply_tick``
+    # survive as the compact gather/scatter halves for tests and
+    # callers that drive the kernel themselves.
 
-    def _static_row_arrays(self) -> dict[str, np.ndarray]:
-        """Spec-derived row columns, cached until membership changes."""
-        if self._rows_dirty or self._static_rows is None:
-            names = sorted(self.entitlements)
-            self._row_names = names
-            es = [self.entitlements[n] for n in names]
-            self._static_rows = {
-                "class_code": np.array(
-                    [CLASS_CODES[e.qos.service_class] for e in es],
-                    np.int32),
-                "baseline_tps": np.array(
-                    [e.baseline.tokens_per_second for e in es], np.float32),
-                "baseline_kv": np.array(
-                    [e.baseline.kv_bytes for e in es], np.float32),
-                "baseline_conc": np.array(
-                    [e.baseline.concurrency for e in es], np.float32),
-                "slo_ms": np.array(
-                    [e.qos.slo_target_ms for e in es], np.float32),
-            }
-            self._rows_dirty = False
-        return self._static_rows
+    def _measure(self, now: float) -> float:
+        """Step 1 (measurement): fold the accounting window into the
+        measured/demand columns.  O(width) numpy, no per-row Python.
 
-    def begin_tick(self, now: float) -> TickInputs:
-        """Step 1 (measurement) + gather: fold the accounting window
-        into measured/demand signals and snapshot entitlement state as
-        control-plane rows."""
+        The demand EWMA is dt-aware: the retained fraction per tick is
+        ``exp(-dt/τ)`` with ``τ = spec.demand_tau_s`` — at the default
+        (τ = accounting_interval_s / ln 2) a tick at the nominal
+        interval retains exactly ½, the historical fixed blend, while
+        irregular tick spacing now yields a tick-rate-independent time
+        constant."""
         dt = max(1e-9, now - self._last_tick)
         self._last_tick = now
         self.expire_entitlements(now)
-        static = self._static_row_arrays()
-        names = self._row_names
-        n = len(names)
+        c = self.store.col
+        c["measured_tps"][:] = measured = c["window_tokens"] / dt
+        c["window_tokens"][:] = 0.0
+        inst = c["demand_window"] / dt
+        tau = self.spec.demand_tau_s
+        if tau is None:
+            # exp(-dt·ln2 / interval) via exp2: EXACTLY ½ at dt=interval
+            retain = 2.0 ** (-dt / self.spec.accounting_interval_s)
+        else:
+            retain = math.exp(-dt / max(tau, 1e-9))
+        # demand signal: EWMA for stability, floored by live usage
+        c["demand_tps"][:] = np.maximum(
+            retain * c["demand_tps"] + (1.0 - retain) * inst, measured)
+        c["demand_window"][:] = 0.0
+        return dt
 
-        bound = np.zeros(n, bool)
-        burst = np.zeros(n, np.float32)
-        debt = np.zeros(n, np.float32)
-        measured = np.zeros(n, np.float32)
-        used_kv = np.zeros(n, np.float32)
-        used_conc = np.zeros(n, np.float32)
-        demand = np.zeros(n, np.float32)
-        for i, name in enumerate(names):
-            st = self.status[name]
-            st.measured_tps = st.window_tokens / dt
-            st.window_tokens = 0.0
-            inst_demand = self._demand_window.get(name, 0.0) / dt
-            # demand signal: EWMA for stability, floored by live usage
-            self._demand_tps[name] = max(
-                0.5 * self._demand_tps.get(name, 0.0) + 0.5 * inst_demand,
-                st.measured_tps)
-            self._demand_window[name] = 0.0
-            bound[i] = st.state == EntitlementState.BOUND
-            burst[i] = st.burst
-            debt[i] = st.debt
-            measured[i] = st.measured_tps
-            used_kv[i] = st.kv_bytes_in_use
-            used_conc[i] = float(st.resident)
-            demand[i] = self._demand_tps[name]
+    def _kernel_inputs(self) -> tuple:
+        """f32 device views of the measurement columns (full width)."""
+        c = self.store.col
+        return (jnp.asarray(c["measured_tps"].astype(np.float32)),
+                jnp.asarray(c["kv_in_use"].astype(np.float32)),
+                jnp.asarray(c["resident"].astype(np.float32)),
+                jnp.asarray(c["demand_tps"].astype(np.float32)))
 
+    def begin_tick(self, now: float) -> TickInputs:
+        """Measurement + compact gather: live rows only, in slot order
+        (row i of every array ↔ ``names[i]``).  Kept for tests and
+        callers that run the kernel themselves; the resident ``tick``
+        path skips the compaction entirely."""
+        self._measure(now)
+        idx = self.store.live_slots()
+        c = self.store.col
         state = ControlState(
-            class_code=jnp.asarray(static["class_code"]),
-            bound=jnp.asarray(bound),
-            baseline_tps=jnp.asarray(static["baseline_tps"]),
-            baseline_kv=jnp.asarray(static["baseline_kv"]),
-            baseline_conc=jnp.asarray(static["baseline_conc"]),
-            slo_ms=jnp.asarray(static["slo_ms"]),
-            burst=jnp.asarray(burst),
-            debt=jnp.asarray(debt),
+            class_code=jnp.asarray(c["class_code"][idx]),
+            bound=jnp.asarray(c["bound"][idx]),
+            baseline_tps=jnp.asarray(c["baseline_tps"][idx]),
+            baseline_kv=jnp.asarray(c["baseline_kv"][idx]),
+            baseline_conc=jnp.asarray(c["baseline_conc"][idx]),
+            slo_ms=jnp.asarray(c["slo_ms"][idx]),
+            burst=jnp.asarray(c["burst"][idx]),
+            debt=jnp.asarray(c["debt"][idx]),
         )
         return TickInputs(
-            names=list(names),
+            names=list(self.store.live_names()),
             state=state,
             capacity_tps=self.capacity().tokens_per_second,
-            measured_tps=jnp.asarray(measured),
-            used_kv=jnp.asarray(used_kv),
-            used_conc=jnp.asarray(used_conc),
-            demand_tps=jnp.asarray(demand),
+            measured_tps=jnp.asarray(
+                c["measured_tps"][idx].astype(np.float32)),
+            used_kv=jnp.asarray(c["kv_in_use"][idx].astype(np.float32)),
+            used_conc=jnp.asarray(c["resident"][idx].astype(np.float32)),
+            demand_tps=jnp.asarray(c["demand_tps"][idx].astype(np.float32)),
             avg_slo_ms=self.pool_avg_slo(),
         )
 
     def apply_tick(self, now: float, names: list[str],
                    new_burst: np.ndarray, new_debt: np.ndarray,
                    alloc: np.ndarray, weights: np.ndarray) -> TickRecord:
-        """Scatter kernel outputs back into status + ledger (steps 5–6)
-        and append the observability record."""
-        alloc_f = [float(a) for a in alloc]
-        for i, name in enumerate(names):
-            st = self.status[name]
-            st.burst = float(new_burst[i])
-            st.debt = float(new_debt[i])
-            st.effective = Resources(alloc_f[i], st.effective.kv_bytes,
-                                     st.effective.concurrency)
-            self.ledger.set_rate(name, alloc_f[i], now)
+        """Scatter compact kernel outputs back into the resident
+        columns (steps 5–6) and append the observability record.  Row i
+        of every array belongs to ``names[i]``."""
+        slot_of = self.store.slot_of
+        slots = np.fromiter((slot_of[n] for n in names),
+                            np.int64, count=len(names))
+        c = self.store.col
+        alloc64 = np.asarray(alloc, np.float64)
+        c["burst"][slots] = np.asarray(new_burst, np.float32)
+        c["debt"][slots] = np.asarray(new_debt, np.float32)
+        c["eff_tps"][slots] = alloc64
+        self.store.mark_dirty()
+        mask = np.zeros(self.store.capacity, bool)
+        mask[slots] = True
+        rates = np.zeros(self.store.capacity, np.float64)
+        rates[slots] = alloc64
+        self.ledger.set_rate_rows(mask, rates, now)
+        rec = TickRecord.from_arrays(
+            now, self.capacity().tokens_per_second, list(names),
+            allocations=alloc64,
+            priorities=np.asarray(weights, np.float64),
+            debts=c["debt"][slots].astype(np.float64),
+            bursts=c["burst"][slots].astype(np.float64),
+            in_flight=c["in_flight"][slots].copy(),
+            demand_tps=c["demand_tps"][slots].copy(),
+        )
+        self.history.append(rec)
+        return rec
 
-        rec = TickRecord(
-            t=now,
-            capacity_tps=self.capacity().tokens_per_second,
-            allocations=dict(zip(names, alloc_f)),
-            priorities={n: float(weights[i])
-                        for i, n in enumerate(names)},
-            debts={n: self.status[n].debt for n in names},
-            bursts={n: self.status[n].burst for n in names},
-            in_flight={n: self.status[n].in_flight for n in names},
-            demand_tps=dict(self._demand_tps),
+    def _absorb_tick(self, now: float, new_state: ControlState,
+                     alloc: np.ndarray, weights: np.ndarray,
+                     adopt_device: bool = True) -> TickRecord:
+        """Adopt FULL-WIDTH kernel outputs as the new resident truth:
+        burst/debt columns sync from the output state (free slots see
+        zero inputs and stay zero), allocations land in the effective
+        column, and ONE vectorized ledger row-op re-rates every live
+        bucket.  No per-row Python."""
+        s = self.store
+        c = s.col
+        if adopt_device:
+            s.adopt_device(new_state)
+        else:
+            c["burst"][:] = np.asarray(new_state.burst)
+            c["debt"][:] = np.asarray(new_state.debt)
+            s.mark_dirty()
+        alive = c["alive"]
+        alloc64 = np.asarray(alloc, np.float64)
+        c["eff_tps"][:] = np.where(alive, alloc64, c["eff_tps"])
+        self.ledger.set_rate_rows(alive, alloc64, now)
+        idx = s.live_slots()
+        rec = TickRecord.from_arrays(
+            now, self.capacity().tokens_per_second, s.live_names(),
+            allocations=alloc64[idx],
+            priorities=np.asarray(weights, np.float64)[idx],
+            debts=c["debt"][idx].astype(np.float64),
+            bursts=c["burst"][idx].astype(np.float64),
+            in_flight=c["in_flight"][idx].copy(),
+            demand_tps=c["demand_tps"][idx].copy(),
         )
         self.history.append(rec)
         return rec
 
     def tick(self, now: float) -> TickRecord:
-        """One accounting tick on the unified control plane.
-
-        Rows are padded to a power-of-two bucket (inert unbound rows)
-        so entitlement churn does not retrace the jitted kernel; the
-        outputs are sliced back to the live rows."""
-        inp = self.begin_tick(now)
-        n = inp.state.n_rows
-        width = control_plane.bucket_width(n)
-        pad = width - n
-
-        def padvec(x):
-            return (jnp.concatenate([x, jnp.zeros(pad, x.dtype)])
-                    if pad else x)
-
+        """One accounting tick on the unified control plane, straight
+        over the resident arrays: vectorized window fold → ONE fused
+        kernel dispatch at the store's (pow2) width → vectorized
+        absorb.  Free slots ride along as inert unbound rows, so
+        entitlement churn within a capacity bucket never retraces the
+        jitted kernel."""
+        self._measure(now)
+        measured, used_kv, used_conc, demand = self._kernel_inputs()
         new_state, alloc, weights = control_plane.control_tick(
-            control_plane.pad_state(inp.state, width),
-            jnp.float32(inp.capacity_tps), padvec(inp.measured_tps),
-            padvec(inp.used_kv), padvec(inp.used_conc),
-            padvec(inp.demand_tps), jnp.float32(inp.avg_slo_ms),
+            self.store.device_state(),
+            jnp.float32(self.capacity().tokens_per_second),
+            measured, used_kv, used_conc, demand,
+            jnp.float32(self.pool_avg_slo()),
             coeff=self.spec.coefficients)
-        return self.apply_tick(
-            now, inp.names, np.asarray(new_state.burst)[:n],
-            np.asarray(new_state.debt)[:n], np.asarray(alloc)[:n],
-            np.asarray(weights)[:n])
+        return self._absorb_tick(now, new_state, np.asarray(alloc),
+                                 np.asarray(weights))

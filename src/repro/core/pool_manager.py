@@ -36,6 +36,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import control_plane
+from repro.core.control_plane import ControlState
 from repro.core.pool import InFlight, TickRecord, TokenPool
 from repro.core.types import EntitlementSpec, PoolSpec
 from repro.core.virtual_node import VirtualNodeProvider
@@ -193,12 +194,79 @@ class PoolManager:
     def on_complete(self, request_id: str, actual_output_tokens: int,
                     now: float) -> Optional[tuple[str, InFlight]]:
         """Settle a completion on whichever pool admitted the request.
-        Returns (pool name, settled record) or None if unknown."""
+        Returns (pool name, settled record) or None if unknown.  A
+        request served by a SPILL leg additionally transfers the
+        corresponding debt credit from the preferred entitlement to the
+        serving one (:meth:`transfer_spill_debt`)."""
         pool = self.find_pool_of(request_id)
         if pool is None:
             return None
         rec = pool.on_complete(request_id, actual_output_tokens, now)
-        return (pool.spec.name, rec) if rec is not None else None
+        if rec is None:
+            return None
+        if rec.spill_from is not None:
+            self.transfer_spill_debt(rec, pool.spec.name, now)
+        return (pool.spec.name, rec)
+
+    def transfer_spill_debt(self, rec: InFlight, serving_pool: str,
+                            now: float) -> float:
+        """Per-request cross-pool debt transfer (ROADMAP item 4, the
+        per-request half): a request the client PREFERRED on leg
+        ``rec.spill_from`` but that was served by a spill leg moves the
+        service-equivalent debt credit between the two entitlements on
+        completion —
+
+          * the preferred entitlement's debt DRAINS: it was recorded as
+            denied demand there (raising debt every tick), yet the
+            tenant did get served, just elsewhere;
+          * the serving entitlement INHERITS the drained amount (when
+            it is debt-bearing): the underserved tenant carries its
+            priority boost to the spill target, so the spilled traffic
+            keeps being served there.
+
+        The credit is the Eq. 2 gap-equivalent of the settled tokens:
+        one completion of ``settled_tokens`` over its service window
+        covers ``settled / (λ_e · window)`` of the preferred baseline,
+        clipped and EWMA-weighted exactly like a tick's gap sample.
+        Clamps: the source never drains below ``debt_min``, the target
+        never exceeds ``debt_max``.  Returns the transferred amount."""
+        from repro.core.types import DEBT_CLASSES
+
+        pref_pool, pref_ent = rec.spill_from
+        if pref_ent == rec.entitlement:
+            return 0.0
+        src_name = self.owner_of(pref_ent, hint=pref_pool)
+        if src_name is None:
+            return 0.0
+        spool = self.pools[src_name]
+        espec = spool.entitlements[pref_ent]
+        base = espec.baseline.tokens_per_second
+        if (espec.qos.service_class not in DEBT_CLASSES or base <= 0.0
+                or rec.settled_tokens <= 0.0):
+            return 0.0
+        coeff = spool.spec.coefficients
+        window = max(now - rec.admitted_at,
+                     spool.spec.accounting_interval_s)
+        gap_credit = min(coeff.gap_clip,
+                         rec.settled_tokens / (base * window))
+        credit = (1.0 - coeff.gamma_debt) * gap_credit
+        src_st = spool.status[pref_ent]
+        delta = min(credit, src_st.debt - coeff.debt_min)
+        if delta <= 0.0:
+            return 0.0
+        dpool = self.pools.get(serving_pool)
+        dspec = (dpool.entitlements.get(rec.entitlement)
+                 if dpool is not None else None)
+        if dspec is not None \
+                and dspec.qos.service_class in DEBT_CLASSES:
+            dst = dpool.status[rec.entitlement]
+            dmax = dpool.spec.coefficients.debt_max
+            delta = min(delta, dmax - dst.debt)
+            if delta <= 0.0:
+                return 0.0
+            dst.debt = dst.debt + delta
+        src_st.debt = src_st.debt - delta
+        return delta
 
     def on_evict(self, request_id: str, now: float
                  ) -> Optional[tuple[str, InFlight]]:
@@ -212,7 +280,14 @@ class PoolManager:
     def tick(self, now: float) -> dict[str, TickRecord]:
         """Tick EVERY pool through one fused multi-pool kernel dispatch
         per coefficient group (coefficients are a static jit argument,
-        so pools sharing them share a compiled kernel)."""
+        so pools sharing them share a compiled kernel).
+
+        The stacked inputs are the pools' RESIDENT arrays: each pool's
+        vectorized window fold runs in place, its device-mirrored state
+        is padded to the group's (pow2) width — free slots and padding
+        are both inert unbound rows — and the kernel outputs are
+        absorbed back into each store with vectorized row ops.  No
+        per-entitlement Python anywhere on this path."""
         groups: dict[object, list[TokenPool]] = {}
         for pool in self.pools.values():
             groups.setdefault(pool.spec.coefficients, []).append(pool)
@@ -223,37 +298,51 @@ class PoolManager:
                 pool = group[0]
                 records[pool.spec.name] = pool.tick(now)
                 continue
-            inputs = [p.begin_tick(now) for p in group]
-
-            # Bucket the row axis to a power of two so entitlement
-            # churn in one pool does not retrace the fleet's kernel.
+            for p in group:
+                p._measure(now)
+            # Store capacities are already powers of two; the group
+            # width is the widest store, so entitlement churn within
+            # any pool's capacity bucket does not retrace the kernel.
             width = control_plane.bucket_width(
-                max(i.state.n_rows for i in inputs))
+                max(p.store.capacity for p in group))
 
-            def padded(xs):
-                return jnp.stack(
-                    [control_plane.pad_rows(x, width) for x in xs])
+            def padded(k):
+                out = np.zeros((len(group), width), np.float32)
+                for i, p in enumerate(group):
+                    out[i, :p.store.capacity] = p.store.col[k]
+                return jnp.asarray(out)
 
             states = control_plane.stack_states(
-                [i.state for i in inputs], width=width)
+                [p.store.device_state() for p in group], width=width)
             new_state, alloc, weights = control_plane.control_tick_pools(
                 states,
-                jnp.asarray([i.capacity_tps for i in inputs], jnp.float32),
-                padded([i.measured_tps for i in inputs]),
-                padded([i.used_kv for i in inputs]),
-                padded([i.used_conc for i in inputs]),
-                padded([i.demand_tps for i in inputs]),
-                jnp.asarray([i.avg_slo_ms for i in inputs], jnp.float32),
+                jnp.asarray([p.capacity().tokens_per_second
+                             for p in group], jnp.float32),
+                padded("measured_tps"),
+                padded("kv_in_use"),
+                padded("resident"),
+                padded("demand_tps"),
+                jnp.asarray([p.pool_avg_slo() for p in group],
+                            jnp.float32),
                 coeff=coeff)
             burst = np.asarray(new_state.burst)
             debt = np.asarray(new_state.debt)
             alloc = np.asarray(alloc)
             weights = np.asarray(weights)
-            for k, (pool, inp) in enumerate(zip(group, inputs)):
-                n = len(inp.names)
-                records[pool.spec.name] = pool.apply_tick(
-                    now, inp.names, burst[k, :n], debt[k, :n],
-                    alloc[k, :n], weights[k, :n])
+            for k, pool in enumerate(group):
+                w = pool.store.capacity
+                sliced = ControlState(
+                    class_code=new_state.class_code[k, :w],
+                    bound=new_state.bound[k, :w],
+                    baseline_tps=new_state.baseline_tps[k, :w],
+                    baseline_kv=new_state.baseline_kv[k, :w],
+                    baseline_conc=new_state.baseline_conc[k, :w],
+                    slo_ms=new_state.slo_ms[k, :w],
+                    burst=jnp.asarray(burst[k, :w]),
+                    debt=jnp.asarray(debt[k, :w]),
+                )
+                records[pool.spec.name] = pool._absorb_tick(
+                    now, sliced, alloc[k, :w], weights[k, :w])
         return records
 
 

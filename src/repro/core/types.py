@@ -234,6 +234,17 @@ class PoolSpec:
     #: tokens-per-minute semantics (paper §1 [7]) ⇒ 60; short windows
     #: make check (4) bind before the contention check (5).
     bucket_window_s: float = 4.0
+    #: time constant τ of the dt-aware demand EWMA: each tick retains
+    #: exp(−dt/τ) of the previous estimate (α = 1 − exp(−dt/τ)), so the
+    #: smoothing horizon no longer depends on the tick rate.  None (the
+    #: default) uses τ = accounting_interval_s / ln 2 — a tick at the
+    #: nominal interval then retains exactly ½, the historical fixed
+    #: blend.
+    demand_tau_s: Optional[float] = None
+    #: cap on retained ``TickRecord`` history (``TokenPool.history`` is
+    #: a deque(maxlen=...)); None = unbounded.  Long-running
+    #: deployments tick forever — an unbounded history is a slow leak.
+    history_maxlen: Optional[int] = 4096
 
 
 @dataclasses.dataclass(frozen=True)

@@ -9,9 +9,11 @@ execute it directly.  This module keeps:
   scheduling quantum as a jit-compiled ``lax.fori_loop``: this IS the
   gateway's default request path (``Gateway.handle_quantum`` batches
   each (pool, leg) group through one dispatch);
-- :func:`arrays_from_pool` / :func:`quantum_snapshot` — bridges
-  snapshotting a scalar ``TokenPool`` into array form WITHOUT mutating
-  it;
+- :func:`arrays_from_pool` / :func:`quantum_snapshot` — O(1) views
+  over a ``TokenPool``'s RESIDENT arrays (``core.resident``): the
+  kernel state is the store's cached device mirror and bucket levels
+  are one vectorized projection, with nothing mutated and nothing
+  gathered per row;
 - aliases (``PoolArrays``, ``tick_batch``, ``waterfill_batch``, …) so
   existing imports keep working.
 """
@@ -104,6 +106,8 @@ def admit_quantum(arr: ControlState,
     from — the SAME array makes self-threshold ties bit-exact by
     construction; when omitted they are recomputed here.
     """
+    from repro.core.control_plane import TRACE_COUNTS
+    TRACE_COUNTS["admit_quantum"] += 1         # executes at trace time only
     M = req_ent.shape[0]
     if pool_resident is None:
         # legacy callers: no resident count ⇒ no free-slot escape
@@ -170,46 +174,30 @@ def admit_quantum(arr: ControlState,
 def arrays_from_pool(pool, now: float = 0.0
                      ) -> tuple[ControlState, jax.Array, jax.Array,
                                 jax.Array]:
-    """Bridge: snapshot a scalar ``TokenPool`` into array form.
+    """Bridge: view a ``TokenPool``'s RESIDENT arrays in kernel form.
     Returns (ControlState, bucket_levels, in_flight, kv_in_use) with
-    rows in sorted-entitlement-name order (the pool's own row order).
+    rows in resident-slot order (``pool.store.slot_of`` maps names to
+    rows); free slots ride along as inert unbound rows, so the width
+    is the store's pow2 capacity and never retraces the kernels.
 
-    Pure read: bucket levels are projected to ``now`` via
-    ``Ledger.peek_level`` — snapshotting neither creates buckets nor
-    advances refill clocks, so observing a pool cannot change any
-    later admission decision."""
-    names = sorted(pool.entitlements)
-    from repro.core.types import EntitlementState
-    cc, bound, btps, bkv, bconc, slo, burst, debt = [], [], [], [], [], [], [], []
-    levels, infl, kvu = [], [], []
-    for n in names:
-        e, s = pool.entitlements[n], pool.status[n]
-        cc.append(CLASS_CODES[e.qos.service_class])
-        bound.append(s.state == EntitlementState.BOUND)
-        btps.append(e.baseline.tokens_per_second)
-        bkv.append(e.baseline.kv_bytes)
-        bconc.append(e.baseline.concurrency)
-        slo.append(e.qos.slo_target_ms)
-        burst.append(s.burst)
-        debt.append(s.debt)
-        levels.append(pool.ledger.peek_level(
-            n, s.effective.tokens_per_second
-            or e.baseline.tokens_per_second, now))
-        infl.append(s.resident)          # check 3 counts resident seqs
-        kvu.append(s.kv_bytes_in_use)
-    arr = ControlState(
-        class_code=jnp.array(cc, dtype=jnp.int32),
-        bound=jnp.array(bound),
-        baseline_tps=jnp.array(btps, dtype=jnp.float32),
-        baseline_kv=jnp.array(bkv, dtype=jnp.float32),
-        baseline_conc=jnp.array(bconc, dtype=jnp.float32),
-        slo_ms=jnp.array(slo, dtype=jnp.float32),
-        burst=jnp.array(burst, dtype=jnp.float32),
-        debt=jnp.array(debt, dtype=jnp.float32),
-    )
-    return (arr, jnp.array(levels, dtype=jnp.float32),
-            jnp.array(infl, dtype=jnp.int32),
-            jnp.array(kvu, dtype=jnp.float32))
+    Pure read: bucket levels are projected to ``now`` with one
+    vectorized ``Ledger.peek_levels`` expression — snapshotting
+    neither creates buckets nor advances refill clocks, so observing a
+    pool cannot change any later admission decision.  The
+    ``ControlState`` is the store's cached device mirror: after a tick
+    this is O(1) Python (no per-row gather)."""
+    import numpy as np
+
+    c = pool.store.col
+    # scalar fallback rate for bucketless rows: effective-or-baseline,
+    # the same `eff or baseline` rule the scalar §4.3 pipeline applies
+    fallback = np.where(c["eff_tps"] != 0.0, c["eff_tps"],
+                        c["baseline_tps"].astype(np.float64))
+    levels = pool.ledger.peek_levels(fallback, now)
+    return (pool.store.device_state(),
+            jnp.asarray(levels.astype(np.float32)),
+            jnp.asarray(c["resident"].astype(np.int32)),
+            jnp.asarray(c["kv_in_use"].astype(np.float32)))
 
 
 def running_min_live(pool) -> float:
@@ -267,15 +255,18 @@ class QuantumSnapshot:
 
 def quantum_snapshot(pool, now: float) -> QuantumSnapshot:
     """Snapshot a ``TokenPool`` for one batched admission quantum.
-    Pure read (see :func:`arrays_from_pool`)."""
+    Pure read (see :func:`arrays_from_pool`): the state arrays are
+    views of the pool's resident arrays — no per-row Python gather
+    (the name→slot map and name list are C-speed container copies, so
+    a held snapshot stays internally consistent even if membership
+    churns after it was taken)."""
     state, levels, infl, kvu = arrays_from_pool(pool, now)
-    names = sorted(pool.entitlements)
-    row_of = {n: i for i, n in enumerate(names)}
+    row_of = dict(pool.store.slot_of)
     avg_slo = float(pool.pool_avg_slo())
     weights = priority_batch(state, jnp.float32(avg_slo),
                              pool.spec.coefficients)
     return QuantumSnapshot(
-        names=names,
+        names=list(pool.store.live_names()),
         row_of=row_of,
         state=state,
         bucket_level=levels,

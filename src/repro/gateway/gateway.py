@@ -211,7 +211,7 @@ class Gateway:
             policy=self.spill_policy)
         first_denial = None
         best_retry: Optional[float] = None
-        for hop, leg in legs:
+        for i_leg, (hop, leg) in enumerate(legs):
             decision = self._controller(leg.pool).decide(AdmissionRequest(
                 entitlement=leg.entitlement, input_tokens=input_tokens,
                 max_tokens=max_tokens, arrival_s=now,
@@ -221,6 +221,15 @@ class Gateway:
                 self.store.incr(f"admits:{leg.entitlement}", 1.0, now)
                 if hop > 0:
                     self.store.incr(f"spills:{api_key}", 1.0, now)
+                if i_leg > 0:
+                    # served by a spill leg: remember the PREFERRED leg
+                    # so completion can transfer the debt credit
+                    # (PoolManager.transfer_spill_debt)
+                    rec = self.manager.pool(leg.pool).in_flight.get(
+                        request_id)
+                    if rec is not None:
+                        first = legs[0][1]
+                        rec.spill_from = (first.pool, first.entitlement)
                 return GatewayResponse(
                     status=200, request_id=request_id,
                     priority=decision.priority, pool=leg.pool,
@@ -454,10 +463,17 @@ class Gateway:
             hop, leg = p.current()
             ent = leg.entitlement
             w = float(req_w[j])
+            # served off its first ordered leg ⇒ spill: tag the record
+            # with the preferred leg for completion-time debt transfer
+            spill_from = None
+            if p.leg_ptr > 0:
+                first = p.legs[0][1]
+                spill_from = (first.pool, first.entitlement)
             admit_recs.append(InFlight(
                 request_id=p.req.request_id, entitlement=ent,
                 priority=w, kv_bytes=float(kvs[j]),
-                charged_tokens=int(tokens[j]), admitted_at=now))
+                charged_tokens=int(tokens[j]), admitted_at=now,
+                spill_from=spill_from))
             demand[ent] = demand.get(ent, 0.0) + float(tokens[j])
             n_admits[ent] = n_admits.get(ent, 0) + 1
             if hop > 0:

@@ -374,7 +374,9 @@ class ServingSimulator:
             "per_entitlement": per,
             "max_waiting": max((p.waiting for p in self.timeline),
                                default=0),
-            "history": self.pool.history,
+            # the pool keeps a bounded deque (PoolSpec.history_maxlen);
+            # expose a list so consumers can slice it
+            "history": list(self.pool.history),
             "timeline": self.timeline,
         }
 
@@ -800,7 +802,7 @@ class MultiPoolSimulator:
             per[wname] = s
         return {
             "per_workload": per,
-            "per_pool_history": {n: p.history
+            "per_pool_history": {n: list(p.history)
                                  for n, p in self.manager.pools.items()},
             "replica_timeline": self.replica_timeline,
             "migrations": [prop for _, plan in self.plans

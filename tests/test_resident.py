@@ -1,0 +1,456 @@
+"""Resident control-plane state: the arrays are the source of truth,
+dicts are views (``core.resident``).
+
+Covers the ownership inversion invariants:
+
+- ``pool.status[name]`` views write through to the resident columns
+  and never diverge from them;
+- the resident arrays always equal the arrays a per-name dict walk
+  (the OLD ``arrays_from_pool`` gather) would build — pinned through
+  arbitrary churn (add / remove / expire / attach / detach interleaved
+  with ticks and admissions, deterministic + hypothesis);
+- free-slot recycling never aliases live rows, freed rows are zeroed
+  (inert under every kernel mask), capacity grows by pow2 doubling;
+- entitlement churn WITHIN a pow2 capacity bucket never retraces the
+  jitted kernels (trace-counter pins);
+- ``TokenPool.history`` is bounded by ``PoolSpec.history_maxlen``;
+- the demand EWMA is dt-aware (α = 1 − exp(−dt/τ)) and the fleet
+  planner/scalar-autoscaler pair stays decision-identical on it.
+"""
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdmissionController,
+    AdmissionRequest,
+    EntitlementSpec,
+    EntitlementState,
+    PoolSpec,
+    QoS,
+    Resources,
+    ScalingBounds,
+    ServiceClass,
+    TokenPool,
+)
+from repro.core.control_plane import CLASS_CODES, TRACE_COUNTS
+from repro.core.resident import STATE_CODES
+
+
+def mkpool(name="p", tps=1000.0, conc=64.0, maxlen=None, tau=None,
+           max_replicas=4):
+    spec = PoolSpec(
+        name=name, model="m",
+        scaling=ScalingBounds(1, max_replicas),
+        per_replica=Resources(tps, 1 << 30, conc),
+        history_maxlen=maxlen, demand_tau_s=tau)
+    return TokenPool(spec)
+
+
+def ent(name, klass=ServiceClass.ELASTIC, tps=50.0, conc=4.0,
+        slo=1000.0, kv=0.0, ttl=None):
+    return EntitlementSpec(
+        name=name, tenant_id=f"t-{name}", pool="p",
+        qos=QoS(service_class=klass, slo_target_ms=slo),
+        baseline=Resources(tps, kv, conc), ttl_s=ttl)
+
+
+def oracle_arrays(pool):
+    """The OLD dict-walk gather: per-name rows built from the spec /
+    status dicts and the per-bucket ledger API, in sorted-name order.
+    The resident arrays must agree with this row for row."""
+    names = sorted(pool.entitlements)
+    rows = {}
+    for n in names:
+        e, s = pool.entitlements[n], pool.status[n]
+        rows[n] = dict(
+            class_code=CLASS_CODES[e.qos.service_class],
+            bound=s.state == EntitlementState.BOUND,
+            baseline_tps=np.float32(e.baseline.tokens_per_second),
+            baseline_kv=np.float32(e.baseline.kv_bytes),
+            baseline_conc=np.float32(e.baseline.concurrency),
+            slo_ms=np.float32(e.qos.slo_target_ms),
+            burst=np.float32(s.burst),
+            debt=np.float32(s.debt),
+            resident=s.resident,
+            kv_in_use=s.kv_bytes_in_use,
+            bucket_level=(pool.ledger.bucket(n).level
+                          if pool.ledger.has_bucket(n) else None),
+        )
+    return rows
+
+
+def assert_store_matches_dicts(pool):
+    """Resident columns == dict-built oracle rows, plus the structural
+    free-slot / aliasing invariants."""
+    store = pool.store
+    c = store.col
+    # no aliasing: every live name has its own slot, maps both ways
+    slots = list(store.slot_of.values())
+    assert len(set(slots)) == len(slots)
+    assert set(store.slot_of) == set(pool.entitlements) \
+        == set(pool.status)
+    for name, slot in store.slot_of.items():
+        assert store.name_of[slot] == name
+        assert c["alive"][slot]
+    # free slots: not mapped, zeroed on every column (inert padding)
+    live = set(slots)
+    for slot in range(store.capacity):
+        if slot in live:
+            continue
+        assert store.name_of[slot] is None
+        assert not c["alive"][slot]
+        for col_name, arr in c.items():
+            assert arr[slot] == 0, (slot, col_name)
+    # row-for-row equality with the dict walk
+    for name, row in oracle_arrays(pool).items():
+        slot = store.slot_of[name]
+        for key in ("class_code", "baseline_tps", "baseline_kv",
+                    "baseline_conc", "slo_ms", "burst", "debt",
+                    "resident"):
+            assert c[key][slot] == row[key], (name, key)
+        assert bool(c["bound"][slot]) == row["bound"], name
+        assert c["kv_in_use"][slot] == row["kv_in_use"], name
+        if row["bucket_level"] is not None:
+            assert c["has_bucket"][slot]
+            assert c["bucket_level"][slot] == row["bucket_level"], name
+    # the cached device mirror agrees with the columns
+    dev = store.device_state()
+    for key in ("class_code", "bound", "baseline_tps", "baseline_kv",
+                "baseline_conc", "slo_ms", "burst", "debt"):
+        np.testing.assert_array_equal(np.asarray(getattr(dev, key)),
+                                      c[key], err_msg=key)
+
+
+class TestViewsWriteThrough:
+    def test_status_view_is_the_row(self):
+        pool = mkpool()
+        pool.add_entitlement(ent("a"))
+        slot = pool.store.slot_of["a"]
+        st = pool.status["a"]
+        st.debt = 0.5
+        st.burst = 0.25
+        st.in_flight = 3
+        assert pool.store.col["debt"][slot] == np.float32(0.5)
+        assert pool.store.col["burst"][slot] == np.float32(0.25)
+        assert pool.store.col["in_flight"][slot] == 3
+        # and the other way: column writes are visible through the view
+        pool.store.col["debt"][slot] = np.float32(0.75)
+        assert st.debt == 0.75
+
+    def test_state_setter_maintains_bound_mask(self):
+        pool = mkpool()
+        pool.add_entitlement(ent("a"))
+        slot = pool.store.slot_of["a"]
+        assert pool.store.col["bound"][slot]
+        pool.status["a"].state = EntitlementState.DEGRADED
+        assert not pool.store.col["bound"][slot]
+        assert (pool.store.col["state_code"][slot]
+                == STATE_CODES[EntitlementState.DEGRADED])
+
+    def test_device_mirror_invalidated_by_view_writes(self):
+        pool = mkpool()
+        pool.add_entitlement(ent("a"))
+        dev0 = pool.store.device_state()
+        pool.status["a"].debt = 0.5
+        dev1 = pool.store.device_state()
+        assert dev1 is not dev0
+        assert float(dev1.debt[pool.store.slot_of["a"]]) == \
+            pytest.approx(0.5)
+
+    def test_bucket_view_is_the_row(self):
+        pool = mkpool()
+        pool.add_entitlement(ent("a", tps=100.0))
+        b = pool.ledger.bucket("a")
+        b.level = 123.0
+        slot = pool.store.slot_of["a"]
+        assert pool.store.col["bucket_level"][slot] == 123.0
+        # two views of the same row can never diverge
+        assert pool.ledger.bucket("a").level == 123.0
+
+
+class TestChurnDeterministic:
+    def test_scripted_churn_matches_dict_oracle(self):
+        pool = mkpool()
+        ctrl = AdmissionController(pool)
+        now = 0.0
+        pool.add_entitlement(ent("a", ServiceClass.GUARANTEED, 100.0))
+        pool.add_entitlement(ent("b", ServiceClass.ELASTIC, 50.0))
+        pool.add_entitlement(ent("c", ServiceClass.SPOT, 0.0))
+        assert_store_matches_dicts(pool)
+        for step in range(1, 6):
+            now = float(step)
+            for n in list(pool.entitlements):
+                pool.register_deny(n, 60.0, low_priority=False)
+            ctrl.decide(AdmissionRequest("a", 16, 16, now,
+                                         request_id=f"r{step}"))
+            pool.tick(now)
+            assert_store_matches_dicts(pool)
+        # churn: remove, re-add (slot recycled), expire a TTL tenant
+        pool.remove_entitlement("b", now)
+        assert_store_matches_dicts(pool)
+        pool.add_entitlement(ent("d", ServiceClass.ELASTIC, 25.0,
+                                 ttl=2.0), now=now)
+        assert_store_matches_dicts(pool)
+        pool.tick(now + 1.0)
+        assert pool.status["d"].state == EntitlementState.BOUND
+        pool.tick(now + 3.0)                       # past the TTL
+        assert pool.status["d"].state == EntitlementState.EXPIRED
+        assert_store_matches_dicts(pool)
+
+    def test_detach_attach_roundtrip_between_stores(self):
+        a, b = mkpool("a"), mkpool("b")
+        a.add_entitlement(ent("x", ServiceClass.ELASTIC, 50.0))
+        a.add_entitlement(ent("y", ServiceClass.ELASTIC, 40.0))
+        a.register_deny("x", 300.0, low_priority=False)
+        a.tick(1.0)
+        a.status["x"].debt = 0.375
+        level = a.ledger.bucket("x").level
+        demand = a.demand_snapshot()["x"]
+        mig = a.detach_entitlement("x", now=1.0)
+        assert "x" not in a.store
+        assert_store_matches_dicts(a)
+        b.attach_entitlement(mig, now=1.0)
+        assert b.status["x"].debt == pytest.approx(0.375)
+        assert b.ledger.bucket("x").level == pytest.approx(level)
+        assert b.demand_snapshot()["x"] == pytest.approx(demand)
+        assert_store_matches_dicts(b)
+        # the freed slot in A is recycled by the next add without
+        # touching the surviving row
+        y_slot = a.store.slot_of["y"]
+        y_debt = a.status["y"].debt
+        a.add_entitlement(ent("z", ServiceClass.SPOT, 0.0))
+        assert a.store.slot_of["y"] == y_slot
+        assert a.status["y"].debt == y_debt
+        assert_store_matches_dicts(a)
+
+    def test_capacity_growth_preserves_rows(self):
+        pool = mkpool()
+        for i in range(20):                       # forces pow2 growth
+            pool.add_entitlement(ent(f"e{i}", tps=float(10 + i)))
+        assert pool.store.capacity == 32
+        assert_store_matches_dicts(pool)
+        pool.tick(1.0)
+        assert_store_matches_dicts(pool)
+
+
+class TestNoRetraceWithinBucket:
+    def test_tick_add_remove_within_bucket_no_retrace(self):
+        pool = mkpool()
+        for i in range(5):
+            pool.add_entitlement(ent(f"e{i}"))
+        assert pool.store.capacity == 8
+        pool.tick(1.0)
+        pool.tick(2.0)
+        base = TRACE_COUNTS["control_tick"]
+        pool.add_entitlement(ent("late"))          # 6 rows, still cap 8
+        pool.tick(3.0)
+        pool.remove_entitlement("e0")
+        pool.tick(4.0)
+        pool.add_entitlement(ent("recycled"))      # reuses e0's slot
+        pool.tick(5.0)
+        assert TRACE_COUNTS["control_tick"] == base
+        assert pool.store.capacity == 8
+
+    def test_quantum_add_remove_within_bucket_no_retrace(self):
+        from repro.gateway import Gateway, QuantumRequest
+        pool = mkpool()
+        gw = Gateway(pool)
+        for i in range(5):
+            pool.add_entitlement(ent(f"e{i}", conc=8.0))
+            gw.register_key(f"k{i}", f"e{i}", pool="p")
+
+        def quantum(tag):
+            return [QuantumRequest(f"k{i % 4}", f"{tag}-{i}", 16, 16)
+                    for i in range(8)]
+
+        gw.handle_quantum(quantum("warm"), now=0.0)
+        base = TRACE_COUNTS["admit_quantum"]
+        pool.add_entitlement(ent("late", conc=8.0))
+        gw.handle_quantum(quantum("a"), now=0.1)
+        pool.remove_entitlement("late")
+        gw.handle_quantum(quantum("b"), now=0.2)
+        assert TRACE_COUNTS["admit_quantum"] == base
+
+
+class TestHistoryBound:
+    def test_history_is_bounded(self):
+        pool = mkpool(maxlen=5)
+        pool.add_entitlement(ent("a"))
+        for t in range(1, 12):
+            pool.tick(float(t))
+        assert len(pool.history) == 5
+        assert pool.history[-1].t == 11.0
+        assert pool.history[0].t == 7.0
+
+    def test_default_is_bounded_none_is_unbounded(self):
+        assert TokenPool(PoolSpec(name="p", model="m")
+                         ).history.maxlen == 4096
+        assert mkpool(maxlen=None).history.maxlen is None
+
+
+class TestDtAwareDemandEWMA:
+    def test_nominal_interval_keeps_half_blend(self):
+        """At dt == accounting_interval_s the default τ retains exactly
+        ½ — bit-identical to the historical fixed blend."""
+        pool = mkpool()
+        pool.add_entitlement(ent("a", tps=100.0))
+        pool.register_deny("a", 100.0, low_priority=False)
+        pool.tick(1.0)
+        assert pool.demand_snapshot()["a"] == 50.0     # exactly
+
+    def test_decay_is_tick_rate_independent(self):
+        """With τ fixed, the same elapsed time decays the estimate the
+        same amount no matter how many ticks it is split into."""
+        tau = 2.0
+        coarse, fine = mkpool(tau=tau), mkpool(tau=tau)
+        for pool in (coarse, fine):
+            pool.add_entitlement(ent("a", tps=100.0))
+            pool.register_deny("a", 100.0, low_priority=False)
+            pool.tick(1.0)                              # seed the EWMA
+        seed = coarse.demand_snapshot()["a"]
+        assert seed == fine.demand_snapshot()["a"]
+        coarse.tick(5.0)                                # one dt=4 tick
+        for t in (2.0, 3.0, 4.0, 5.0):                  # four dt=1 ticks
+            fine.tick(t)
+        expected = seed * math.exp(-4.0 / tau)
+        assert coarse.demand_snapshot()["a"] == pytest.approx(expected)
+        assert fine.demand_snapshot()["a"] == pytest.approx(expected)
+
+    def test_legacy_fixed_blend_depended_on_tick_rate(self):
+        """The default τ (interval/ln2) is still dt-aware: splitting an
+        interval into two half-ticks decays by ~the same factor as one
+        full tick — the old fixed 0.5/0.5 blend would have squared it."""
+        a, b = mkpool(), mkpool()
+        for pool in (a, b):
+            pool.add_entitlement(ent("a", tps=100.0))
+            pool.register_deny("a", 100.0, low_priority=False)
+            pool.tick(1.0)
+        a.tick(2.0)                                     # dt = 1
+        b.tick(1.5)                                     # dt = ½ twice
+        b.tick(2.0)
+        assert a.demand_snapshot()["a"] == pytest.approx(
+            b.demand_snapshot()["a"], rel=1e-9)
+
+    def test_autoscaler_and_fleet_kernel_agree_on_new_signal(self):
+        """The scalar Autoscaler oracle and the fused plan_fleet kernel
+        stay decision-identical when fed the dt-aware demand signal."""
+        from repro.core import Autoscaler, AutoscalerConfig, FleetPlanner
+
+        pool = mkpool(tau=1.5, tps=240.0, conc=16.0, max_replicas=8)
+        pool.add_entitlement(ent("a", ServiceClass.GUARANTEED, 200.0))
+        pool.add_entitlement(ent("b", ServiceClass.ELASTIC, 100.0))
+        planner = FleetPlanner()
+        scalar = Autoscaler(pool, AutoscalerConfig())
+        rec = None
+        for t, burst in ((1.0, 900.0), (1.7, 1500.0), (3.2, 400.0),
+                         (4.0, 0.0), (5.5, 0.0)):
+            for n in pool.entitlements:
+                pool.register_deny(n, burst, low_priority=False)
+            rec = pool.tick(t)                          # irregular dt
+            fleet_d = planner.plan({"p": pool}, {"p": rec},
+                                   now=t).decisions["p"]
+            scalar_d = scalar.step(rec)
+            assert fleet_d.desired == scalar_d.desired, t
+            assert fleet_d.demand_tps == pytest.approx(
+                scalar_d.demand_tps, rel=1e-5, abs=1e-3), t
+
+
+# -- churn sweep: resident arrays == dict-built oracle through random
+# add/remove/expire/detach/attach/tick/admission interleavings.  The
+# procedure is written against a generic ``choose(options)`` so the
+# SAME code runs under a seeded deterministic driver everywhere and
+# under hypothesis (which shrinks failures) where it is installed.
+
+CLASSES = list(ServiceClass)
+
+
+def run_churn(choose, n_ops: int) -> None:
+    """One churn scenario: every ``choose(list)`` picks the next
+    branch; the store must match the dict oracle after EVERY op and
+    recycling must never alias live rows."""
+    pool = mkpool()
+    ctrl = AdmissionController(pool)
+    detached = {}                    # name → EntitlementMigration
+    counter = [0]
+    now = [0.0]
+
+    def do_add():
+        counter[0] += 1
+        name = f"e{counter[0]}"
+        klass = choose(CLASSES)
+        tps = (0.0 if klass in (ServiceClass.SPOT,
+                                ServiceClass.PREEMPTIBLE)
+               else float(choose([10.0, 50.0, 100.0])))
+        pool.add_entitlement(
+            ent(name, klass, tps,
+                slo=float(choose([250.0, 1000.0, 8000.0])),
+                ttl=choose([None, None, 3.0])),
+            now=now[0])
+
+    def do_remove():
+        names = sorted(pool.entitlements)
+        if names:
+            pool.remove_entitlement(choose(names), now=now[0])
+
+    def do_detach():
+        names = sorted(set(pool.entitlements) - set(detached))
+        if names:
+            name = choose(names)
+            detached[name] = pool.detach_entitlement(name, now=now[0])
+
+    def do_attach():
+        if detached:
+            name = choose(sorted(detached))
+            pool.attach_entitlement(detached.pop(name), now=now[0])
+
+    def do_tick():
+        now[0] += float(choose([0.5, 1.0, 2.0]))
+        for n in pool.entitlements:
+            pool.register_deny(n, 40.0, low_priority=False)
+        pool.tick(now[0])
+
+    def do_admit():
+        names = sorted(pool.entitlements)
+        if names:
+            counter[0] += 1
+            ctrl.decide(AdmissionRequest(
+                choose(names), 16, 16, now[0],
+                request_id=f"r{counter[0]}"))
+
+    ops = [do_add, do_add, do_remove, do_detach, do_attach,
+           do_tick, do_admit]
+    do_add()
+    assert_store_matches_dicts(pool)
+    for _ in range(n_ops):
+        choose(ops)()
+        assert_store_matches_dicts(pool)
+
+
+class TestChurnSeededSweep:
+    """Always-run deterministic instantiation of the churn property
+    (hypothesis adds shrinking randomized depth where installed)."""
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_seeded_churn_stays_coherent(self, seed):
+        rng = np.random.RandomState(seed)
+        run_churn(lambda options: options[rng.randint(len(options))],
+                  n_ops=14)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    class TestChurnHypothesis:
+        @given(data=st.data())
+        @settings(max_examples=25, deadline=None, derandomize=True)
+        def test_random_churn_stays_coherent(self, data):
+            run_churn(
+                lambda options: data.draw(st.sampled_from(options)),
+                n_ops=data.draw(st.integers(6, 18), label="n_ops"))

@@ -1,0 +1,163 @@
+"""Per-request cross-pool spill debt (ROADMAP item 4, per-request
+half): a request denied on its preferred leg but served by a spill leg
+transfers the service-equivalent debt credit from the preferred
+entitlement to the serving one on completion
+(``PoolManager.transfer_spill_debt``).
+"""
+import pytest
+
+from repro.core import (
+    EntitlementSpec,
+    PoolManager,
+    PoolSpec,
+    QoS,
+    Resources,
+    ScalingBounds,
+    ServiceClass,
+)
+from repro.gateway import Gateway, QuantumRequest
+
+
+def mkpool_spec(name, tps=1000.0):
+    return PoolSpec(name=name, model="m", scaling=ScalingBounds(1, 1),
+                    per_replica=Resources(tps, 1 << 30, 64.0),
+                    bucket_window_s=1.0)
+
+
+def ent(name, pool, klass=ServiceClass.ELASTIC, tps=100.0):
+    return EntitlementSpec(
+        name=name, tenant_id="tenant", pool=pool,
+        qos=QoS(service_class=klass, slo_target_ms=1000.0),
+        baseline=Resources(tps, 0.0, 16.0))
+
+
+def spill_gateway(serving_class=ServiceClass.ELASTIC):
+    """Two-pool route for one tenant: preferred leg e@a on pool a
+    (bucket drained → TOKEN_BUDGET denial), spill leg e@b on pool b."""
+    mgr = PoolManager()
+    a = mgr.add_pool(mkpool_spec("a"))
+    b = mgr.add_pool(mkpool_spec("b"))
+    a.add_entitlement(ent("e@a", "a"))
+    b.add_entitlement(ent("e@b", "b", klass=serving_class,
+                          tps=(0.0 if serving_class is ServiceClass.SPOT
+                               else 100.0)))
+    # fund the spill leg generously so leg b always admits
+    spill_bucket = b.ledger.ensure("e@b", 1000.0, 0.0)
+    spill_bucket.rate_tps = 1000.0
+    spill_bucket.level = 1e4
+    gw = Gateway(mgr)
+    gw.register_route("key", [("a", "e@a"), ("b", "e@b")])
+    # drain the preferred bucket so leg a denies on token budget
+    bucket = a.ledger.bucket("e@a")
+    bucket.level = 0.0
+    bucket.rate_tps = 0.0
+    # the preferred entitlement has accrued debt (starved tenant)
+    a.status["e@a"].debt = 0.5
+    return mgr, gw, a, b
+
+
+class TestSpillDebtTransfer:
+    def _expected_delta(self, pool_a, settled, window=1.0, debt=0.5):
+        coeff = pool_a.spec.coefficients
+        base = 100.0
+        gap = min(coeff.gap_clip, settled / (base * window))
+        return min((1.0 - coeff.gamma_debt) * gap,
+                   debt - coeff.debt_min)
+
+    def test_scalar_path_transfers_debt_on_complete(self):
+        mgr, gw, a, b = spill_gateway()
+        r = gw.handle("key", "r1", 64, 64, now=0.0)
+        assert r.status == 200 and r.pool == "b" and r.spill_hops == 1
+        rec = b.in_flight["r1"]
+        assert rec.spill_from == ("a", "e@a")
+        debt_a0, debt_b0 = a.status["e@a"].debt, b.status["e@b"].debt
+        gw.on_complete("r1", 64, latency_s=0.2, now=0.5)
+        # settled = 64 input + 64 actual output = 128 tokens over the
+        # accounting-interval floor (1 s) against a 100 tok/s baseline:
+        # gap clipped to 1.0 → delta = (1 − γ_d)·1.0 = 0.3
+        delta = self._expected_delta(a, 128.0)
+        assert delta == pytest.approx(0.3, abs=1e-9)
+        assert a.status["e@a"].debt == pytest.approx(debt_a0 - delta,
+                                                     rel=1e-5)
+        assert b.status["e@b"].debt == pytest.approx(debt_b0 + delta,
+                                                     rel=1e-5)
+
+    def test_quantum_path_matches_scalar_path(self):
+        mgr_s, gw_s, a_s, b_s = spill_gateway()
+        mgr_q, gw_q, a_q, b_q = spill_gateway()
+        r_s = gw_s.handle("key", "r1", 64, 64, now=0.0)
+        [r_q, r_q2] = gw_q.handle_quantum(
+            [QuantumRequest("key", "r1", 64, 64),
+             QuantumRequest("key", "r2", 64, 64)], now=0.0)
+        assert (r_s.status, r_s.pool, r_s.spill_hops) == \
+            (r_q.status, r_q.pool, r_q.spill_hops) == (200, "b", 1)
+        assert b_q.in_flight["r1"].spill_from == \
+            b_s.in_flight["r1"].spill_from == ("a", "e@a")
+        gw_s.on_complete("r1", 64, latency_s=0.2, now=0.5)
+        gw_q.on_complete("r1", 64, latency_s=0.2, now=0.5)
+        assert a_q.status["e@a"].debt == a_s.status["e@a"].debt
+        assert b_q.status["e@b"].debt == b_s.status["e@b"].debt
+
+    def test_starved_tenant_debt_drains_over_spilled_stream(self):
+        """The headline scenario: a starved tenant whose traffic keeps
+        spilling sees its preferred-leg debt DRAIN with every spilled
+        completion, while the serving entitlement inherits the boost."""
+        mgr, gw, a, b = spill_gateway()
+        a.status["e@a"].debt = 1.0
+        debts = [a.status["e@a"].debt]
+        for i in range(6):
+            r = gw.handle("key", f"r{i}", 32, 32, now=float(i))
+            assert r.status == 200 and r.spill_hops == 1
+            gw.on_complete(f"r{i}", 32, latency_s=0.1, now=float(i) + 0.5)
+            debts.append(a.status["e@a"].debt)
+        assert all(d1 < d0 for d0, d1 in zip(debts, debts[1:]))
+        assert debts[-1] < 0.3                       # drained, not stuck
+        assert b.status["e@b"].debt > 0.5            # boost carried over
+
+    def test_no_transfer_when_served_by_preferred_leg(self):
+        mgr, gw, a, b = spill_gateway()
+        a.ledger.set_rate("e@a", 1000.0, 0.0)        # refund the budget
+        a.ledger.bucket("e@a").level = 1000.0
+        r = gw.handle("key", "r1", 16, 16, now=0.0)
+        assert r.status == 200 and r.pool == "a" and r.spill_hops == 0
+        assert a.in_flight["r1"].spill_from is None
+        debt0 = a.status["e@a"].debt
+        gw.on_complete("r1", 16, latency_s=0.1, now=0.5)
+        assert a.status["e@a"].debt == debt0
+
+    def test_spot_serving_leg_drains_source_without_inheriting(self):
+        """A spot serving entitlement carries no debt (Table 1): the
+        preferred entitlement still drains — it WAS served — but
+        nothing is credited to the non-debt-bearing class."""
+        mgr, gw, a, b = spill_gateway(serving_class=ServiceClass.SPOT)
+        r = gw.handle("key", "r1", 64, 64, now=0.0)
+        assert r.status == 200 and r.pool == "b"
+        debt_a0 = a.status["e@a"].debt
+        gw.on_complete("r1", 64, latency_s=0.2, now=0.5)
+        assert a.status["e@a"].debt < debt_a0
+        assert b.status["e@b"].debt == 0.0
+
+    def test_transfer_clamped_at_target_debt_max(self):
+        mgr, gw, a, b = spill_gateway()
+        a.status["e@a"].debt = 1.0
+        b.status["e@b"].debt = b.spec.coefficients.debt_max
+        debt_a0 = a.status["e@a"].debt
+        r = gw.handle("key", "r1", 64, 64, now=0.0)
+        assert r.status == 200 and r.pool == "b"
+        gw.on_complete("r1", 64, latency_s=0.2, now=0.5)
+        # target saturated → nothing moves (conservation, no minting)
+        assert a.status["e@a"].debt == debt_a0
+        assert b.status["e@b"].debt == b.spec.coefficients.debt_max
+
+    def test_transfer_follows_migrated_preferred_entitlement(self):
+        """The preferred leg may have been rebalanced to another pool
+        between admission and completion: the drain follows the
+        entitlement, not the stale leg."""
+        mgr, gw, a, b = spill_gateway()
+        c = mgr.add_pool(mkpool_spec("c"))
+        r = gw.handle("key", "r1", 64, 64, now=0.0)
+        assert r.status == 200 and r.pool == "b"
+        mgr.migrate_entitlement("e@a", "a", "c", now=0.1)
+        debt0 = c.status["e@a"].debt
+        gw.on_complete("r1", 64, latency_s=0.2, now=0.5)
+        assert c.status["e@a"].debt < debt0
