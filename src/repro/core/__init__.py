@@ -41,10 +41,16 @@ from repro.core.control_plane import (
     reference_tick,
 )
 from repro.core.ledger import Charge, Ledger, RowBucket, TokenBucket
+from repro.core.request_table import (
+    InFlight,
+    InFlightMap,
+    InFlightRow,
+    RequestTable,
+)
 from repro.core.resident import ResidentStatus, ResidentStore
 from repro.core.pool import (
     EntitlementMigration,
-    InFlight,
+    SettleBatch,
     TickInputs,
     TickRecord,
     TokenPool,
@@ -92,11 +98,14 @@ __all__ = [
     "ControlState", "DenyReason", "EntitlementMigration",
     "EntitlementSpec", "EntitlementState", "EntitlementStatus",
     "FleetPlan", "FleetPlanner", "FleetPlannerConfig", "InFlight",
-    "LeasePod", "Ledger", "OracleRow", "PoolManager", "PoolSpec",
+    "InFlightMap", "InFlightRow", "LeasePod", "Ledger", "OracleRow",
+    "PoolManager", "PoolSpec",
     "PriorityCoefficients", "QoS", "QuantumSnapshot",
-    "RebalanceProposal", "ResidentStatus", "ResidentStore",
-    "Resources", "RouteEntry", "RowBucket", "ScaleDecision",
-    "ScalingBounds", "ServiceClass", "StateStore", "TickInputs",
+    "RebalanceProposal", "RequestTable", "ResidentStatus",
+    "ResidentStore", "Resources", "RouteEntry", "RowBucket",
+    "ScaleDecision",
+    "ScalingBounds", "ServiceClass", "SettleBatch", "StateStore",
+    "TickInputs",
     "TickRecord", "TokenBucket", "TokenPool", "VirtualNode",
     "VirtualNodeProvider", "admit_quantum", "arrays_from_pool",
     "as_manager", "burst_overconsumption", "burst_update",

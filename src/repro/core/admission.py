@@ -29,6 +29,8 @@ mirrored in the kernel.
 """
 from __future__ import annotations
 
+import numpy as np
+
 from repro.core.ledger import Charge
 from repro.core.pool import InFlight, TokenPool
 from repro.core.types import (
@@ -168,15 +170,22 @@ class AdmissionController:
 
     # -- retry hints -------------------------------------------------------------
     def _concurrency_backoff(self, entitlement: str) -> float:
-        """Expected time for one slot to free: tokens outstanding / rate."""
+        """Expected time for one slot to free: tokens outstanding / rate.
+
+        Outstanding tokens are one masked sum over the request table's
+        owner/charged columns — not a walk of every in-flight record."""
         pool = self.pool
         st = pool.status[entitlement]
         rate = max(1e-6, st.effective.tokens_per_second
                    or pool.entitlements[entitlement]
                    .baseline.tokens_per_second or 1.0)
-        outstanding = sum(r.charged_tokens
-                          for r in pool.in_flight.values()
-                          if r.entitlement == entitlement)
+        c = pool.table.col
+        slot = pool.store.slot_of.get(entitlement)
+        if slot is None:
+            outstanding = 0
+        else:
+            mask = c["has_record"] & (c["owner"] == slot)
+            outstanding = int(np.sum(c["rec_charged"][mask]))
         per_slot = outstanding / max(1, st.in_flight)
         return min(30.0, max(0.25, per_slot / rate))
 

@@ -172,15 +172,49 @@ class Charge:
 
 
 class Ledger:
-    """Per-entitlement token buckets + outstanding charges."""
+    """Per-entitlement token buckets + outstanding charges.
 
-    def __init__(self, burst_window_s: float = 4.0, store=None) -> None:
+    Charges follow the same two-mode storage as buckets: with a
+    request ``table`` (``core.request_table.RequestTable`` — what
+    ``TokenPool`` wires up) each outstanding charge is the charge half
+    of a request-table ROW, and the batched entry points
+    (:meth:`charge_rows`, :meth:`settle_rows`, :meth:`cancel_rows`)
+    are vectorized column ops; without one, charges are plain
+    ``Charge`` dataclasses in a dict (tests, detached/migrating
+    state)."""
+
+    def __init__(self, burst_window_s: float = 4.0, store=None,
+                 table=None) -> None:
         #: standalone mode only; resident mode derives buckets from the
         #: store columns (``has_bucket`` + the bucket_* columns)
         self._buckets: dict[str, TokenBucket] = {}
+        #: standalone mode only; table mode keeps charges on rows
         self._charges: dict[str, Charge] = {}
         self.burst_window_s = burst_window_s
         self._store = store
+        self._table = table
+        #: settles/cancels for request ids with no outstanding charge —
+        #: silently 0.0/no-op by contract (late duplicate completions),
+        #: but counted so lifecycle bugs can't hide (surfaced through
+        #: ``TokenPool.stats``)
+        self.unknown_settles = 0
+
+    # -- charge storage (both modes) -------------------------------------------
+    def _put_charge(self, charge: Charge) -> None:
+        if self._table is None:
+            self._charges[charge.request_id] = charge
+        else:
+            self._table.put_charge(charge)
+
+    def _pop_charge(self, request_id: str) -> Optional[Charge]:
+        if self._table is None:
+            return self._charges.pop(request_id, None)
+        return self._table.pop_charge(request_id)
+
+    def outstanding_charges(self) -> int:
+        if self._table is None:
+            return len(self._charges)
+        return int(np.count_nonzero(self._table.col["has_charge"]))
 
     # -- bucket resolution (both modes) ----------------------------------------
     def _slot(self, entitlement: str) -> int:
@@ -225,6 +259,25 @@ class Ledger:
             c["bucket_refill"][slot] = now
         return RowBucket(self._store, slot)
 
+    def ensure_rows(self, slots: np.ndarray, rates: np.ndarray,
+                    now: float) -> None:
+        """Vectorized get-or-create over resident bucket rows (resident
+        mode only).  Rows that already hold a bucket are untouched;
+        the rest are initialized with the per-row ``rates`` exactly as
+        :meth:`ensure` would — one masked column write per field
+        instead of a per-entitlement Python loop."""
+        c = self._store.col
+        need = ~c["has_bucket"][slots]
+        if not need.any():
+            return
+        ns = slots[need]
+        r = np.asarray(rates, np.float64)[need]
+        c["has_bucket"][ns] = True
+        c["bucket_rate"][ns] = r
+        c["bucket_window"][ns] = self.burst_window_s
+        c["bucket_level"][ns] = r * self.burst_window_s
+        c["bucket_refill"][ns] = now
+
     def peek_level(self, entitlement: str, rate_tps: float,
                    now: float) -> float:
         """Level the bucket WOULD have after a refill at ``now`` — pure
@@ -263,6 +316,12 @@ class Ledger:
             self._buckets.pop(entitlement, None)
         else:
             self.drop_bucket_only(entitlement)
+        if self._table is not None:
+            slot = self._store.slot_of.get(entitlement)
+            if slot is not None:
+                for s in self._table.charge_slots_of_owner(slot):
+                    self._table.clear_charge(s)
+            return
         for rid in [rid for rid, ch in self._charges.items()
                     if ch.entitlement == entitlement]:
             del self._charges[rid]
@@ -287,6 +346,14 @@ class Ledger:
             except KeyError:
                 bucket = None
             self.drop_bucket_only(entitlement)
+        if self._table is not None:
+            slot = self._store.slot_of.get(entitlement)
+            charges = []
+            if slot is not None:
+                for s in self._table.charge_slots_of_owner(slot):
+                    charges.append(self._table.materialize_charge(s))
+                    self._table.clear_charge(s)
+            return bucket, charges
         charges = [ch for ch in self._charges.values()
                    if ch.entitlement == entitlement]
         for ch in charges:
@@ -326,7 +393,7 @@ class Ledger:
                 c["bucket_level"][slot] = bucket.level
                 c["bucket_refill"][slot] = bucket.last_refill_s
         for ch in charges:
-            self._charges[ch.request_id] = ch
+            self._put_charge(ch)
 
     def set_rate(self, entitlement: str, rate_tps: float, now: float) -> None:
         self.ensure(entitlement, rate_tps, now).set_rate(rate_tps, now)
@@ -364,7 +431,7 @@ class Ledger:
         b = self.bucket(charge.entitlement)
         if not b.charge(charge.charged_tokens, now):
             return False
-        self._charges[charge.request_id] = charge
+        self._put_charge(charge)
         return True
 
     def charge_batch(self, charges: list[Charge], now: float
@@ -373,7 +440,43 @@ class Ledger:
         refills ONCE (all charges share ``now``, so per-charge refills
         are no-ops after the first) and every charge still re-checks
         affordability — the ledger stays authoritative even if the
-        caller pre-validated on a snapshot."""
+        caller pre-validated on a snapshot.
+
+        Table mode runs the vectorized row-op (:meth:`charge_rows`
+        machinery): one refill per touched bucket + a per-entitlement
+        ordered prefix-sum affordability check, falling back to the
+        scalar greedy replay for any entitlement whose quantum does not
+        fit entirely (a mid-group failure skips that charge and keeps
+        admitting later ones — cumulative sums can't express that).
+        An unknown entitlement falls back wholesale so the scalar
+        KeyError surfaces at the same charge index."""
+        if self._table is None or not charges:
+            return self._charge_batch_scalar(charges, now)
+        n = len(charges)
+        sc = self._store.col
+        slot_by_ent: dict[str, int] = {}
+        ent_slot = np.empty(n, np.int64)
+        for i, ch in enumerate(charges):
+            s = slot_by_ent.get(ch.entitlement)
+            if s is None:
+                s = self._store.slot_of.get(ch.entitlement)
+                if s is None or not sc["has_bucket"][s]:
+                    return self._charge_batch_scalar(charges, now)
+                slot_by_ent[ch.entitlement] = s
+            ent_slot[i] = s
+        tokens = np.fromiter((ch.charged_tokens for ch in charges),
+                             np.float64, count=n)
+        ok = self._charge_decide_rows(ent_slot, tokens, now)
+        acc = np.flatnonzero(ok)
+        if acc.size:
+            self._table.put_charges([charges[i] for i in acc],
+                                    ent_slot[acc])
+        return ok.tolist()
+
+    def _charge_batch_scalar(self, charges: list[Charge], now: float
+                             ) -> list[bool]:
+        """The retained per-charge loop (standalone mode + the table
+        mode fallback) — the parity oracle for the vectorized path."""
         refilled: set[str] = set()
         out = []
         for ch in charges:
@@ -383,19 +486,99 @@ class Ledger:
                 refilled.add(ch.entitlement)
             if b.level >= ch.charged_tokens:
                 b.level -= ch.charged_tokens
-                self._charges[ch.request_id] = ch
+                self._put_charge(ch)
                 out.append(True)
             else:
                 out.append(False)
         return out
 
+    def _charge_decide_rows(self, ent_slot: np.ndarray,
+                            tokens: np.ndarray, now: float) -> np.ndarray:
+        """Vectorized affordability for one quantum of charges against
+        resident buckets (``ent_slot``/``tokens`` aligned, every slot
+        pre-validated to hold a bucket).  Mutates bucket levels exactly
+        like the scalar loop and returns the accept mask.
+
+        Parity with the scalar greedy: each touched bucket refills once
+        at the shared ``now`` (later per-charge refills are dt=0
+        no-ops); a stable argsort groups charges by bucket while
+        preserving arrival order inside each group, so when a group's
+        inclusive prefix sums all fit the opening level, committing via
+        ``np.subtract.at`` (unbuffered, index-ordered) replays the
+        identical f64 subtraction chain.  Any group with a miss is
+        replayed charge by charge in arrival order instead."""
+        sc = self._store.col
+        lvl = sc["bucket_level"]
+        u = np.unique(ent_slot)
+        cap = sc["bucket_rate"][u] * sc["bucket_window"][u]
+        dt = np.maximum(0.0, now - sc["bucket_refill"][u])
+        lvl[u] = np.minimum(cap, lvl[u] + dt * sc["bucket_rate"][u])
+        sc["bucket_refill"][u] = now
+        n = len(ent_slot)
+        order = np.argsort(ent_slot, kind="stable")
+        s_ord = ent_slot[order]
+        t_ord = tokens[order]
+        cum = np.cumsum(t_ord)
+        group_start = np.empty(n, bool)
+        group_start[0] = True
+        group_start[1:] = s_ord[1:] != s_ord[:-1]
+        start_idx = np.flatnonzero(group_start)
+        gid = np.cumsum(group_start) - 1
+        base = np.concatenate(([0.0], cum[start_idx[1:] - 1]))
+        prefix = cum - base[gid]
+        fits = prefix <= lvl[s_ord]
+        group_ok = np.logical_and.reduceat(fits, start_idx)
+        fast = group_ok[gid]
+        ok = np.zeros(n, bool)
+        if fast.any():
+            np.subtract.at(lvl, s_ord[fast], t_ord[fast])
+            ok[order[fast]] = True
+        if not fast.all():
+            for pos in np.flatnonzero(~fast):
+                s = s_ord[pos]
+                t = t_ord[pos]
+                if lvl[s] >= t:
+                    lvl[s] -= t
+                    ok[order[pos]] = True
+        return ok
+
+    def charge_rows(self, request_ids: list, ent_slot: np.ndarray,
+                    tokens: np.ndarray, input_tokens: np.ndarray,
+                    max_tokens: np.ndarray, now: float
+                    ) -> tuple[np.ndarray, np.ndarray]:
+        """Array-native :meth:`charge_batch` — the gateway quantum hot
+        path: no per-request ``Charge`` objects, accepted charges land
+        as batched request-table column writes.  Every ``ent_slot``
+        must hold a bucket (the gateway ensures buckets per entitlement
+        beforehand).  Returns ``(accept mask, accepted row slots)`` —
+        the slots align with the accepted subset in charge order, so
+        the caller can thread them straight into the admit scatter."""
+        ok = self._charge_decide_rows(
+            np.asarray(ent_slot, np.int64),
+            np.asarray(tokens, np.float64), now)
+        acc = np.flatnonzero(ok)
+        slots = np.empty(0, np.int64)
+        if acc.size:
+            acc_l = acc.tolist()
+            ids = (request_ids if acc.size == len(request_ids)
+                   else [request_ids[i] for i in acc_l])
+            slots = self._table.charge_rows(
+                ids, ent_slot[acc],
+                np.asarray(tokens, np.float64)[acc],
+                np.asarray(input_tokens, np.int64)[acc],
+                np.asarray(max_tokens, np.int64)[acc], now)
+        return ok, slots
+
     def settle(self, request_id: str, actual_output_tokens: int,
                now: float) -> float:
         """Completion callback: refund the unused reservation.
 
-        Returns the *actual* token cost (input + actual output)."""
-        ch = self._charges.pop(request_id, None)
+        Returns the *actual* token cost (input + actual output);
+        0.0 — counted in ``unknown_settles`` — when no charge is
+        outstanding for the request."""
+        ch = self._pop_charge(request_id)
         if ch is None:
+            self.unknown_settles += 1
             return 0.0
         actual = ch.input_tokens + actual_output_tokens
         refund = max(0.0, ch.charged_tokens - actual)
@@ -403,10 +586,93 @@ class Ledger:
         return float(actual)
 
     def cancel(self, request_id: str, now: float) -> None:
-        """Request failed/evicted before producing tokens: full refund."""
-        ch = self._charges.pop(request_id, None)
-        if ch is not None:
-            self.bucket(ch.entitlement).refund(ch.charged_tokens, now)
+        """Request failed/evicted before producing tokens: full refund.
+        Unknown request ids no-op but count in ``unknown_settles``."""
+        ch = self._pop_charge(request_id)
+        if ch is None:
+            self.unknown_settles += 1
+            return
+        self.bucket(ch.entitlement).refund(ch.charged_tokens, now)
+
+    def _refund_rows(self, ch_owner: np.ndarray, refunds: np.ndarray,
+                     now: float) -> None:
+        """Batched ``TokenBucket.refund`` over bucket rows: one refill
+        per touched bucket at the shared ``now``, refunds applied with
+        ``np.add.at`` (unbuffered, index-ordered — the same f64
+        addition chain as sequential scalar refunds), one capacity
+        clamp at the end.  Clamp-once equals clamp-each: refunds are
+        non-negative, so once the running level would exceed capacity
+        every subsequent scalar step re-clamps to the same cap."""
+        sc = self._store.col
+        lvl = sc["bucket_level"]
+        u = np.unique(ch_owner)
+        cap = sc["bucket_rate"][u] * sc["bucket_window"][u]
+        dt = np.maximum(0.0, now - sc["bucket_refill"][u])
+        lvl[u] = np.minimum(cap, lvl[u] + dt * sc["bucket_rate"][u])
+        sc["bucket_refill"][u] = now
+        np.add.at(lvl, ch_owner, refunds)
+        lvl[u] = np.minimum(lvl[u], cap)
+
+    def settle_rows(self, slots: np.ndarray, actual_output_tokens:
+                    np.ndarray, now: float) -> np.ndarray:
+        """Batched :meth:`settle` over request-table rows (table mode).
+        Folds every refund into one vectorized bucket update and clears
+        the charge halves; the caller owns releasing the rows.  Rows
+        with no outstanding charge settle to 0.0 and count in
+        ``unknown_settles``.  Returns per-row actual token costs."""
+        t = self._table
+        c = t.col
+        n = len(slots)
+        actual = np.zeros(n, np.float64)
+        has = c["has_charge"][slots]
+        missing = n - int(np.count_nonzero(has))
+        if missing:
+            self.unknown_settles += missing
+        if missing == n:
+            return actual
+        cs = slots[has]
+        owners = c["ch_owner"][cs].astype(np.int64)
+        bad = ~self._store.col["has_bucket"][owners]
+        if bad.any():          # KeyError parity with the scalar settle
+            raise KeyError(self._store.name_of[int(owners[bad][0])])
+        outs = np.asarray(actual_output_tokens, np.int64)[has]
+        act = (c["input_tokens"][cs] + outs).astype(np.float64)
+        refunds = np.maximum(0.0, c["charged"][cs] - act)
+        self._refund_rows(owners, refunds, now)
+        actual[has] = act
+        c["has_charge"][cs] = False
+        c["ch_owner"][cs] = 0
+        c["charged"][cs] = 0.0
+        c["input_tokens"][cs] = 0
+        c["max_tokens"][cs] = 0
+        c["ch_admitted"][cs] = 0.0
+        return actual
+
+    def cancel_rows(self, slots: np.ndarray, now: float) -> None:
+        """Batched :meth:`cancel` over request-table rows (table
+        mode): full refunds, vectorized.  The caller owns releasing
+        the rows."""
+        t = self._table
+        c = t.col
+        has = c["has_charge"][slots]
+        missing = len(slots) - int(np.count_nonzero(has))
+        if missing:
+            self.unknown_settles += missing
+        if missing == len(slots):
+            return
+        cs = slots[has]
+        owners = c["ch_owner"][cs].astype(np.int64)
+        bad = ~self._store.col["has_bucket"][owners]
+        if bad.any():
+            raise KeyError(self._store.name_of[int(owners[bad][0])])
+        refunds = np.maximum(0.0, c["charged"][cs])
+        self._refund_rows(owners, refunds, now)
+        c["has_charge"][cs] = False
+        c["ch_owner"][cs] = 0
+        c["charged"][cs] = 0.0
+        c["input_tokens"][cs] = 0
+        c["max_tokens"][cs] = 0
+        c["ch_admitted"][cs] = 0.0
 
     def retry_after(self, entitlement: str, tokens: float, now: float) -> float:
         return self.bucket(entitlement).time_until_affordable(tokens, now)

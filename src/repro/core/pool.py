@@ -54,6 +54,7 @@ import numpy as np
 from repro.core import control_plane, priority as prio
 from repro.core.control_plane import CLASS_CODES, ControlState
 from repro.core.ledger import Ledger
+from repro.core.request_table import InFlight, InFlightMap, RequestTable
 from repro.core.resident import ResidentStatus, ResidentStore, _DictView
 from repro.core.types import (
     EntitlementSpec,
@@ -65,32 +66,39 @@ from repro.core.types import (
 )
 from repro.core.virtual_node import LeasePod, VirtualNodeProvider
 
+__all__ = [  # noqa: F822 — InFlight re-exported from request_table
+    "EntitlementMigration", "InFlight", "SettleBatch", "TickInputs",
+    "TickRecord", "TokenPool", "waterfill",
+]
+
 #: class codes (DED/GUAR/ELASTIC) whose baseline counts toward the
 #: reserved provisioning floor — see ``TokenPool.reserved_baseline``.
 _RESERVING_CLASS = np.array([True, True, True, False, False])
 
+#: Eq. 1 class weight by class CODE (f64 — mirrors the exact
+#: ``priority.CLASS_WEIGHT`` values for the vectorized threshold).
+_CLASS_WEIGHT_F64 = np.zeros(len(CLASS_CODES), np.float64)
+for _sc, _code in CLASS_CODES.items():
+    _CLASS_WEIGHT_F64[_code] = prio.CLASS_WEIGHT[_sc]
+del _sc, _code
+
 
 @dataclasses.dataclass
-class InFlight:
-    """One admitted, not-yet-completed request."""
+class SettleBatch:
+    """Result of one batched settle/evict row-op, aligned with the
+    input request ids (``known[i]`` False → unknown id, nothing
+    changed for it)."""
 
-    request_id: str
-    entitlement: str
-    priority: float
-    kv_bytes: float
-    charged_tokens: int
-    admitted_at: float
-    resident: bool = False       # dispatched to a decode worker
-    #: (pool, entitlement) of the route leg the client PREFERRED when
-    #: this request was admitted by a later (spill) leg — None when the
-    #: request was served by its first leg.  Drives per-request
-    #: cross-pool debt transfer on completion
-    #: (``PoolManager.transfer_spill_debt``).
-    spill_from: Optional[tuple] = None
-    #: actual settled token cost (input + actual output), stamped by
-    #: ``on_complete`` so callers can attribute service without
-    #: re-reading the ledger charge (already popped by then)
-    settled_tokens: float = 0.0
+    #: request id had an in-flight record
+    known: np.ndarray
+    #: owning entitlement per request (None where unknown)
+    entitlements: list
+    #: actual settled token cost per request (0.0 where unknown or
+    #: uncharged; always 0.0 for evictions)
+    settled_tokens: np.ndarray
+    #: MATERIALIZED records of requests admitted via a spill leg
+    #: (``spill_from`` set) — what cross-pool debt transfer consumes
+    spills: list
 
 
 @dataclasses.dataclass
@@ -268,12 +276,17 @@ class TokenPool:
         #: the resident structure-of-arrays — source of truth for every
         #: control-plane column (``core.resident``)
         self.store = ResidentStore()
+        #: the resident request table — source of truth for every
+        #: in-flight record and outstanding charge
+        #: (``core.request_table``)
+        self.table = RequestTable(self.store)
         self.entitlements: dict[str, EntitlementSpec] = {}
         #: name → ResidentStatus VIEW over the entitlement's row
         self.status: dict[str, ResidentStatus] = {}
         self.ledger = Ledger(burst_window_s=spec.bucket_window_s,
-                             store=self.store)
-        self.in_flight: dict[str, InFlight] = {}
+                             store=self.store, table=self.table)
+        #: request id → InFlightRow VIEW over the request's row
+        self.in_flight: InFlightMap = InFlightMap(self.table)
         #: bounded tick history (spec.history_maxlen; None = unbounded)
         self.history: deque = deque(maxlen=spec.history_maxlen)
         self._last_tick = now
@@ -436,9 +449,11 @@ class TokenPool:
         self.provider.delete(f"lease-{name}")
         # evict in-flight requests first (status row must still exist):
         # charges are refunded, then the whole bucket is dropped anyway
-        for rid in [r.request_id for r in self.in_flight.values()
-                    if r.entitlement == name]:
-            self.on_evict(rid, now)
+        slot = self.store.slot_of.get(name)
+        if slot is not None:
+            rows = self.table.record_slots_of_owner(slot)
+            if rows.size:
+                self.evict_rows([self.table.rid_of[s] for s in rows], now)
         self.entitlements.pop(name, None)
         self.status.pop(name, None)
         self.ledger.drop(name)
@@ -462,9 +477,13 @@ class TokenPool:
             raise KeyError(f"no entitlement {name!r} in pool "
                            f"{self.spec.name!r}")
         self.provider.delete(f"lease-{name}")
-        recs = [r for r in self.in_flight.values() if r.entitlement == name]
-        for r in recs:
-            del self.in_flight[r.request_id]
+        # MATERIALIZE in-flight records before their rows die (the
+        # charge halves go separately through ``ledger.detach``)
+        t = self.table
+        rows = t.record_slots_of_owner(self.store.slot_of[name])
+        recs = [t.materialize_record(s) for s in rows]
+        for s in rows:
+            t.clear_record(int(s))
         bucket, charges = self.ledger.detach(name)
         slot = self.store.slot_of[name]
         c = self.store.col
@@ -579,28 +598,58 @@ class TokenPool:
         st.in_flight += 1
         st.kv_bytes_in_use += rec.kv_bytes
         st.admitted_total += 1
-        self.in_flight[rec.request_id] = rec
+        self.table.put_record(rec)
         slot = self.store.slot_of[rec.entitlement]
         self.store.col["demand_window"][slot] += demand_tokens
 
     def register_admit_batch(self, recs: list[InFlight],
                              demand_tokens: dict[str, float]) -> None:
         """One scheduling quantum's admits in a single call — same
-        bookkeeping as :meth:`register_admit`, with the status row
-        resolved once per entitlement and the demand window bumped once
-        per entitlement instead of once per request."""
-        st_cache: dict[str, ResidentStatus] = {}
-        for rec in recs:
-            st = st_cache.get(rec.entitlement)
-            if st is None:
-                st = st_cache[rec.entitlement] = self.status[rec.entitlement]
-            st.in_flight += 1
-            st.kv_bytes_in_use += rec.kv_bytes
-            st.admitted_total += 1
-            self.in_flight[rec.request_id] = rec
+        bookkeeping as :meth:`register_admit`, but as masked
+        scatter-adds on the store columns (``np.add.at`` applies
+        updates in request order, so the f64 KV accumulation matches
+        the scalar loop bit for bit) plus one batched row insertion
+        into the request table."""
+        if recs:
+            slot_of = self.store.slot_of
+            n = len(recs)
+            owners = np.fromiter(
+                (slot_of[r.entitlement] for r in recs),
+                np.int64, count=n)
+            self.table.put_records(recs, owners)
+            sc = self.store.col
+            np.add.at(sc["in_flight"], owners, 1)
+            np.add.at(sc["kv_in_use"], owners, np.fromiter(
+                (r.kv_bytes for r in recs), np.float64, count=n))
+            np.add.at(sc["admitted_total"], owners, 1)
         window = self.store.col["demand_window"]
         for ent, tokens in demand_tokens.items():
             window[self.store.slot_of[ent]] += tokens
+
+    def admit_rows(self, request_ids: list, owners: np.ndarray,
+                   kv_bytes: np.ndarray, charged_tokens: np.ndarray,
+                   now: float,
+                   demand_tokens: Optional[dict] = None,
+                   slots: Optional[np.ndarray] = None) -> np.ndarray:
+        """Array-native :meth:`register_admit_batch` — the gateway
+        quantum hot path: no per-request ``InFlight`` objects, row
+        insertion and counter updates are batched column ops.
+        ``slots`` skips id resolution when the caller already holds
+        the rows (``Ledger.charge_rows`` returns them).  Returns the
+        new row slots (the caller tags spill legs on them)."""
+        slots = self.table.admit_rows(
+            request_ids, owners, kv_bytes, charged_tokens, now,
+            slots=slots)
+        sc = self.store.col
+        np.add.at(sc["in_flight"], owners, 1)
+        np.add.at(sc["kv_in_use"], owners, kv_bytes)
+        np.add.at(sc["admitted_total"], owners, 1)
+        if demand_tokens:
+            window = sc["demand_window"]
+            slot_of = self.store.slot_of
+            for ent, tokens in demand_tokens.items():
+                window[slot_of[ent]] += tokens
+        return slots
 
     def register_deny(self, entitlement: str, demand_tokens: float,
                       low_priority: bool) -> None:
@@ -612,34 +661,61 @@ class TokenPool:
         slot = self.store.slot_of[entitlement]
         self.store.col["demand_window"][slot] += demand_tokens
 
+    def register_deny_batch(self, entitlements: list,
+                            demand_tokens: np.ndarray,
+                            low_priority: np.ndarray) -> None:
+        """One scheduling quantum's denials as masked scatter-adds —
+        same bookkeeping as :meth:`register_deny` per element."""
+        if not entitlements:
+            return
+        slot_of = self.store.slot_of
+        slots = np.fromiter((slot_of[e] for e in entitlements),
+                            np.int64, count=len(entitlements))
+        sc = self.store.col
+        np.add.at(sc["denied_total"], slots, 1)
+        lp = np.asarray(low_priority, bool)
+        if lp.any():
+            np.add.at(sc["denied_low_priority"], slots[lp], 1)
+        np.add.at(sc["demand_window"], slots,
+                  np.asarray(demand_tokens, np.float64))
+
     def on_start(self, request_id: str) -> None:
         """Backend callback: the request acquired a decode slot (its KV
         is now resident) — this is what §3.1's concurrency r counts."""
-        rec = self.in_flight.get(request_id)
-        if rec is None or rec.resident:
+        t = self.table
+        slot = t.slot_of.get(request_id)
+        if slot is None or not t.col["has_record"][slot] \
+                or t.col["resident"][slot]:
             return
-        rec.resident = True
-        self.status[rec.entitlement].resident += 1
+        t.col["resident"][slot] = True
+        owner = int(t.col["owner"][slot])
+        self.store.col["resident"][owner] += 1
 
     def on_complete(self, request_id: str, actual_output_tokens: int,
                     now: float) -> Optional[InFlight]:
         """Gateway completion callback (paper §4.3): settle the charge,
         update usage counters that feed burst/debt at the next tick.
 
-        Returns the settled ``InFlight`` record (None if unknown) so
-        callers attribute the completion WITHOUT re-reading
-        ``self.in_flight`` — the record is already popped by the time
-        this returns, and read-after-call would silently miss.  The
-        record's ``settled_tokens`` is stamped with the actual cost."""
-        rec = self.in_flight.pop(request_id, None)
-        if rec is None:
+        This is the retained scalar ORACLE for :meth:`settle_rows`
+        (pinned equal by ``tests/test_request_lifecycle.py``).
+
+        Returns the settled ``InFlight`` record (None if unknown),
+        MATERIALIZED — the row is recycled by the time this returns,
+        and read-after-call on ``self.in_flight`` would silently miss.
+        The record's ``settled_tokens`` is stamped with the actual
+        cost."""
+        t = self.table
+        slot = t.slot_of.get(request_id)
+        if slot is None or not t.col["has_record"][slot]:
             return None
+        rec = t.materialize_record(slot)
         st = self.status[rec.entitlement]
         st.in_flight = max(0, st.in_flight - 1)
         if rec.resident:
             st.resident = max(0, st.resident - 1)
         st.kv_bytes_in_use = max(0.0, st.kv_bytes_in_use - rec.kv_bytes)
         st.completed_total += 1
+        t.clear_record(slot)
         actual = self.ledger.settle(request_id, actual_output_tokens, now)
         st.window_tokens += actual
         st.tokens_total += actual
@@ -648,17 +724,142 @@ class TokenPool:
 
     def on_evict(self, request_id: str, now: float) -> Optional[InFlight]:
         """Request terminated before completion (preemption/failure).
-        Returns the evicted ``InFlight`` record (None if unknown)."""
-        rec = self.in_flight.pop(request_id, None)
-        if rec is None:
+        Scalar oracle for :meth:`evict_rows`.  Returns the evicted
+        ``InFlight`` record (None if unknown), materialized."""
+        t = self.table
+        slot = t.slot_of.get(request_id)
+        if slot is None or not t.col["has_record"][slot]:
             return None
+        rec = t.materialize_record(slot)
         st = self.status[rec.entitlement]
         st.in_flight = max(0, st.in_flight - 1)
         if rec.resident:
             st.resident = max(0, st.resident - 1)
         st.kv_bytes_in_use = max(0.0, st.kv_bytes_in_use - rec.kv_bytes)
+        t.clear_record(slot)
         self.ledger.cancel(request_id, now)
         return rec
+
+    # -- batched request lifecycle (the vectorized row-ops) -----------------------
+    def _lifecycle_rows(self, request_ids: list) -> tuple:
+        """Resolve a batch of request ids to live record rows.  Returns
+        ``(known mask, row slots of the known ids, entitlements list)``
+        — the only per-request Python in the batched lifecycle (a dict
+        hit and a list index per id)."""
+        t = self.table
+        n = len(request_ids)
+        known = np.zeros(n, bool)
+        slots = np.zeros(n, np.int64)
+        get = t.slot_of.get
+        has = t.col["has_record"]
+        for i, rid in enumerate(request_ids):
+            s = get(rid)
+            if s is not None and has[s]:
+                known[i] = True
+                slots[i] = s
+        ents: list = [None] * n
+        ks = slots[known]
+        if ks.size:
+            name_of = self.store.name_of
+            owners = t.col["owner"][ks]
+            for i, o in zip(np.flatnonzero(known).tolist(),
+                            owners.tolist()):
+                ents[i] = name_of[o]
+        return known, ks, ents
+
+    def _fold_record_rows(self, ks: np.ndarray, owners: np.ndarray,
+                          completed: bool) -> None:
+        """Fold a batch of record-half teardowns into the store
+        columns.  Bit-parity with the scalar loop: ``np.add.at`` is
+        unbuffered and applies in index order (the same f64 chain as
+        sequential updates), and clamping ONCE after all decrements
+        equals the scalar clamp-each — decrements are monotone, so
+        once the running value hits the clamp floor every later scalar
+        step re-clamps to the same 0."""
+        c = self.table.col
+        sc = self.store.col
+        np.add.at(sc["in_flight"], owners, -1)
+        res = c["resident"][ks]
+        if res.any():
+            np.add.at(sc["resident"], owners[res], -1)
+        np.add.at(sc["kv_in_use"], owners, -c["kv_bytes"][ks])
+        if completed:
+            np.add.at(sc["completed_total"], owners, 1)
+        touched = np.unique(owners)
+        sc["in_flight"][touched] = np.maximum(
+            sc["in_flight"][touched], 0)
+        sc["resident"][touched] = np.maximum(
+            sc["resident"][touched], 0)
+        sc["kv_in_use"][touched] = np.maximum(
+            sc["kv_in_use"][touched], 0.0)
+
+    def settle_rows(self, request_ids: list, actual_output_tokens,
+                    now: float) -> SettleBatch:
+        """One quantum's completions as vectorized row-ops — the
+        batched :meth:`on_complete` (``on_complete_batch`` is the
+        threaded alias).  Refunds, window/usage counters and
+        kv/in-flight/resident decrements fold into masked column
+        updates; rows release in batch order, so future slot recycling
+        matches a scalar loop.  Each request id must appear at most
+        once per batch.  Returns a :class:`SettleBatch` aligned with
+        the inputs."""
+        known, ks, ents = self._lifecycle_rows(request_ids)
+        n = len(request_ids)
+        settled = np.zeros(n, np.float64)
+        spills: list = []
+        if not ks.size:
+            return SettleBatch(known, ents, settled, spills)
+        t = self.table
+        c = t.col
+        owners = c["owner"][ks].astype(np.int64)
+        self._fold_record_rows(ks, owners, completed=True)
+        actual = self.ledger.settle_rows(
+            ks, np.asarray(actual_output_tokens, np.int64)[known], now)
+        settled[known] = actual
+        sc = self.store.col
+        np.add.at(sc["window_tokens"], owners, actual)
+        np.add.at(sc["tokens_total"], owners, actual)
+        spill = t.spill_from
+        hits = [(j, int(s)) for j, s in enumerate(ks.tolist())
+                if spill[s] is not None]
+        if hits:
+            for j, s in hits:
+                rec = t.materialize_record(s)
+                rec.settled_tokens = float(actual[j])
+                spills.append(rec)
+        t.release_rows(ks)
+        return SettleBatch(known, ents, settled, spills)
+
+    def evict_rows(self, request_ids: list, now: float) -> SettleBatch:
+        """One batch of evictions as vectorized row-ops — the batched
+        :meth:`on_evict`: full refunds, usage decrements, no completion
+        counters.  Returns a :class:`SettleBatch` (``settled_tokens``
+        all zero — evictions settle nothing)."""
+        known, ks, ents = self._lifecycle_rows(request_ids)
+        settled = np.zeros(len(request_ids), np.float64)
+        if not ks.size:
+            return SettleBatch(known, ents, settled, [])
+        owners = self.table.col["owner"][ks].astype(np.int64)
+        self._fold_record_rows(ks, owners, completed=False)
+        self.ledger.cancel_rows(ks, now)
+        self.table.release_rows(ks)
+        return SettleBatch(known, ents, settled, [])
+
+    def on_complete_batch(self, request_ids: list, actual_output_tokens,
+                          now: float) -> SettleBatch:
+        """Batched :meth:`on_complete` — one vectorized settle per
+        scheduling quantum (threaded through ``PoolManager`` and
+        ``Gateway``; the simulators drain completions once per step)."""
+        return self.settle_rows(request_ids, actual_output_tokens, now)
+
+    def stats(self) -> dict:
+        """Pool-level observability counters (request lifecycle)."""
+        return {
+            "in_flight": self.pool_in_flight(),
+            "resident": self.total_resident(),
+            "request_rows": self.table.capacity,
+            "unknown_settles": self.ledger.unknown_settles,
+        }
 
     # -- contention & reclamation -------------------------------------------------
     def pool_in_flight(self) -> int:
@@ -677,6 +878,31 @@ class TokenPool:
         not contended (paper Exp. 1 phase 1: spot fills the pool)."""
         return self.pool_in_flight() > self.capacity().concurrency
 
+    def _priority_rows(self, slots: np.ndarray) -> np.ndarray:
+        """Vectorized Eq. 1 over entitlement rows — the same factor
+        chain as ``priority.priority_weight``, term for term, reading
+        burst/debt from the store columns (the identical f32-sourced
+        values the scalar ``priority()`` reads through its status
+        view)."""
+        sc = self.store.col
+        coeff = self.spec.coefficients
+        avg = self.pool_avg_slo()
+        w_class = _CLASS_WEIGHT_F64[sc["class_code"][slots]]
+        slo = sc["slo_ms"][slots].astype(np.float64)
+        burst = sc["burst"][slots].astype(np.float64)
+        debt = sc["debt"][slots].astype(np.float64)
+        slo_factor = 1.0 / (1.0 + coeff.alpha_slo * (slo / avg))
+        burst_factor = 1.0 / (1.0 + coeff.alpha_burst
+                              * np.maximum(0.0, burst))
+        debt_factor = np.maximum(1e-3, 1.0 + coeff.alpha_debt * debt)
+        return w_class * slo_factor * burst_factor * debt_factor
+
+    def inflight_owner_slots(self) -> np.ndarray:
+        """Distinct entitlement slots owning at least one in-flight
+        record, ascending — one masked pass over the request table."""
+        c = self.table.col
+        return np.unique(c["owner"][c["has_record"]]).astype(np.int64)
+
     def admission_threshold(self) -> float:
         """Min priority among currently-admitted requests (paper §4.3),
         evaluated at the owners' LIVE priorities: debt and burst evolve
@@ -685,12 +911,21 @@ class TokenPool:
         rising would strictly exceed its own older snapshots and push
         unbounded work into a contended pool.
 
+        One vectorized Eq. 1 evaluation over the distinct owner rows
+        (instead of O(#owners) scalar ``priority()`` calls), guarded
+        against an empty owner set — every in-flight owner having been
+        removed used to raise ``ValueError`` from an empty ``min``.
+
         Only meaningful when contended; returns 0.0 (admit-all) otherwise."""
         if not self.contended() or not self.in_flight:
             return 0.0
-        ents = {r.entitlement for r in self.in_flight.values()}
-        return min(self.priority(e) for e in ents
-                   if e in self.entitlements)
+        owners = self.inflight_owner_slots()
+        # lifecycle invariant: rows never outlive their entitlement —
+        # but guard anyway (the old per-name filter, vectorized)
+        owners = owners[self.store.col["alive"][owners]]
+        if not owners.size:
+            return 0.0
+        return float(np.min(self._priority_rows(owners)))
 
     def reclaim_preemptible(self) -> list[str]:
         """Table-1 eviction: returns request ids of preemptible in-flight

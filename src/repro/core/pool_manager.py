@@ -268,6 +268,43 @@ class PoolManager:
         src_st.debt = src_st.debt - delta
         return delta
 
+    def on_complete_batch(self, completions: list, now: float) -> list:
+        """Batched :meth:`on_complete` — ``completions`` is a list of
+        ``(request_id, actual_output_tokens)`` pairs; each admitting
+        pool settles its share in ONE vectorized ``settle_rows`` call.
+        Returns a list aligned with the input:
+        ``(pool name, entitlement, settled_tokens)`` per known request,
+        ``None`` per unknown one.  Spill-debt transfers run after each
+        pool's settle, in batch order — transfers touch only debt,
+        which no settle reads, so per-pool results match the scalar
+        interleaving exactly."""
+        results: list = [None] * len(completions)
+        if not completions:
+            return results
+        if len(self.pools) == 1:
+            pool = next(iter(self.pools.values()))
+            groups = {pool.spec.name: list(range(len(completions)))}
+        else:
+            groups = {}
+            for i, (rid, _) in enumerate(completions):
+                pool = self.find_pool_of(rid)
+                if pool is not None:
+                    groups.setdefault(pool.spec.name, []).append(i)
+        for name, idxs in groups.items():
+            pool = self.pools[name]
+            batch = pool.on_complete_batch(
+                [completions[i][0] for i in idxs],
+                [completions[i][1] for i in idxs], now)
+            known = batch.known
+            ents = batch.entitlements
+            settled = batch.settled_tokens
+            for k, i in enumerate(idxs):
+                if known[k]:
+                    results[i] = (name, ents[k], float(settled[k]))
+            for rec in batch.spills:
+                self.transfer_spill_debt(rec, name, now)
+        return results
+
     def on_evict(self, request_id: str, now: float
                  ) -> Optional[tuple[str, InFlight]]:
         pool = self.find_pool_of(request_id)

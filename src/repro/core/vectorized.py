@@ -223,10 +223,14 @@ def _running_min_f32(pool, weights: jax.Array,
     """float32 twin of :func:`running_min_live`, evaluated on the SAME
     Eq. 1 weight array handed to ``admit_quantum`` — one computation
     serves both the seed and the kernel, so a request whose own
-    entitlement sets the threshold ties bit-exactly."""
-    owners = {r.entitlement for r in pool.in_flight.values()}
-    rows = sorted(row_of[e] for e in owners if e in row_of)
-    if not rows:
+    entitlement sets the threshold ties bit-exactly.
+
+    Owner rows come straight off the request table's owner column
+    (``np.unique`` — already the sorted distinct slot list) instead of
+    a per-record Python set walk; owner slots ARE store row indices,
+    which is what ``weights`` is indexed by."""
+    rows = pool.inflight_owner_slots()
+    if not rows.size:
         return float("inf")
     return float(jnp.min(weights[jnp.asarray(rows, jnp.int32)]))
 

@@ -261,10 +261,16 @@ class ServingSimulator:
                          self.pool.on_start)
 
     def _advance_replicas(self, now: float) -> None:
-        advance_replicas(
-            self._alive(), self.requests, self.dt, now,
-            lambda rid, req: self.pool.on_complete(
-                rid, req.max_tokens, req.finished_s))
+        # every completion of one dt step is stamped
+        # ``finished_s = now + dt`` — drain them in ONE vectorized
+        # settle per step instead of a scalar ``on_complete`` each
+        done: list[tuple[str, Request]] = []
+        advance_replicas(self._alive(), self.requests, self.dt, now,
+                         lambda rid, req: done.append((rid, req)))
+        if done:
+            self.pool.on_complete_batch(
+                [rid for rid, _ in done],
+                [req.max_tokens for _, req in done], now + self.dt)
 
     def _handle_event(self, kind: str, payload: dict, now: float) -> None:
         if kind == "fail_replica":
@@ -679,13 +685,18 @@ class MultiPoolSimulator:
                              self.manager.pool(pname).on_start)
 
     def _advance_replicas(self, now: float) -> None:
+        # all pools' completions of one dt step share
+        # ``finished_s = now + dt`` — ONE batched gateway callback per
+        # step (the gateway settles each admitting pool's share in one
+        # vectorized ``settle_rows``)
+        done: list[tuple[str, Request]] = []
         for pname in self.replicas:
-            advance_replicas(
-                self._alive(pname), self.requests, self.dt, now,
-                lambda rid, req: self.gateway.on_complete(
-                    rid, req.max_tokens,
-                    latency_s=req.finished_s - req.arrival_s,
-                    now=req.finished_s))
+            advance_replicas(self._alive(pname), self.requests, self.dt,
+                             now, lambda rid, req: done.append((rid, req)))
+        if done:
+            self.gateway.on_complete_batch(
+                [(rid, req.max_tokens, req.finished_s - req.arrival_s)
+                 for rid, req in done], now + self.dt)
 
     def _handle_event(self, kind: str, payload: dict, now: float) -> None:
         if kind == "fail_replica":

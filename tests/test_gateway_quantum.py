@@ -283,3 +283,97 @@ class TestDenialAttribution:
             r = gw.handle("k", "r1", 32, 64, now=0.0)
         assert r.status == 200 and r.pool == "b"
         assert r.spill_hops == 2
+
+
+class TestFastPathParity:
+    """All-single-leg route sets take ``Gateway._quantum_fast``; its
+    decisions, counters, bucket levels, and in-flight sets must match
+    the generic leg-round loop exactly (integer token values keep the
+    f64 bookkeeping bit-exact)."""
+
+    def _build(self, seed, fast):
+        rng = random.Random(seed)
+        mgr = PoolManager([
+            mkpool("a", tps=rng.choice([300.0, 600.0]),
+                   slots=rng.choice([2.0, 4.0])),
+            mkpool("b", tps=600.0, slots=4.0),
+        ])
+        classes = [ServiceClass.GUARANTEED, ServiceClass.ELASTIC,
+                   ServiceClass.SPOT]
+        gw = Gateway(mgr)
+        if not fast:
+            # force the generic leg-round loop
+            gw._quantum_fast = lambda requests, now: None
+        for k in range(5):
+            klass = classes[k % 3]
+            pname = rng.choice(["a", "b"])
+            ename = f"t{k}@{pname}"
+            mgr.pool(pname).add_entitlement(ent(
+                ename, pname, klass=klass,
+                tps=rng.choice([80.0, 200.0]),
+                conc=rng.choice([1.0, 2.0]),
+                slo=rng.choice([250.0, 1000.0, 30000.0])))
+            if klass is ServiceClass.SPOT:
+                mgr.pool(pname).ledger.set_rate(ename, 200.0, 0.0)
+                mgr.pool(pname).ledger.bucket(ename).level = 200.0
+            gw.register_route(f"k{k}", [(pname, ename)])
+        # a leg naming an entitlement the pool never heard of
+        # (espec-miss → terminal NOT_BOUND), and a route whose only
+        # pool does not exist (→ POOL_UNAVAILABLE + unroutable)
+        gw.register_route("kmiss", [("a", "ghost")])
+        gw.register_route("kdead", [("zpool", "ez")])
+        keys = [f"k{i}" for i in range(5)] + ["kmiss", "kdead", "nokey"]
+        reqs = [QuantumRequest(api_key=rng.choice(keys),
+                               request_id=f"r{i}",
+                               input_tokens=rng.choice([16, 48]),
+                               max_tokens=rng.choice([None, 32, 96]))
+                for i in range(32)]
+        return gw, reqs
+
+    @pytest.mark.parametrize("seed", [0, 1, 2, 3, 4, 5, 6])
+    def test_fast_matches_generic(self, seed):
+        gw_f, reqs = self._build(seed, fast=True)
+        gw_g, _ = self._build(seed, fast=False)
+
+        fast = gw_f.handle_quantum(reqs, now=0.0)
+        generic = gw_g.handle_quantum(reqs, now=0.0)
+        for rf, rg in zip(fast, generic):
+            assert _resp_key(rf) == _resp_key(rg)
+            assert rf.request_id == rg.request_id
+            assert rf.retry_after_s == rg.retry_after_s
+            assert rf.priority == rg.priority
+        for pname in ["a", "b"]:
+            pf, pg = gw_f.manager.pool(pname), gw_g.manager.pool(pname)
+            assert sorted(pf.in_flight) == sorted(pg.in_flight)
+            assert set(pf.ledger._buckets) == set(pg.ledger._buckets)
+            for ename, bucket in pf.ledger._buckets.items():
+                assert bucket.level == pg.ledger.bucket(ename).level
+            assert list(pf.store.col["demand_window"][
+                pf.store.live_slots()]) == \
+                list(pg.store.col["demand_window"][
+                    pg.store.live_slots()])
+        keys = set(gw_f.store.keys()) | set(gw_g.store.keys())
+        for key in keys:
+            if key.startswith(("admits:", "denials:", "spills:",
+                               "unroutable:")):
+                assert gw_f.store.get(key) == gw_g.store.get(key), key
+
+    def test_multi_leg_routes_bail_to_generic(self):
+        """A single multi-leg key must disable the fast path for the
+        whole quantum — and leave no partial state behind."""
+        mgr = PoolManager([mkpool("a", tps=10.0), mkpool("b")])
+        mgr.pool("a").add_entitlement(ent("e@a", "a", tps=10.0))
+        mgr.pool("b").add_entitlement(ent("e@b", "b"))
+        gw = Gateway(mgr)
+        gw.register_route("k", [("a", "e@a"), ("b", "e@b")])
+        assert gw._quantum_fast(
+            [QuantumRequest("k", "r1", 32, 64),
+             QuantumRequest("k", "r2", 32, 64)], 0.0) is None
+        # nothing admitted / counted by the aborted fast attempt
+        assert gw.store.keys("admits:") == []
+        assert not mgr.pool("a").in_flight and not mgr.pool("b").in_flight
+        # the full quantum still works end to end (generic path)
+        resps = gw.handle_quantum(
+            [QuantumRequest("k", "r1", 32, 64),
+             QuantumRequest("k", "r2", 32, 64)], now=0.0)
+        assert [r.status for r in resps] == [200, 200]

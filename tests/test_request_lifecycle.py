@@ -1,0 +1,436 @@
+"""Vectorized request lifecycle: batched row-ops == scalar oracles.
+
+The request table (``core.request_table``) does for requests what the
+ResidentStore did for entitlements: rows are the source of truth,
+``InFlight`` is a view.  These tests pin the batched lifecycle entry
+points to their retained scalar oracles:
+
+- ``TokenPool.on_complete_batch`` / ``settle_rows`` == a loop of
+  ``on_complete``; ``evict_rows`` == a loop of ``on_evict`` — exact
+  bucket levels, status counters, and returned ``settled_tokens``
+  through random admit / start / complete / evict / migrate / tick
+  interleavings on mirrored universes (deterministic seeded driver
+  everywhere, hypothesis shrinking where installed);
+- ``Ledger.charge_batch`` == a loop of ``Ledger.charge`` (including
+  mid-group budget failures, where affordability is greedy-with-skip,
+  and unknown-entitlement ``KeyError`` at the same charge index);
+- unknown settles/cancels count in ``Ledger.unknown_settles`` and
+  surface through ``TokenPool.stats``;
+- ``TokenPool.admission_threshold`` never raises on an empty owner
+  set and equals the scalar ``min(priority(...))`` when contended;
+- request churn within a capacity bucket never retraces the
+  ``admit_quantum`` kernel (trace-counter pin).
+
+Token values are integers so scalar and vectorized f64 accounting are
+both exact (decision parity is bit-for-bit, not approximate).
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    AdmissionController,
+    AdmissionRequest,
+    Charge,
+    EntitlementSpec,
+    InFlight,
+    PoolManager,
+    PoolSpec,
+    QoS,
+    Resources,
+    ScalingBounds,
+    ServiceClass,
+    TokenPool,
+)
+from repro.core.control_plane import TRACE_COUNTS
+
+
+def mkpool(name="p", tps=100.0, conc=6.0):
+    spec = PoolSpec(
+        name=name, model="m",
+        scaling=ScalingBounds(1, 4),
+        per_replica=Resources(tps, 1 << 30, conc))
+    return TokenPool(spec)
+
+
+def ent(name, klass=ServiceClass.ELASTIC, tps=50.0, conc=4.0,
+        slo=1000.0, kv=1e6):
+    return EntitlementSpec(
+        name=name, tenant_id=f"t-{name}", pool="p",
+        qos=QoS(service_class=klass, slo_target_ms=slo),
+        baseline=Resources(tps, kv, conc))
+
+
+def mk_universe():
+    """Two-pool manager: ``p`` holds the tenants, ``q`` is the
+    migration / spill target."""
+    p, q = mkpool("p"), mkpool("q")
+    p.add_entitlement(ent("a", ServiceClass.GUARANTEED, 100.0,
+                          slo=250.0))
+    p.add_entitlement(ent("b", ServiceClass.ELASTIC, 50.0))
+    p.add_entitlement(ent("c", ServiceClass.SPOT, 0.0, slo=8000.0))
+    q.add_entitlement(ent("d", ServiceClass.ELASTIC, 50.0))
+    return PoolManager([p, q])
+
+
+def pool_of(manager, rid):
+    for pool in manager.pools.values():
+        if rid in pool.in_flight:
+            return pool
+    return None
+
+
+def owner_pool(manager, name):
+    for pool in manager.pools.values():
+        if name in pool.entitlements:
+            return pool
+    raise KeyError(name)
+
+
+def assert_mirror(mb, mo):
+    """Batched universe == oracle universe, exactly: membership,
+    status counters, bucket levels, record attributes, observability
+    counters."""
+    assert set(mb.pools) == set(mo.pools)
+    for pname in mb.pools:
+        pb, po = mb.pools[pname], mo.pools[pname]
+        assert set(pb.entitlements) == set(po.entitlements), pname
+        assert sorted(pb.in_flight) == sorted(po.in_flight), pname
+        assert pb.ledger.unknown_settles == po.ledger.unknown_settles
+        assert pb.stats() == po.stats(), pname
+        for n in pb.entitlements:
+            sb, so = pb.status[n], po.status[n]
+            for attr in ("in_flight", "resident", "admitted_total",
+                         "denied_total", "denied_low_priority",
+                         "completed_total"):
+                assert getattr(sb, attr) == getattr(so, attr), \
+                    (pname, n, attr)
+            for attr in ("kv_bytes_in_use", "window_tokens",
+                         "tokens_total", "debt", "burst"):
+                assert getattr(sb, attr) == getattr(so, attr), \
+                    (pname, n, attr)
+            assert pb.ledger.has_bucket(n) == po.ledger.has_bucket(n)
+            if pb.ledger.has_bucket(n):
+                assert (pb.ledger.bucket(n).level
+                        == po.ledger.bucket(n).level), (pname, n)
+        for rid in pb.in_flight:
+            rb, ro = pb.in_flight[rid], po.in_flight[rid]
+            assert rb.entitlement == ro.entitlement, rid
+            assert rb.charged_tokens == ro.charged_tokens, rid
+            assert rb.kv_bytes == ro.kv_bytes, rid
+            assert bool(rb.resident) == bool(ro.resident), rid
+            assert rb.spill_from == ro.spill_from, rid
+
+
+def run_lifecycle(choose, n_ops):
+    """One lifecycle scenario: the batched universe settles/evicts
+    through the vectorized row-ops, the oracle universe through the
+    scalar per-request loop; they must agree after EVERY op."""
+    mb, mo = mk_universe(), mk_universe()
+    live: dict[str, str] = {}            # rid → entitlement
+    counter = [0]
+    now = [0.0]
+
+    def ent_names():
+        return sorted(n for p in mb.pools.values()
+                      for n in p.entitlements)
+
+    def subset_of_live():
+        """Deterministic contiguous slice of the live rid list."""
+        rids = sorted(live)
+        if not rids:
+            return []
+        k = min(len(rids), choose([1, 2, 3, 5]))
+        i = choose(list(range(len(rids))))
+        return [rids[(i + j) % len(rids)] for j in range(k)]
+
+    def do_admit():
+        name = choose(ent_names())
+        kvpt = float(choose([0.0, 2.0]))
+        for _ in range(choose([1, 2, 3])):
+            counter[0] += 1
+            rid = f"r{counter[0]}"
+            decisions = []
+            for m in (mb, mo):
+                pool = owner_pool(m, name)
+                decisions.append(AdmissionController(pool).decide(
+                    AdmissionRequest(name, 16, 32, now[0],
+                                     request_id=rid,
+                                     kv_bytes_per_token=kvpt)))
+            assert decisions[0].admitted == decisions[1].admitted
+            if decisions[0].admitted:
+                live[rid] = name
+
+    def do_start():
+        rids = sorted(live)
+        if rids:
+            rid = choose(rids)
+            for m in (mb, mo):
+                pool_of(m, rid).on_start(rid)
+
+    def do_tag_spill():
+        rids = sorted(live)
+        if not rids:
+            return
+        rid = choose(rids)
+        prefs = sorted(n for n in mb.pools["p"].entitlements
+                       if n != live[rid])
+        if not prefs:
+            return
+        leg = ("p", choose(prefs))
+        for m in (mb, mo):
+            pool_of(m, rid).in_flight[rid].spill_from = leg
+
+    def do_complete():
+        rids = subset_of_live()
+        if not rids:
+            return
+        outs = [choose([0, 8, 16, 40]) for _ in rids]
+        if choose([False, True]):        # an unknown id mid-batch
+            rids = rids + [f"ghost{counter[0]}"]
+            outs = outs + [7]
+        batched = mb.on_complete_batch(list(zip(rids, outs)), now[0])
+        for (rid, out), res in zip(zip(rids, outs), batched):
+            oracle = mo.on_complete(rid, out, now[0])
+            if oracle is None:
+                assert res is None, rid
+            else:
+                pname, rec = oracle
+                assert res == (pname, rec.entitlement,
+                               rec.settled_tokens), rid
+            live.pop(rid, None)
+
+    def do_evict():
+        rids = subset_of_live()
+        if not rids:
+            return
+        groups: dict[str, list[str]] = {}
+        for rid in rids:
+            pool = pool_of(mb, rid)
+            groups.setdefault(pool.spec.name, []).append(rid)
+        for pname, group in groups.items():
+            batch = mb.pools[pname].evict_rows(group, now[0])
+            assert batch.known.all()
+            assert not batch.settled_tokens.any()
+        for rid in rids:
+            assert mo.on_evict(rid, now[0]) is not None, rid
+            del live[rid]
+
+    def do_migrate():
+        name = choose(ent_names())
+        src = owner_pool(mb, name).spec.name
+        dst = "q" if src == "p" else "p"
+        for m in (mb, mo):
+            m.migrate_entitlement(name, src, dst, now[0])
+
+    def do_tick():
+        now[0] += float(choose([0.5, 1.0]))
+        mb.tick(now[0])
+        mo.tick(now[0])
+
+    ops = [do_admit, do_admit, do_start, do_tag_spill, do_complete,
+           do_evict, do_migrate, do_tick]
+    do_admit()
+    assert_mirror(mb, mo)
+    for _ in range(n_ops):
+        choose(ops)()
+        assert_mirror(mb, mo)
+
+
+class TestLifecycleSeededSweep:
+    """Always-run deterministic instantiation of the batched-vs-scalar
+    lifecycle property (hypothesis adds shrinking depth below)."""
+
+    @pytest.mark.parametrize("seed", range(8))
+    def test_seeded_lifecycle_parity(self, seed):
+        rng = np.random.RandomState(seed)
+        run_lifecycle(
+            lambda options: options[rng.randint(len(options))],
+            n_ops=12)
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    class TestLifecycleHypothesis:
+        @given(data=st.data())
+        @settings(max_examples=20, deadline=None, derandomize=True)
+        def test_random_lifecycle_parity(self, data):
+            run_lifecycle(
+                lambda options: data.draw(st.sampled_from(options)),
+                n_ops=data.draw(st.integers(6, 16), label="n_ops"))
+
+
+# -- charge_batch == scalar charge loop ------------------------------------
+def _charged_pool(tps_a=10.0, tps_b=50.0):
+    pool = mkpool()
+    pool.add_entitlement(ent("a", tps=tps_a))
+    pool.add_entitlement(ent("b", tps=tps_b))
+    pool.ledger.ensure("a", tps_a, 0.0)
+    pool.ledger.ensure("b", tps_b, 0.0)
+    return pool
+
+
+def _charge(rid, name, tokens, now=0.0):
+    return Charge(request_id=rid, entitlement=name,
+                  charged_tokens=float(tokens), input_tokens=8,
+                  max_tokens=int(tokens) - 8, admitted_at=now)
+
+
+class TestChargeBatchParity:
+    def test_batch_matches_scalar_loop_with_midgroup_failure(self):
+        # bucket a holds 40 tokens (10 tps × 4 s burst window):
+        # 16 ok, 16 ok, 16 FAILS, 8 ok — affordability must be
+        # greedy-with-skip in arrival order, not prefix-cutoff
+        pb, po = _charged_pool(), _charged_pool()
+        charges = [_charge("r1", "a", 16), _charge("r2", "b", 64),
+                   _charge("r3", "a", 16), _charge("r4", "a", 16),
+                   _charge("r5", "a", 8), _charge("r6", "b", 200)]
+        got = pb.ledger.charge_batch(charges, 0.0)
+        want = [po.ledger.charge(c, 0.0) for c in charges]
+        assert got == want == [True, True, True, False, True, False]
+        for n in ("a", "b"):
+            assert pb.ledger.bucket(n).level == po.ledger.bucket(n).level
+        assert (pb.ledger.outstanding_charges()
+                == po.ledger.outstanding_charges())
+
+    def test_batch_refills_once_at_shared_now(self):
+        pb, po = _charged_pool(), _charged_pool()
+        for led in (pb.ledger, po.ledger):
+            assert led.charge(_charge("warm", "a", 40), 0.0)
+        charges = [_charge("r1", "a", 10), _charge("r2", "a", 10)]
+        got = pb.ledger.charge_batch(charges, 1.5)   # 15 tokens refilled
+        want = [po.ledger.charge(c, 1.5) for c in charges]
+        assert got == want == [True, False]
+        assert pb.ledger.bucket("a").level == po.ledger.bucket("a").level
+
+    def test_unknown_entitlement_raises_at_same_index(self):
+        pb, po = _charged_pool(), _charged_pool()
+        charges = [_charge("r1", "a", 16), _charge("r2", "ghost", 16),
+                   _charge("r3", "b", 16)]
+        with pytest.raises(KeyError):
+            pb.ledger.charge_batch(charges, 0.0)
+        got = []
+        with pytest.raises(KeyError):
+            for c in charges:
+                got.append(po.ledger.charge(c, 0.0))
+        assert got == [True]                     # failed at index 1
+        # both stopped with the same partial state
+        for n in ("a", "b"):
+            assert pb.ledger.bucket(n).level == po.ledger.bucket(n).level
+        assert (pb.ledger.outstanding_charges()
+                == po.ledger.outstanding_charges())
+
+
+# -- unknown settles are counted, not silent --------------------------------
+class TestUnknownSettleCounter:
+    def test_scalar_settle_and_cancel_count(self):
+        pool = mkpool()
+        pool.add_entitlement(ent("a"))
+        assert pool.ledger.settle("nope", 10, now=0.0) == 0.0
+        assert pool.ledger.unknown_settles == 1
+        pool.ledger.cancel("nope2", now=0.0)
+        assert pool.ledger.unknown_settles == 2
+        assert pool.stats()["unknown_settles"] == 2
+
+    def test_record_without_charge_counts_in_batch(self):
+        # the admission=False simulator path registers records without
+        # a ledger charge — settling them must be visible
+        pool = mkpool()
+        pool.add_entitlement(ent("a"))
+        pool.register_admit(InFlight("r1", "a", 0.5, 0.0, 48, 0.0),
+                            48.0)
+        batch = pool.on_complete_batch(["r1"], [16], now=1.0)
+        assert batch.known.tolist() == [True]
+        assert batch.settled_tokens.tolist() == [0.0]
+        assert pool.ledger.unknown_settles == 1
+        assert "r1" not in pool.in_flight
+
+    def test_unknown_rid_is_not_an_unknown_settle(self):
+        # a rid the pool never saw returns known=False and does NOT
+        # bump the counter (matches scalar on_complete → None)
+        pool = mkpool()
+        pool.add_entitlement(ent("a"))
+        batch = pool.on_complete_batch(["ghost"], [16], now=1.0)
+        assert batch.known.tolist() == [False]
+        assert pool.ledger.unknown_settles == 0
+        assert pool.on_complete("ghost", 16, now=1.0) is None
+
+
+# -- admission_threshold: vectorized Eq. 1, guarded ------------------------
+class TestAdmissionThreshold:
+    def _contended_pool(self):
+        pool = mkpool(conc=2.0)                  # 2 decode slots
+        pool.add_entitlement(ent("a", ServiceClass.GUARANTEED, 100.0,
+                                 slo=250.0))
+        pool.add_entitlement(ent("b", ServiceClass.ELASTIC, 50.0))
+        pool.status["b"].debt = 0.25
+        for i, name in enumerate(["a", "a", "b"]):
+            pool.register_admit(
+                InFlight(f"r{i}", name, 1.0, 0.0, 48, 0.0), 48.0)
+        assert pool.contended()
+        return pool
+
+    def test_matches_scalar_priority_min(self):
+        pool = self._contended_pool()
+        expected = min(pool.priority(n) for n in ("a", "b"))
+        assert pool.admission_threshold() == pytest.approx(
+            expected, rel=1e-12)
+
+    def test_empty_pool_is_zero(self):
+        pool = mkpool()
+        pool.add_entitlement(ent("a"))
+        assert pool.admission_threshold() == 0.0
+
+    def test_owner_removal_does_not_raise(self):
+        # removing every in-flight owner used to leave stale records
+        # behind and raise ValueError from an empty min(); removal now
+        # evicts the rows and the threshold guard returns 0.0
+        pool = self._contended_pool()
+        pool.remove_entitlement("a", now=1.0)
+        pool.remove_entitlement("b", now=1.0)
+        assert len(pool.in_flight) == 0
+        assert pool.admission_threshold() == 0.0
+
+
+# -- no-retrace pin: request churn inside one capacity bucket --------------
+class TestNoRetrace:
+    def test_request_churn_does_not_retrace_admit_quantum(self):
+        from repro.gateway import Gateway, QuantumRequest
+
+        pool = mkpool(tps=100000.0, conc=1000.0)
+        for n in ("a", "b"):
+            pool.add_entitlement(ent(n, tps=50000.0))
+        gw = Gateway(pool)
+        gw.register_key("ka", "a")
+        gw.register_key("kb", "b")
+        rid = [0]
+
+        def quantum(n_req, now):
+            reqs = []
+            for _ in range(n_req):
+                rid[0] += 1
+                reqs.append(QuantumRequest(
+                    api_key="ka" if rid[0] % 2 else "kb",
+                    request_id=f"r{rid[0]}", input_tokens=16,
+                    max_tokens=32))
+            return gw.handle_quantum(reqs, now)
+
+        quantum(8, 0.0)                          # warm the trace
+        before = TRACE_COUNTS["admit_quantum"]
+        admitted = []
+        # quantum sizes 5..8 share one pow2 pad bucket; completions
+        # churn the request table between dispatches
+        for step, size in enumerate([5, 8, 6, 7], start=1):
+            for resp in quantum(size, float(step)):
+                if resp.status == 200:
+                    admitted.append(resp.request_id)
+            drain, admitted = admitted[:4], admitted[4:]
+            if drain:
+                pool.on_complete_batch(drain, [16] * len(drain),
+                                       float(step) + 0.5)
+        assert TRACE_COUNTS["admit_quantum"] == before
