@@ -1,0 +1,37 @@
+"""Control-plane sanitizer — AST invariant passes for the repo's three
+docstring-enforced contracts (mirror invalidation, dtype discipline,
+retrace bucketing) plus hot-path loop hygiene and kernel↔oracle parity
+coverage.  stdlib ``ast`` only; run as ``python -m repro.analysis
+--strict src/`` (blocking in CI).
+
+Rules:
+
+* ``mirror-invalidation`` — host writes to device-mirrored store
+  columns must ``mark_dirty()``;
+* ``dtype-discipline`` — no f64 into jit kernel args, no f32
+  truncation of f64 accumulator columns;
+* ``retrace-hazard`` — kernel calls shape-bucketed, static args
+  literal+hashable, no mutable host capture;
+* ``hot-path-scalar-loop`` — ``@hot_path`` functions never loop over
+  store/table rows in Python;
+* ``oracle-parity`` — every control-plane jit kernel registers a
+  scalar oracle (``@kernel``) with a test referencing both.
+
+Waive a finding in place with ``# repro: allow[<rule>] -- <reason>``.
+"""
+from repro.analysis.core import (  # noqa: F401
+    Finding,
+    PASS_REGISTRY,
+    Pass,
+    Project,
+    Report,
+    SourceFile,
+    analyze,
+    register_pass,
+)
+from repro.analysis.manifest import Manifest, default_manifest  # noqa: F401
+
+__all__ = [
+    "Finding", "Manifest", "PASS_REGISTRY", "Pass", "Project", "Report",
+    "SourceFile", "analyze", "default_manifest", "register_pass",
+]

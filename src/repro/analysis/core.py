@@ -1,0 +1,499 @@
+"""Analyzer framework: findings, waivers, project model, pass registry.
+
+Everything is stdlib ``ast`` — the analyzer never imports the code it
+scans (the column manifest is the one exception, loaded from
+``repro.core.resident`` / ``repro.core.request_table`` by
+``repro.analysis.manifest``; fixture tests inject their own).
+
+Waiver syntax (line-scoped, applies to its own line, or — when written
+on a comment-only line — to the next code line)::
+
+    self.store.col["burst"][slot] = v   # repro: allow[mirror-invalidation] -- adopted below
+
+File-scoped (anywhere in the file, typically the header)::
+
+    # repro: allow-file[retrace-hazard] -- generated shim, no jit calls survive
+
+A waiver without a ``-- reason`` is itself an error under ``--strict``.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import re
+from pathlib import Path
+from typing import Iterable, Optional
+
+WAIVER_RE = re.compile(
+    r"#\s*repro:\s*allow(?P<scope>-file)?\["
+    r"(?P<rules>[A-Za-z0-9_,\s-]+)\]"
+    r"(?:\s*--\s*(?P<reason>\S.*?))?\s*$")
+
+#: calls that invalidate (or wholesale replace) the device mirror
+INVALIDATORS = ("mark_dirty", "adopt_device", "_membership_changed")
+
+#: ``np.<ufunc>.at`` in-place scatter ops treated as column writes
+_UFUNC_AT = ("add", "subtract", "maximum", "minimum", "multiply")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule: str
+    path: str
+    line: int
+    message: str
+    waived: bool = False
+    waive_reason: Optional[str] = None
+
+    def format(self) -> str:
+        tail = f"  [waived: {self.waive_reason}]" if self.waived else ""
+        return f"{self.path}:{self.line}: {self.rule}: {self.message}{tail}"
+
+
+@dataclasses.dataclass
+class Waiver:
+    rules: tuple[str, ...]
+    line: int                 # code line the waiver applies to (0 = file)
+    reason: Optional[str]
+    file_scoped: bool = False
+
+
+class SourceFile:
+    """One parsed source file: AST + waiver table."""
+
+    def __init__(self, path: str, text: str) -> None:
+        self.path = path
+        self.text = text
+        self.tree = ast.parse(text, filename=path)
+        self.waivers: list[Waiver] = []
+        self._parse_waivers(text.splitlines())
+
+    def _parse_waivers(self, lines: list[str]) -> None:
+        pending: list[Waiver] = []   # comment-line waivers awaiting code
+        for i, raw in enumerate(lines, start=1):
+            m = WAIVER_RE.search(raw)
+            code = raw.split("#", 1)[0].strip()
+            if m:
+                rules = tuple(r.strip() for r in m.group("rules").split(",")
+                              if r.strip())
+                w = Waiver(rules=rules, line=i, reason=m.group("reason"),
+                           file_scoped=m.group("scope") is not None)
+                if w.file_scoped:
+                    w = dataclasses.replace(w, line=0)
+                    self.waivers.append(w)
+                elif code:               # waiver on a code line
+                    self.waivers.append(w)
+                else:                    # comment-only: bind to next code line
+                    pending.append(w)
+            elif code and pending:
+                for w in pending:
+                    self.waivers.append(dataclasses.replace(w, line=i))
+                pending = []
+        self.waivers.extend(pending)     # trailing orphans keep comment line
+
+    def waiver_for(self, rule: str, line: int) -> Optional[Waiver]:
+        for w in self.waivers:
+            if rule in w.rules and (w.file_scoped or w.line == line):
+                return w
+        return None
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelDecl:
+    """A ``@kernel(oracle=...)`` declaration found in the AST."""
+
+    name: str
+    oracle: Optional[str]     # None → malformed declaration
+    path: str
+    line: int
+
+
+@dataclasses.dataclass(frozen=True)
+class FuncDecl:
+    """A function of interest (hot path / jit kernel) with its context."""
+
+    qualname: str             # "Class.method" or "func"
+    node: ast.AST
+    file: "SourceFile"
+
+
+class Project:
+    """Everything the passes share: parsed files, the column manifest,
+    kernel/hot-path declarations, jit decorations, mutable globals."""
+
+    def __init__(self, files: list[SourceFile], manifest,
+                 tests: Optional[dict[str, set[str]]] = None) -> None:
+        self.files = files
+        self.manifest = manifest
+        #: test file path → set of identifiers referenced in it
+        self.tests = tests or {}
+        self.kernels: dict[str, KernelDecl] = {}
+        self.hot_paths: list[FuncDecl] = []
+        self.jit_defs: list[FuncDecl] = []
+        #: module-level dict/list/set literal names that some scanned
+        #: code mutates (subscript-store / aug-assign / del)
+        self.mutable_globals: set[str] = set()
+        self._collect()
+
+    def _collect(self) -> None:
+        literal_globals: set[str] = set()
+        mutated: set[str] = set()
+        for f in self.files:
+            for node in f.tree.body:
+                if isinstance(node, (ast.Assign, ast.AnnAssign)) and isinstance(
+                        node.value, (ast.Dict, ast.List, ast.Set, ast.DictComp,
+                                     ast.ListComp, ast.SetComp)):
+                    tgts = (node.targets if isinstance(node, ast.Assign)
+                            else [node.target])
+                    for t in tgts:
+                        if isinstance(t, ast.Name):
+                            literal_globals.add(t.id)
+            for node, qualname in iter_functions(f.tree):
+                decs = node.decorator_list
+                if any(_dec_is(d, "hot_path") for d in decs):
+                    self.hot_paths.append(FuncDecl(qualname, node, f))
+                if any(_dec_mentions(d, "jit") for d in decs):
+                    self.jit_defs.append(FuncDecl(qualname, node, f))
+                for d in decs:
+                    if isinstance(d, ast.Call) and _dec_is(d.func, "kernel"):
+                        oracle = None
+                        for kw in d.keywords:
+                            if kw.arg == "oracle" and isinstance(
+                                    kw.value, ast.Constant) and isinstance(
+                                    kw.value.value, str):
+                                oracle = kw.value.value
+                        self.kernels[node.name] = KernelDecl(
+                            node.name, oracle, f.path, node.lineno)
+            for sub in ast.walk(f.tree):
+                tgt = None
+                if isinstance(sub, (ast.Assign, ast.AugAssign)):
+                    tgts = (sub.targets if isinstance(sub, ast.Assign)
+                            else [sub.target])
+                    for t in tgts:
+                        if isinstance(t, ast.Subscript) and isinstance(
+                                t.value, ast.Name):
+                            tgt = t.value.id
+                elif isinstance(sub, ast.Delete):
+                    for t in sub.targets:
+                        if isinstance(t, ast.Subscript) and isinstance(
+                                t.value, ast.Name):
+                            tgt = t.value.id
+                if tgt:
+                    mutated.add(tgt)
+        self.mutable_globals = literal_globals & mutated
+
+
+# -- AST helpers shared by the passes ----------------------------------------
+
+def iter_functions(tree: ast.Module) -> Iterable[tuple[ast.AST, str]]:
+    """Top-level and class-level functions as (node, qualname)."""
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            yield node, node.name
+        elif isinstance(node, ast.ClassDef):
+            for sub in node.body:
+                if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    yield sub, f"{node.name}.{sub.name}"
+
+
+def _dec_is(dec: ast.AST, name: str) -> bool:
+    return (isinstance(dec, ast.Name) and dec.id == name) or (
+        isinstance(dec, ast.Attribute) and dec.attr == name)
+
+
+def _dec_mentions(dec: ast.AST, name: str) -> bool:
+    """True if a decorator expression references ``name`` anywhere —
+    catches ``@jax.jit``, ``@partial(jax.jit, ...)``, ``@jit``."""
+    for sub in ast.walk(dec):
+        if isinstance(sub, ast.Name) and sub.id == name:
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr == name:
+            return True
+    return False
+
+
+def mentions(node: ast.AST, names: set[str]) -> bool:
+    """Does the subtree reference any of ``names`` (Name or Attribute)?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and sub.id in names:
+            return True
+        if isinstance(sub, ast.Attribute) and sub.attr in names:
+            return True
+    return False
+
+
+def collect_aliases(func: ast.AST) -> tuple[set[str], dict[str, str]]:
+    """Scan a function for ``x = <...>.col`` aliases and
+    ``y = <...>.col["name"]`` column aliases.  Returns
+    (col-dict alias names, column-array alias name → column name)."""
+    col_aliases: set[str] = set()
+    column_of: dict[str, str] = {}
+    simple = [
+        sub for sub in ast.walk(func)
+        if isinstance(sub, ast.Assign) and len(sub.targets) == 1
+        and isinstance(sub.targets[0], ast.Name)]
+    for sub in simple:          # phase 1: dict aliases (c = store.col)
+        if isinstance(sub.value, ast.Attribute) and sub.value.attr == "col":
+            col_aliases.add(sub.targets[0].id)
+    for sub in simple:          # phase 2: column aliases (w = c["x"])
+        col = resolve_col(sub.value, col_aliases, {})
+        if col is not None:
+            column_of[sub.targets[0].id] = col
+    return col_aliases, column_of
+
+
+def resolve_col(node: ast.AST, col_aliases: set[str],
+                column_of: dict[str, str]) -> Optional[str]:
+    """Column name if ``node`` denotes a whole column array:
+    ``<...>.col["name"]``, ``alias["name"]``, or a column alias Name."""
+    if isinstance(node, ast.Name):
+        return column_of.get(node.id)
+    if isinstance(node, ast.Subscript):
+        base, key = node.value, node.slice
+        is_col_dict = (isinstance(base, ast.Attribute) and base.attr == "col"
+                       ) or (isinstance(base, ast.Name)
+                             and base.id in col_aliases)
+        if is_col_dict and isinstance(key, ast.Constant) and isinstance(
+                key.value, str):
+            return key.value
+    return None
+
+
+@dataclasses.dataclass(frozen=True)
+class ColWrite:
+    column: str
+    node: ast.AST             # the write statement / call
+    value: Optional[ast.AST]  # RHS for assignments, None for ufunc.at
+
+
+def col_writes(func: ast.AST) -> list[ColWrite]:
+    """Every write to a named store/table column inside ``func``:
+    subscript assignment, aug-assignment, whole-column assignment, and
+    ``np.<ufunc>.at`` scatter calls — through one level of aliasing."""
+    col_aliases, column_of = collect_aliases(func)
+    writes: list[ColWrite] = []
+
+    def target_col(t: ast.AST) -> Optional[str]:
+        col = resolve_col(t, col_aliases, column_of)
+        if col is None and isinstance(t, ast.Subscript):
+            col = resolve_col(t.value, col_aliases, column_of)
+        return col
+
+    for sub in ast.walk(func):
+        if isinstance(sub, ast.Assign):
+            for t in sub.targets:
+                col = target_col(t)
+                if col is not None:
+                    # skip the aliasing assignment itself (x = c["a"])
+                    if isinstance(t, ast.Name):
+                        continue
+                    writes.append(ColWrite(col, sub, sub.value))
+        elif isinstance(sub, ast.AugAssign):
+            col = target_col(sub.target)
+            if col is not None:
+                writes.append(ColWrite(col, sub, sub.value))
+        elif isinstance(sub, ast.Call):
+            fn = sub.func
+            if (isinstance(fn, ast.Attribute) and fn.attr == "at"
+                    and isinstance(fn.value, ast.Attribute)
+                    and fn.value.attr in _UFUNC_AT and sub.args):
+                col = resolve_col(sub.args[0], col_aliases, column_of)
+                if col is not None:
+                    writes.append(ColWrite(col, sub, None))
+    return writes
+
+
+def followed_by_invalidation(func: ast.AST, write: ast.AST) -> bool:
+    """True when the statement containing ``write`` is followed — in
+    its own suite or any enclosing suite of ``func`` — by a direct
+    ``<...>.mark_dirty()`` / ``adopt_device(...)`` /
+    ``_membership_changed()`` call, or when the containing statement
+    itself ends in one (compound one-liners).  Conditional siblings
+    (an ``if`` wrapping the call) do NOT count: the invalidation must
+    be unconditional on the write's own path."""
+    path = _statement_path(func, write)
+    if path is None:
+        return False
+    for suite, idx in reversed(path):
+        for stmt in suite[idx + 1:]:
+            if _is_invalidation_stmt(stmt):
+                return True
+    return False
+
+
+def _is_invalidation_stmt(stmt: ast.AST) -> bool:
+    if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Call):
+        fn = stmt.value.func
+        name = fn.attr if isinstance(fn, ast.Attribute) else (
+            fn.id if isinstance(fn, ast.Name) else None)
+        return name in INVALIDATORS
+    return False
+
+
+def _statement_path(func: ast.AST, target: ast.AST
+                    ) -> Optional[list[tuple[list, int]]]:
+    """Suite chain [(suite, index), ...] from the function body down to
+    the statement containing ``target``."""
+
+    def search(suite: list) -> Optional[list[tuple[list, int]]]:
+        for i, stmt in enumerate(suite):
+            if stmt is target or any(sub is target for sub in ast.walk(stmt)):
+                for field in ("body", "orelse", "finalbody"):
+                    child = getattr(stmt, field, None)
+                    if isinstance(child, list) and child:
+                        deeper = search(child)
+                        if deeper is not None and any(
+                                sub is target
+                                for s in child for sub in ast.walk(s)):
+                            return [(suite, i)] + deeper
+                if isinstance(stmt, ast.Try):
+                    for handler in stmt.handlers:
+                        deeper = search(handler.body)
+                        if deeper is not None:
+                            return [(suite, i)] + deeper
+                return [(suite, i)]
+        return None
+
+    return search(func.body)
+
+
+# -- pass registry ------------------------------------------------------------
+
+class Pass:
+    """Base class: subclasses set ``rule``/``description`` and
+    implement :meth:`run`."""
+
+    rule: str = ""
+    description: str = ""
+
+    def run(self, project: Project) -> list[Finding]:  # pragma: no cover
+        raise NotImplementedError
+
+
+PASS_REGISTRY: dict[str, type] = {}
+
+
+def register_pass(cls: type) -> type:
+    PASS_REGISTRY[cls.rule] = cls
+    return cls
+
+
+# -- report -------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Report:
+    findings: list[Finding]
+    #: waivers missing a ``-- reason`` (strict-mode error), as
+    #: (path, line, rules)
+    reasonless_waivers: list[tuple[str, int, tuple[str, ...]]]
+    rules_run: tuple[str, ...]
+    files_scanned: int
+
+    @property
+    def unwaived(self) -> list[Finding]:
+        return [f for f in self.findings if not f.waived]
+
+    @property
+    def waived(self) -> list[Finding]:
+        return [f for f in self.findings if f.waived]
+
+    def ok(self, strict: bool = False) -> bool:
+        if self.unwaived:
+            return False
+        if strict and self.reasonless_waivers:
+            return False
+        return True
+
+    def to_json(self) -> dict:
+        rules: dict[str, dict] = {
+            r: {"findings": 0, "waived": 0} for r in self.rules_run}
+        for f in self.findings:
+            entry = rules.setdefault(f.rule, {"findings": 0, "waived": 0})
+            entry["findings"] += 1
+            if f.waived:
+                entry["waived"] += 1
+        return {
+            "rules": rules,
+            "files_scanned": self.files_scanned,
+            "unwaived_total": len(self.unwaived),
+            "reasonless_waivers": [
+                {"path": p, "line": ln, "rules": list(rs)}
+                for p, ln, rs in self.reasonless_waivers],
+            "findings": [dataclasses.asdict(f) for f in self.findings],
+        }
+
+
+def collect_sources(paths: Iterable[str]) -> list[SourceFile]:
+    files: list[SourceFile] = []
+    for p in paths:
+        root = Path(p)
+        candidates = sorted(root.rglob("*.py")) if root.is_dir() else [root]
+        for c in candidates:
+            files.append(SourceFile(str(c), c.read_text()))
+    return files
+
+
+def parse_tests(tests_dir: Optional[str]) -> dict[str, set[str]]:
+    """Test file path → every identifier (Name id / Attribute attr /
+    import name) referenced in it — the cross-reference table for the
+    oracle-parity pass."""
+    out: dict[str, set[str]] = {}
+    if not tests_dir:
+        return out
+    root = Path(tests_dir)
+    if not root.is_dir():
+        return out
+    for p in sorted(root.rglob("*.py")):
+        idents: set[str] = set()
+        try:
+            tree = ast.parse(p.read_text(), filename=str(p))
+        except SyntaxError:
+            continue
+        for sub in ast.walk(tree):
+            if isinstance(sub, ast.Name):
+                idents.add(sub.id)
+            elif isinstance(sub, ast.Attribute):
+                idents.add(sub.attr)
+            elif isinstance(sub, (ast.Import, ast.ImportFrom)):
+                for alias in sub.names:
+                    idents.add(alias.name.rsplit(".", 1)[-1])
+                    if alias.asname:
+                        idents.add(alias.asname)
+        out[str(p)] = idents
+    return out
+
+
+def analyze(paths: Iterable[str], *, manifest=None,
+            tests_dir: Optional[str] = "tests",
+            rules: Optional[Iterable[str]] = None) -> Report:
+    """Run the registered passes over ``paths`` and apply waivers."""
+    from repro.analysis import passes as _passes  # noqa: F401  (registers)
+    from repro.analysis.manifest import default_manifest
+
+    if manifest is None:
+        manifest = default_manifest()
+    files = collect_sources(paths)
+    project = Project(files, manifest, tests=parse_tests(tests_dir))
+    selected = tuple(rules) if rules else tuple(sorted(PASS_REGISTRY))
+    unknown = set(selected) - set(PASS_REGISTRY)
+    if unknown:
+        raise ValueError(f"unknown rules: {sorted(unknown)}")
+
+    by_path = {f.path: f for f in files}
+    findings: list[Finding] = []
+    for rule in selected:
+        for raw in PASS_REGISTRY[rule]().run(project):
+            src = by_path.get(raw.path)
+            w = src.waiver_for(raw.rule, raw.line) if src else None
+            if w is not None:
+                raw = dataclasses.replace(
+                    raw, waived=True,
+                    waive_reason=w.reason or "(no reason given)")
+            findings.append(raw)
+
+    reasonless = [
+        (f.path, w.line, w.rules)
+        for f in files for w in f.waivers if not w.reason]
+    findings.sort(key=lambda f: (f.path, f.line, f.rule))
+    return Report(findings=findings, reasonless_waivers=reasonless,
+                  rules_run=selected, files_scanned=len(files))

@@ -1,0 +1,9 @@
+"""The five control-plane invariant passes.  Importing this package
+registers them all with ``repro.analysis.core.PASS_REGISTRY``."""
+from repro.analysis.passes import (  # noqa: F401
+    dtype,
+    hotpath,
+    mirror,
+    parity,
+    retrace,
+)

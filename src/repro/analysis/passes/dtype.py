@@ -1,0 +1,154 @@
+"""Pass 2 — ``dtype-discipline``.
+
+The resident contract (``resident.py``): kernel-facing columns are
+float32 (the kernels and every parity oracle run f32 end-to-end), the
+accounting accumulators are float64 (sequential-accumulation parity
+with the scalar bookkeeping, bit for bit).  Two violation shapes:
+
+* an f64 value flowing into a registered jit kernel argument — either
+  an explicit ``float64`` dtype/cast in the argument expression, or an
+  f64 accumulator column passed through uncast (jit would weak-promote
+  or retrace, and parity drifts);
+* an f32 truncation written INTO an f64 accumulator column — the
+  sequential-accumulation parity the f64 contract exists for is lost.
+
+Both are seeded from the column manifest; kernel call sites are the
+functions registered via ``@kernel(oracle=...)``.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Optional
+
+from repro.analysis.core import (
+    Finding,
+    Pass,
+    Project,
+    col_writes,
+    collect_aliases,
+    iter_functions,
+    register_pass,
+    resolve_col,
+)
+
+#: calls accepted as an explicit down-cast to f32 when they mention
+#: float32 anywhere in their arguments: .astype(...), np.float32(...),
+#: np.asarray(x, np.float32), jnp.asarray(...)
+_CAST_FUNCS = ("astype", "asarray", "array", "float32")
+
+
+def _is_f32_cast(node: ast.AST) -> bool:
+    if not isinstance(node, ast.Call):
+        return False
+    fn = node.func
+    name = fn.attr if isinstance(fn, ast.Attribute) else (
+        fn.id if isinstance(fn, ast.Name) else None)
+    if name not in _CAST_FUNCS:
+        return False
+    if name == "float32":
+        return True
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Attribute) and sub.attr == "float32") or (
+                isinstance(sub, ast.Name) and sub.id == "float32"):
+            return True
+    return False
+
+
+def _mentions_f32(node: ast.AST) -> bool:
+    for sub in ast.walk(node):
+        if (isinstance(sub, ast.Attribute) and sub.attr == "float32") or (
+                isinstance(sub, ast.Name) and sub.id == "float32"):
+            return True
+    return False
+
+
+def _call_name(call: ast.Call) -> Optional[str]:
+    fn = call.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return None
+
+
+def kernel_calls(func: ast.AST, kernels: set[str]) -> list[ast.Call]:
+    return [sub for sub in ast.walk(func)
+            if isinstance(sub, ast.Call) and _call_name(sub) in kernels]
+
+
+def _uncast_f64_cols(arg: ast.AST, col_aliases, column_of,
+                     f64_cols: set[str]) -> list[str]:
+    """f64 columns referenced in ``arg`` with no f32 cast wrapping them
+    (checked top-down: a cast anywhere above the reference sanctions
+    everything below it)."""
+    hits: list[str] = []
+
+    def visit(node: ast.AST) -> None:
+        if _is_f32_cast(node):
+            return
+        col = resolve_col(node, col_aliases, column_of)
+        if col in f64_cols:
+            hits.append(col)
+            return
+        for child in ast.iter_child_nodes(node):
+            visit(child)
+
+    visit(arg)
+    return hits
+
+
+@register_pass
+class DtypeDisciplinePass(Pass):
+    rule = "dtype-discipline"
+    description = ("no f64 into jit kernel args; no f32 truncation of "
+                   "f64 accumulator columns")
+
+    def run(self, project: Project) -> list[Finding]:
+        f64_cols = project.manifest.f64_columns
+        kernels = set(project.kernels)
+        findings: list[Finding] = []
+        for f in project.files:
+            for func, qualname in iter_functions(f.tree):
+                if func.name in kernels:
+                    continue        # kernels compose internally
+                col_aliases, column_of = collect_aliases(func)
+                for call in kernel_calls(func, kernels):
+                    args = list(call.args) + [
+                        kw.value for kw in call.keywords]
+                    for arg in args:
+                        for sub in ast.walk(arg):
+                            if (isinstance(sub, ast.Attribute)
+                                    and sub.attr == "float64") or (
+                                    isinstance(sub, ast.Name)
+                                    and sub.id == "float64"):
+                                findings.append(Finding(
+                                    rule=self.rule, path=f.path,
+                                    line=arg.lineno,
+                                    message=(
+                                        f"float64 value flows into jit "
+                                        f"kernel {_call_name(call)!r} "
+                                        f"argument in {qualname} (f32 "
+                                        f"kernel contract)")))
+                                break
+                        for col in _uncast_f64_cols(
+                                arg, col_aliases, column_of, f64_cols):
+                            findings.append(Finding(
+                                rule=self.rule, path=f.path,
+                                line=arg.lineno,
+                                message=(
+                                    f"f64 accumulator column {col!r} "
+                                    f"passed uncast to jit kernel "
+                                    f"{_call_name(call)!r} in {qualname} "
+                                    f"— cast to float32 explicitly")))
+                for w in col_writes(func):
+                    if w.column in f64_cols and w.value is not None and \
+                            _mentions_f32(w.value):
+                        findings.append(Finding(
+                            rule=self.rule, path=f.path,
+                            line=w.node.lineno,
+                            message=(
+                                f"f32-truncated value written into f64 "
+                                f"accumulator column {w.column!r} in "
+                                f"{qualname} — breaks sequential-"
+                                f"accumulation parity")))
+        return findings

@@ -1,0 +1,70 @@
+"""Pass 5 — ``oracle-parity``.
+
+Every jit kernel in the control plane must be pinned against a
+retained scalar oracle.  Mechanically:
+
+* a jit-decorated function under ``repro/core`` or ``repro/gateway``
+  must carry ``@kernel(oracle="<dotted path>")`` (the registration
+  decorator from ``repro.core.markers`` — zero overhead at call time);
+* for every registered kernel there must exist a test module under
+  ``tests/`` that references BOTH the kernel name and its oracle (the
+  terminal symbol of the dotted path, or the class when the oracle is
+  a method) — delete a kernel's parity test and this pass fails CI.
+
+Model/serving jit code (``repro/kernels``, ``repro/serving``, ...) is
+outside the control-plane contract and exempt from registration.
+"""
+from __future__ import annotations
+
+from repro.analysis.core import Finding, Pass, Project, register_pass
+
+#: path fragments whose jit functions MUST register an oracle.
+REGISTRATION_SCOPE = ("repro/core/", "repro/gateway/")
+
+
+def _oracle_symbols(oracle: str) -> set[str]:
+    parts = oracle.split(".")
+    symbols = {parts[-1]}
+    if len(parts) > 1 and parts[-2][:1].isupper():
+        symbols.add(parts[-2])      # method oracle: the class counts too
+    return symbols
+
+
+@register_pass
+class OracleParityPass(Pass):
+    rule = "oracle-parity"
+    description = ("every control-plane jit kernel registers a scalar "
+                   "oracle and has a parity test referencing both")
+
+    def run(self, project: Project) -> list[Finding]:
+        findings: list[Finding] = []
+        for jd in project.jit_defs:
+            in_scope = any(s in jd.file.path.replace("\\", "/")
+                           for s in REGISTRATION_SCOPE)
+            if in_scope and jd.node.name not in project.kernels:
+                findings.append(Finding(
+                    rule=self.rule, path=jd.file.path, line=jd.node.lineno,
+                    message=(
+                        f"jit kernel {jd.node.name!r} is not registered "
+                        f"via @kernel(oracle=...) — every control-plane "
+                        f"kernel needs a scalar parity oracle")))
+        for decl in project.kernels.values():
+            if decl.oracle is None:
+                findings.append(Finding(
+                    rule=self.rule, path=decl.path, line=decl.line,
+                    message=(
+                        f"@kernel on {decl.name!r} has no literal "
+                        f"oracle=\"<dotted path>\" argument")))
+                continue
+            symbols = _oracle_symbols(decl.oracle)
+            covered = any(
+                decl.name in idents and (symbols & idents)
+                for idents in project.tests.values())
+            if not covered:
+                findings.append(Finding(
+                    rule=self.rule, path=decl.path, line=decl.line,
+                    message=(
+                        f"no test module references both kernel "
+                        f"{decl.name!r} and its oracle "
+                        f"{decl.oracle!r} — parity coverage missing")))
+        return findings

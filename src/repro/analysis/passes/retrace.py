@@ -1,0 +1,152 @@
+"""Pass 3 — ``retrace-hazard``.
+
+jit shapes are static: every kernel entry point must see pow2-bucketed
+widths (``bucket_width`` rows, ``quantum_width`` requests) or churn
+retraces the kernel on every membership/quantum-size change — the
+no-retrace pins in ``tests/test_resident.py`` guard the runtime side
+via ``TRACE_COUNTS`` (see ``repro.analysis.runtime.assert_no_retrace``
+for the cross-check helper); this pass guards it statically.  Three
+hazard shapes, all reported under one rule:
+
+* **unbucketed call** — a call site of a registered kernel in a
+  function that never touches a shape-bucketing provider
+  (``bucket_width`` / ``quantum_width`` / ``pad_state`` / the resident
+  store's cached views, which are pow2 by construction);
+* **static-argnames hygiene** — a kernel's ``static_argnames`` must be
+  a literal tuple of string constants, and call sites must not pass
+  unhashable literals (list/dict/set) for a static arg: each distinct
+  static value is a fresh trace, unhashables are a TypeError;
+* **mutable host capture** — a kernel (or a local function it calls)
+  reads or writes a module-level dict/list/set that the project
+  mutates: the closure captures trace-time state that silently
+  diverges from runtime (the deliberate ``TRACE_COUNTS`` trace
+  counters carry explicit waivers).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import (
+    Finding,
+    Pass,
+    Project,
+    iter_functions,
+    mentions,
+    register_pass,
+)
+from repro.analysis.passes.dtype import _call_name, kernel_calls
+
+#: functions/attributes that yield pow2-bucketed shapes: the padding
+#: helpers themselves plus the resident-store views that are pow2 by
+#: construction (store capacity is a bucket_width).
+SHAPE_PROVIDERS = {
+    "bucket_width", "quantum_width", "pad_rows", "pad_state",
+    "stack_states", "device_state", "_kernel_inputs", "_arrays",
+    "arrays_from_pool", "quantum_snapshot",
+}
+
+
+def _static_argnames(func: ast.AST):
+    """(decorator keyword node, [names] or None-if-non-literal) for a
+    jit decoration carrying static_argnames, else (None, None)."""
+    for dec in func.decorator_list:
+        if not isinstance(dec, ast.Call):
+            continue
+        for kw in dec.keywords:
+            if kw.arg != "static_argnames":
+                continue
+            v = kw.value
+            if isinstance(v, ast.Constant) and isinstance(v.value, str):
+                return kw, [v.value]
+            if isinstance(v, (ast.Tuple, ast.List)) and all(
+                    isinstance(e, ast.Constant) and isinstance(e.value, str)
+                    for e in v.elts):
+                return kw, [e.value for e in v.elts]
+            return kw, None
+    return None, None
+
+
+@register_pass
+class RetraceHazardPass(Pass):
+    rule = "retrace-hazard"
+    description = ("kernel call sites must shape-bucket; static args "
+                   "literal+hashable; no mutable host capture")
+
+    def run(self, project: Project) -> list[Finding]:
+        findings: list[Finding] = []
+        kernels = set(project.kernels)
+        statics: dict[str, list[str]] = {}
+
+        # -- kernel definitions: static_argnames + mutable capture ----
+        for jd in project.jit_defs:
+            if jd.node.name not in kernels:
+                continue
+            kw, names = _static_argnames(jd.node)
+            if kw is not None and names is None:
+                findings.append(Finding(
+                    rule=self.rule, path=jd.file.path, line=kw.value.lineno,
+                    message=(
+                        f"static_argnames of kernel {jd.node.name!r} is "
+                        f"not a literal tuple of strings — non-constant "
+                        f"static specs hide retrace behavior")))
+            statics[jd.node.name] = names or []
+
+            module_funcs = {
+                n.name: n for n, q in iter_functions(jd.file.tree)
+                if "." not in q}
+            bodies = [jd.node]
+            for sub in ast.walk(jd.node):     # one local-call hop
+                if isinstance(sub, ast.Call) and isinstance(
+                        sub.func, ast.Name) and sub.func.id in module_funcs:
+                    callee = module_funcs[sub.func.id]
+                    if callee not in bodies:
+                        bodies.append(callee)
+            seen: set[tuple[str, int]] = set()
+            for body in bodies:
+                for sub in ast.walk(body):
+                    if isinstance(sub, ast.Name) and \
+                            sub.id in project.mutable_globals:
+                        key = (sub.id, sub.lineno)
+                        if key in seen:
+                            continue
+                        seen.add(key)
+                        findings.append(Finding(
+                            rule=self.rule, path=jd.file.path,
+                            line=sub.lineno,
+                            message=(
+                                f"kernel {jd.node.name!r} (via "
+                                f"{body.name!r}) captures mutable host "
+                                f"state {sub.id!r} — executes at trace "
+                                f"time only, diverges from runtime")))
+
+        # -- call sites ------------------------------------------------
+        for f in project.files:
+            for func, qualname in iter_functions(f.tree):
+                if func.name in kernels:
+                    continue        # kernels composing kernels is fine
+                calls = kernel_calls(func, kernels)
+                if not calls:
+                    continue
+                bucketed = mentions(func, SHAPE_PROVIDERS)
+                for call in calls:
+                    kname = _call_name(call)
+                    if not bucketed:
+                        findings.append(Finding(
+                            rule=self.rule, path=f.path, line=call.lineno,
+                            message=(
+                                f"call to jit kernel {kname!r} in "
+                                f"{qualname} without bucket_width/"
+                                f"quantum_width padding — array-shape "
+                                f"churn retraces the kernel")))
+                    for kw in call.keywords:
+                        if kw.arg in statics.get(kname, ()) and isinstance(
+                                kw.value,
+                                (ast.List, ast.Dict, ast.Set)):
+                            findings.append(Finding(
+                                rule=self.rule, path=f.path,
+                                line=kw.value.lineno,
+                                message=(
+                                    f"unhashable literal passed as "
+                                    f"static arg {kw.arg!r} of kernel "
+                                    f"{kname!r} in {qualname}")))
+        return findings

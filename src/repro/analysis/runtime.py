@@ -1,0 +1,33 @@
+"""Runtime cross-check for the ``retrace-hazard`` pass.
+
+The static pass asserts that kernel call sites shape-bucket their
+arrays; the compiled truth lives in ``control_plane.TRACE_COUNTS``
+(bumped at trace time by every kernel body).  This helper turns those
+counters into an assertion so tests can sandwich a churn scenario and
+prove the static claim holds at runtime::
+
+    with assert_no_retrace("admit_quantum"):
+        for _ in range(64):
+            gateway.handle_quantum(requests(), now)
+"""
+from __future__ import annotations
+
+import contextlib
+
+
+@contextlib.contextmanager
+def assert_no_retrace(*names: str):
+    """Assert the named ``TRACE_COUNTS`` entries (default: all) do not
+    move across the block — i.e. nothing inside compiled a new kernel
+    variant.  Yields the starting counts."""
+    from repro.core.control_plane import TRACE_COUNTS
+
+    watch = names or tuple(TRACE_COUNTS)
+    before = {n: TRACE_COUNTS[n] for n in watch}
+    yield dict(before)
+    moved = {n: (before[n], TRACE_COUNTS[n]) for n in watch
+             if TRACE_COUNTS[n] != before[n]}
+    if moved:
+        raise AssertionError(
+            f"kernel retraced inside no-retrace block "
+            f"(name: before -> after): {moved}")

@@ -28,6 +28,7 @@ from typing import Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core.markers import kernel
 from repro.core.types import PriorityCoefficients, ServiceClass
 
 # class codes (row order matters: used for lookups)
@@ -198,7 +199,7 @@ def _tick_impl(state: ControlState, capacity_tps: jax.Array,
     """Tick body shared by the single-pool and vmapped entry points.
     Mirrors the scalar controller's steps 2–5: burst EWMA → priority →
     allocation → debt EWMA."""
-    TRACE_COUNTS["control_tick"] += 1          # executes at trace time only
+    TRACE_COUNTS["control_tick"] += 1          # repro: allow[retrace-hazard] -- trace-time counter: runs only while compiling, counts variants
     delta = burst_delta_rows(measured_tps, used_kv, used_conc, state)
     burst = ewma(state.burst, delta, coeff.gamma_burst)
     s1 = dataclasses.replace(state, burst=burst)
@@ -225,6 +226,7 @@ def _tick_impl(state: ControlState, capacity_tps: jax.Array,
     return dataclasses.replace(s1, debt=debt), alloc, weights
 
 
+@kernel(oracle="repro.core.control_plane.reference_tick")
 @partial(jax.jit, static_argnames=("coeff",))
 def control_tick(state: ControlState, capacity_tps: jax.Array,
                  measured_tps: jax.Array, used_kv: jax.Array,
@@ -239,6 +241,7 @@ def control_tick(state: ControlState, capacity_tps: jax.Array,
                       used_conc, demand_tps, avg_slo_ms, coeff)
 
 
+@kernel(oracle="repro.core.control_plane.reference_tick")
 @partial(jax.jit, static_argnames=("coeff",))
 def control_tick_pools(states: ControlState, capacity_tps: jax.Array,
                        measured_tps: jax.Array, used_kv: jax.Array,

@@ -59,6 +59,7 @@ import numpy as np
 
 from repro.core import control_plane
 from repro.core.autoscaler import ScaleDecision, replicas_for
+from repro.core.markers import kernel
 from repro.core.pool import TickRecord, TokenPool
 from repro.core.types import Resources, ServiceClass
 
@@ -161,6 +162,7 @@ def _plan_one(current, lo, hi, per_tps, per_kv, per_conc,
     return desired, reason.astype(jnp.int32), ewma, new_low, need
 
 
+@kernel(oracle="repro.core.autoscaler.Autoscaler.plan")
 @partial(jax.jit, static_argnames=("config",))
 def plan_fleet(current: jax.Array, lo: jax.Array, hi: jax.Array,
                per_tps: jax.Array, per_kv: jax.Array, per_conc: jax.Array,

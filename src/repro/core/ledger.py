@@ -37,6 +37,8 @@ from typing import Optional, Union
 
 import numpy as np
 
+from repro.core.markers import hot_path
+
 
 @dataclasses.dataclass
 class TokenBucket:
@@ -259,6 +261,7 @@ class Ledger:
             c["bucket_refill"][slot] = now
         return RowBucket(self._store, slot)
 
+    @hot_path
     def ensure_rows(self, slots: np.ndarray, rates: np.ndarray,
                     now: float) -> None:
         """Vectorized get-or-create over resident bucket rows (resident
@@ -293,6 +296,7 @@ class Ledger:
         dt = max(0.0, now - b.last_refill_s)
         return min(b.capacity(), b.level + dt * b.rate_tps)
 
+    @hot_path
     def peek_levels(self, rates: np.ndarray, now: float) -> np.ndarray:
         """Vectorized :meth:`peek_level` over EVERY resident row (pure
         read; resident mode only).  ``rates`` supplies the would-be
@@ -398,6 +402,7 @@ class Ledger:
     def set_rate(self, entitlement: str, rate_tps: float, now: float) -> None:
         self.ensure(entitlement, rate_tps, now).set_rate(rate_tps, now)
 
+    @hot_path
     def set_rate_rows(self, mask: np.ndarray, rates: np.ndarray,
                       now: float) -> None:
         """One accounting tick's rate updates as a single vectorized row
@@ -434,6 +439,7 @@ class Ledger:
         self._put_charge(charge)
         return True
 
+    @hot_path
     def charge_batch(self, charges: list[Charge], now: float
                      ) -> list[bool]:
         """Apply one admission quantum's charges in order: each bucket
@@ -492,6 +498,7 @@ class Ledger:
                 out.append(False)
         return out
 
+    @hot_path
     def _charge_decide_rows(self, ent_slot: np.ndarray,
                             tokens: np.ndarray, now: float) -> np.ndarray:
         """Vectorized affordability for one quantum of charges against
@@ -542,6 +549,7 @@ class Ledger:
                     ok[order[pos]] = True
         return ok
 
+    @hot_path
     def charge_rows(self, request_ids: list, ent_slot: np.ndarray,
                     tokens: np.ndarray, input_tokens: np.ndarray,
                     max_tokens: np.ndarray, now: float
@@ -594,6 +602,7 @@ class Ledger:
             return
         self.bucket(ch.entitlement).refund(ch.charged_tokens, now)
 
+    @hot_path
     def _refund_rows(self, ch_owner: np.ndarray, refunds: np.ndarray,
                      now: float) -> None:
         """Batched ``TokenBucket.refund`` over bucket rows: one refill
@@ -613,6 +622,7 @@ class Ledger:
         np.add.at(lvl, ch_owner, refunds)
         lvl[u] = np.minimum(lvl[u], cap)
 
+    @hot_path
     def settle_rows(self, slots: np.ndarray, actual_output_tokens:
                     np.ndarray, now: float) -> np.ndarray:
         """Batched :meth:`settle` over request-table rows (table mode).
@@ -648,6 +658,7 @@ class Ledger:
         c["ch_admitted"][cs] = 0.0
         return actual
 
+    @hot_path
     def cancel_rows(self, slots: np.ndarray, now: float) -> None:
         """Batched :meth:`cancel` over request-table rows (table
         mode): full refunds, vectorized.  The caller owns releasing

@@ -1,0 +1,66 @@
+"""Structural markers consumed by the static analyzer (``repro.analysis``).
+
+Two decorators, both ZERO overhead at call time — they record the
+function in a module-level registry and return it unchanged, so
+decorating a jit kernel or a hot path costs nothing per call (the
+BENCH gates see the same function object):
+
+* :func:`kernel` — registers a jit-compiled kernel together with the
+  dotted path of its retained scalar oracle.  The oracle-parity pass
+  cross-references ``tests/`` to prove every registered kernel has a
+  parity test importing both the kernel and its oracle, so a new
+  kernel without an oracle pin fails CI.
+* :func:`hot_path` — marks a function as a vectorized hot path: the
+  hot-path-scalar-loop pass forbids per-row Python ``for`` loops /
+  comprehensions over store or table row containers inside it (waive
+  with ``# repro: allow[hot-path-scalar-loop] -- <reason>``).
+
+The analyzer reads the DECORATIONS from the AST (it never imports the
+annotated modules), but the runtime registries below let tests assert
+the adoption surface and keep the decorator honest about overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["HOT_PATHS", "KERNELS", "KernelSpec", "hot_path", "kernel"]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelSpec:
+    """One registered jit kernel and the scalar oracle that pins it."""
+
+    name: str
+    module: str
+    oracle: str          # dotted path, e.g. "repro.core.control_plane.reference_tick"
+
+
+#: kernel name → spec, filled at import time by :func:`kernel`.
+KERNELS: dict[str, KernelSpec] = {}
+
+#: "module.qualname" of every function marked :func:`hot_path`.
+HOT_PATHS: dict[str, str] = {}
+
+
+def kernel(*, oracle: str):
+    """Register a jit kernel with the dotted path of its scalar parity
+    oracle.  Apply OUTSIDE ``jax.jit`` so the registered (and returned)
+    object is the compiled entry point itself::
+
+        @kernel(oracle="repro.core.control_plane.reference_tick")
+        @partial(jax.jit, static_argnames=("coeff",))
+        def control_tick(...): ...
+    """
+
+    def register(fn):
+        KERNELS[fn.__name__] = KernelSpec(
+            name=fn.__name__, module=fn.__module__, oracle=oracle)
+        return fn
+
+    return register
+
+
+def hot_path(fn):
+    """Mark ``fn`` as a vectorized hot path (see module docstring)."""
+    HOT_PATHS[f"{fn.__module__}.{fn.__qualname__}"] = fn.__module__
+    return fn

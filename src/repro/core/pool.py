@@ -54,6 +54,7 @@ import numpy as np
 from repro.core import control_plane, priority as prio
 from repro.core.control_plane import CLASS_CODES, ControlState
 from repro.core.ledger import Ledger
+from repro.core.markers import hot_path
 from repro.core.request_table import InFlight, InFlightMap, RequestTable
 from repro.core.resident import ResidentStatus, ResidentStore, _DictView
 from repro.core.types import (
@@ -409,6 +410,9 @@ class TokenPool:
         c["baseline_kv"][slot] = espec.baseline.kv_bytes
         c["baseline_conc"][slot] = espec.baseline.concurrency
         c["slo_ms"][slot] = espec.qos.slo_target_ms
+        # Both callers later write st.state (which invalidates), but the
+        # mirror contract is per-write: statics land → mirror drops.
+        self.store.mark_dirty()
 
     def add_entitlement(self, espec: EntitlementSpec, now: float = 0.0
                         ) -> EntitlementState:
@@ -602,6 +606,7 @@ class TokenPool:
         slot = self.store.slot_of[rec.entitlement]
         self.store.col["demand_window"][slot] += demand_tokens
 
+    @hot_path
     def register_admit_batch(self, recs: list[InFlight],
                              demand_tokens: dict[str, float]) -> None:
         """One scheduling quantum's admits in a single call — same
@@ -626,6 +631,7 @@ class TokenPool:
         for ent, tokens in demand_tokens.items():
             window[self.store.slot_of[ent]] += tokens
 
+    @hot_path
     def admit_rows(self, request_ids: list, owners: np.ndarray,
                    kv_bytes: np.ndarray, charged_tokens: np.ndarray,
                    now: float,
@@ -661,6 +667,7 @@ class TokenPool:
         slot = self.store.slot_of[entitlement]
         self.store.col["demand_window"][slot] += demand_tokens
 
+    @hot_path
     def register_deny_batch(self, entitlements: list,
                             demand_tokens: np.ndarray,
                             low_priority: np.ndarray) -> None:
@@ -669,6 +676,7 @@ class TokenPool:
         if not entitlements:
             return
         slot_of = self.store.slot_of
+        # repro: allow[hot-path-scalar-loop] -- C-speed fromiter gather; a name->slot dict lookup has no vectorized form
         slots = np.fromiter((slot_of[e] for e in entitlements),
                             np.int64, count=len(entitlements))
         sc = self.store.col
@@ -741,6 +749,7 @@ class TokenPool:
         return rec
 
     # -- batched request lifecycle (the vectorized row-ops) -----------------------
+    @hot_path
     def _lifecycle_rows(self, request_ids: list) -> tuple:
         """Resolve a batch of request ids to live record rows.  Returns
         ``(known mask, row slots of the known ids, entitlements list)``
@@ -767,6 +776,7 @@ class TokenPool:
                 ents[i] = name_of[o]
         return known, ks, ents
 
+    @hot_path
     def _fold_record_rows(self, ks: np.ndarray, owners: np.ndarray,
                           completed: bool) -> None:
         """Fold a batch of record-half teardowns into the store
@@ -793,6 +803,7 @@ class TokenPool:
         sc["kv_in_use"][touched] = np.maximum(
             sc["kv_in_use"][touched], 0.0)
 
+    @hot_path
     def settle_rows(self, request_ids: list, actual_output_tokens,
                     now: float) -> SettleBatch:
         """One quantum's completions as vectorized row-ops — the
@@ -830,6 +841,7 @@ class TokenPool:
         t.release_rows(ks)
         return SettleBatch(known, ents, settled, spills)
 
+    @hot_path
     def evict_rows(self, request_ids: list, now: float) -> SettleBatch:
         """One batch of evictions as vectorized row-ops — the batched
         :meth:`on_evict`: full refunds, usage decrements, no completion
@@ -845,6 +857,7 @@ class TokenPool:
         self.table.release_rows(ks)
         return SettleBatch(known, ents, settled, [])
 
+    @hot_path
     def on_complete_batch(self, request_ids: list, actual_output_tokens,
                           now: float) -> SettleBatch:
         """Batched :meth:`on_complete` — one vectorized settle per
@@ -878,6 +891,7 @@ class TokenPool:
         not contended (paper Exp. 1 phase 1: spot fills the pool)."""
         return self.pool_in_flight() > self.capacity().concurrency
 
+    @hot_path
     def _priority_rows(self, slots: np.ndarray) -> np.ndarray:
         """Vectorized Eq. 1 over entitlement rows — the same factor
         chain as ``priority.priority_weight``, term for term, reading
@@ -897,12 +911,14 @@ class TokenPool:
         debt_factor = np.maximum(1e-3, 1.0 + coeff.alpha_debt * debt)
         return w_class * slo_factor * burst_factor * debt_factor
 
+    @hot_path
     def inflight_owner_slots(self) -> np.ndarray:
         """Distinct entitlement slots owning at least one in-flight
         record, ascending — one masked pass over the request table."""
         c = self.table.col
         return np.unique(c["owner"][c["has_record"]]).astype(np.int64)
 
+    @hot_path
     def admission_threshold(self) -> float:
         """Min priority among currently-admitted requests (paper §4.3),
         evaluated at the owners' LIVE priorities: debt and burst evolve
@@ -927,16 +943,31 @@ class TokenPool:
             return 0.0
         return float(np.min(self._priority_rows(owners)))
 
+    @hot_path
     def reclaim_preemptible(self) -> list[str]:
         """Table-1 eviction: returns request ids of preemptible in-flight
         requests to terminate (KV reclaimed, pod killed).  The caller
-        (engine) performs the kill and then `on_evict`s each."""
-        victims = []
-        for rec in self.in_flight.values():
-            espec = self.entitlements.get(rec.entitlement)
-            if espec and espec.qos.service_class == ServiceClass.PREEMPTIBLE:
-                victims.append(rec.request_id)
-        return victims
+        (engine) performs the kill and then `on_evict`s each.
+
+        One vectorized pass over the request table: gather each row's
+        owner slot, mask by live record + live owner + preemptible
+        class code.  ``slot_of`` is insertion-ordered, which is the
+        same order the old per-record scan produced."""
+        t = self.table
+        if not t.slot_of:
+            return []
+        rids = list(t.slot_of.keys())
+        slots = np.fromiter(t.slot_of.values(), np.int64, count=len(rids))
+        tc = t.col
+        owners = tc["owner"][slots]
+        sc = self.store.col
+        mask = (tc["has_record"][slots]
+                & sc["alive"][owners]
+                & (sc["class_code"][owners]
+                   == CLASS_CODES[ServiceClass.PREEMPTIBLE]))
+        if not mask.any():
+            return []
+        return [rid for rid, keep in zip(rids, mask) if keep]
 
     # -- the accounting tick ------------------------------------------------------
     #
@@ -949,6 +980,7 @@ class TokenPool:
     # survive as the compact gather/scatter halves for tests and
     # callers that drive the kernel themselves.
 
+    @hot_path
     def _measure(self, now: float) -> float:
         """Step 1 (measurement): fold the accounting window into the
         measured/demand columns.  O(width) numpy, no per-row Python.
@@ -978,6 +1010,7 @@ class TokenPool:
         c["demand_window"][:] = 0.0
         return dt
 
+    @hot_path
     def _kernel_inputs(self) -> tuple:
         """f32 device views of the measurement columns (full width)."""
         c = self.store.col
@@ -1048,6 +1081,7 @@ class TokenPool:
         self.history.append(rec)
         return rec
 
+    @hot_path
     def _absorb_tick(self, now: float, new_state: ControlState,
                      alloc: np.ndarray, weights: np.ndarray,
                      adopt_device: bool = True) -> TickRecord:
@@ -1081,6 +1115,7 @@ class TokenPool:
         self.history.append(rec)
         return rec
 
+    @hot_path
     def tick(self, now: float) -> TickRecord:
         """One accounting tick on the unified control plane, straight
         over the resident arrays: vectorized window fold → ONE fused

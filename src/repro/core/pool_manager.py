@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core import control_plane
 from repro.core.control_plane import ControlState
+from repro.core.markers import hot_path
 from repro.core.pool import InFlight, TickRecord, TokenPool
 from repro.core.types import EntitlementSpec, PoolSpec
 from repro.core.virtual_node import VirtualNodeProvider
@@ -268,6 +269,7 @@ class PoolManager:
         src_st.debt = src_st.debt - delta
         return delta
 
+    @hot_path
     def on_complete_batch(self, completions: list, now: float) -> list:
         """Batched :meth:`on_complete` — ``completions`` is a list of
         ``(request_id, actual_output_tokens)`` pairs; each admitting
@@ -314,6 +316,7 @@ class PoolManager:
         return (pool.spec.name, rec) if rec is not None else None
 
     # -- the batched accounting tick --------------------------------------------
+    @hot_path
     def tick(self, now: float) -> dict[str, TickRecord]:
         """Tick EVERY pool through one fused multi-pool kernel dispatch
         per coefficient group (coefficients are a static jit argument,

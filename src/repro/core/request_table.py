@@ -47,6 +47,7 @@ import numpy as np
 
 from repro.core.control_plane import bucket_width
 from repro.core.ledger import Charge
+from repro.core.markers import hot_path
 
 
 @dataclasses.dataclass
@@ -99,6 +100,22 @@ _COLUMNS: dict[str, np.dtype] = {
 }
 
 
+def column_manifest() -> dict:
+    """Machine-readable column contract for the static analyzer (the
+    request-table twin of ``resident.column_manifest``).  The table has
+    no cached device mirror today — ``mirrored`` is empty — but the
+    moment a column is listed there, every un-invalidated host write to
+    it becomes a ``mirror-invalidation`` finding."""
+    return {
+        "store": "RequestTable",
+        "module": "repro.core.request_table",
+        "columns": {name: str(dtype) for name, dtype in _COLUMNS.items()},
+        "mirrored": [],
+        "kernel_f32": [],
+        "sanctioned_mutators": [],
+    }
+
+
 class RequestTable:
     """Structure-of-arrays store for one pool's in-flight requests."""
 
@@ -138,6 +155,7 @@ class RequestTable:
             self.rid_of[slot] = request_id
         return slot
 
+    @hot_path
     def ensure_slots(self, request_ids: list) -> np.ndarray:
         """Batched :meth:`ensure_slot`: one growth check, LIFO tail
         allocation, C-speed dict updates.  Known ids resolve to their
@@ -189,6 +207,7 @@ class RequestTable:
         self.spill_from[slot] = None
         self._free.append(slot)
 
+    @hot_path
     def release_rows(self, slots: np.ndarray) -> None:
         """Batched :meth:`release` — column zeroing is one fancy-index
         write per column; the free list extends in iteration order, so
@@ -238,6 +257,7 @@ class RequestTable:
         self.spill_from[slot] = rec.spill_from
         return slot
 
+    @hot_path
     def put_records(self, recs: list, owners: np.ndarray) -> np.ndarray:
         """One admission quantum's records as batched column writes
         (``owners`` are pre-resolved entitlement slots, aligned with
@@ -266,6 +286,7 @@ class RequestTable:
             spill[s] = r.spill_from
         return slots
 
+    @hot_path
     def admit_rows(self, request_ids: list, owners: np.ndarray,
                    kv_bytes: np.ndarray, charged_tokens: np.ndarray,
                    admitted_at: float,
@@ -347,6 +368,7 @@ class RequestTable:
         c["ch_admitted"][slot] = charge.admitted_at
         return slot
 
+    @hot_path
     def put_charges(self, charges: list, owners: np.ndarray) -> np.ndarray:
         """One admission quantum's accepted charges as batched column
         writes (``owners`` pre-resolved, aligned with ``charges``)."""
@@ -365,6 +387,7 @@ class RequestTable:
             (ch.admitted_at for ch in charges), np.float64, count=n)
         return slots
 
+    @hot_path
     def charge_rows(self, request_ids: list, owners: np.ndarray,
                     charged: np.ndarray, input_tokens: np.ndarray,
                     max_tokens: np.ndarray, admitted_at: float

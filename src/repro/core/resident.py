@@ -86,6 +86,33 @@ _COLUMNS: dict[str, np.dtype] = {
     "created_at": np.dtype(np.float64),
 }
 
+#: columns carried by the cached device ``ControlState`` mirror — any
+#: host-side write to one of these MUST be followed by ``mark_dirty()``
+#: (or adopt the kernel output via ``adopt_device``), else every later
+#: admission kernel reads stale burst/debt.  Enforced statically by the
+#: ``mirror-invalidation`` pass (``python -m repro.analysis``).
+_MIRRORED = ("class_code", "bound") + _F32_KERNEL
+
+#: qualnames allowed to write mirrored columns WITHOUT a trailing
+#: ``mark_dirty()`` — ``adopt_device`` replaces the cache wholesale.
+_SANCTIONED_MUTATORS = ("ResidentStore.adopt_device",)
+
+
+def column_manifest() -> dict:
+    """Machine-readable column contract for the static analyzer:
+    column dtypes, the device-mirrored set, the f32 kernel-facing set,
+    and the sanctioned mirror mutators.  The analyzer seeds the
+    mirror-invalidation and dtype-discipline passes from this, so a
+    new column is covered the moment it lands in ``_COLUMNS``."""
+    return {
+        "store": "ResidentStore",
+        "module": "repro.core.resident",
+        "columns": {name: str(dtype) for name, dtype in _COLUMNS.items()},
+        "mirrored": list(_MIRRORED),
+        "kernel_f32": list(_F32_KERNEL),
+        "sanctioned_mutators": list(_SANCTIONED_MUTATORS),
+    }
+
 
 class ResidentStore:
     """Structure-of-arrays store for one pool's control-plane rows."""

@@ -41,12 +41,14 @@ from repro.core.control_plane import (
     priority_rows as priority_batch,
     waterfill_rows as waterfill_batch,
 )
+from repro.core.markers import kernel
 from repro.core.types import PriorityCoefficients, ServiceClass
 
 #: Back-compat name: the array-of-rows state is the ControlState.
 PoolArrays = ControlState
 
 
+@kernel(oracle="repro.core.pool.TokenPool.tick")
 @partial(jax.jit, static_argnames=("coeff",))
 def tick_batch(arr: ControlState, capacity_tps: jax.Array,
                measured_tps: jax.Array, used_kv: jax.Array,
@@ -63,6 +65,7 @@ def tick_batch(arr: ControlState, capacity_tps: jax.Array,
                         jnp.maximum(avg_slo, 1e-9), coeff=coeff)
 
 
+@kernel(oracle="repro.core.admission.AdmissionController.decide")
 @partial(jax.jit, static_argnames=("coeff", "slack"))
 def admit_quantum(arr: ControlState,
                   bucket_level: jax.Array,       # f32 [N] tokens available
@@ -107,7 +110,7 @@ def admit_quantum(arr: ControlState,
     construction; when omitted they are recomputed here.
     """
     from repro.core.control_plane import TRACE_COUNTS
-    TRACE_COUNTS["admit_quantum"] += 1         # executes at trace time only
+    TRACE_COUNTS["admit_quantum"] += 1         # repro: allow[retrace-hazard] -- trace-time counter: runs only while compiling, counts variants
     M = req_ent.shape[0]
     if pool_resident is None:
         # legacy callers: no resident count ⇒ no free-slot escape

@@ -55,6 +55,7 @@ from repro.core.control_plane import (
     pad_state,
     quantum_width,
 )
+from repro.core.markers import hot_path
 from repro.core.pool_manager import PoolOrManager, as_manager
 from repro.core.vectorized import admit_quantum, quantum_snapshot
 
@@ -274,6 +275,7 @@ class Gateway:
             priority=first_denial.priority)
 
     # -- batched request path (the scheduling-quantum hot path) -----------------
+    @hot_path
     def handle_quantum(self, requests: Sequence[QuantumRequest],
                        now: float) -> list[GatewayResponse]:
         """Admit one scheduling quantum of requests through the fused
@@ -371,6 +373,7 @@ class Gateway:
             retry_after_s=p.best_retry, reason=p.first_reason.value,
             priority=p.first_priority)
 
+    @hot_path
     def _dispatch_admit(self, pool: TokenPool, snap, rows, tokens, kvs,
                         m: int) -> tuple[np.ndarray, np.ndarray,
                                          np.ndarray]:
@@ -408,6 +411,7 @@ class Gateway:
         return (np.asarray(admitted)[:m], np.asarray(reasons)[:m],
                 np.asarray(req_w)[:m])
 
+    @hot_path
     def _quantum_fast(self, requests: Sequence[QuantumRequest],
                       now: float) -> Optional[list[GatewayResponse]]:
         """Array-native quantum for ALL-single-leg route sets — the
@@ -472,6 +476,7 @@ class Gateway:
                                    responses, now)
         return responses
 
+    @hot_path
     def _admit_batch_fast(self, pool_name: str, entries: list,
                           requests: Sequence[QuantumRequest],
                           responses: list, now: float) -> None:
@@ -636,6 +641,7 @@ class Gateway:
             for ent, cnt in dcount.items():
                 store.incr(f"denials:{ent}", float(cnt), now)
 
+    @hot_path
     def _admit_batch(self, pool_name: str, batch: list[_Pending],
                      responses: list, now: float) -> list[_Pending]:
         """One fused kernel dispatch for one pool's leg-round group;
@@ -883,6 +889,7 @@ class Gateway:
             self.store.set(f"last_latency:{rec.entitlement}", latency_s,
                            now)
 
+    @hot_path
     def on_complete_batch(self, completions: Sequence[tuple], now: float
                           ) -> None:
         """Batched completion callback — one vectorized settle per

@@ -1,0 +1,507 @@
+"""Static analyzer (``repro.analysis``): per-pass fixture tests (one
+violating + one clean snippet each, exact rule-id and line pins),
+waiver parsing/binding, manifest round-trip, oracle-parity failure
+when a kernel's parity test is deleted, the "src is clean" self-test,
+and the zero-overhead marker registries."""
+import json
+import shutil
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Manifest, analyze, default_manifest
+from repro.analysis.core import SourceFile
+
+REPO = Path(__file__).resolve().parent.parent
+
+#: synthetic column contract — one mirrored f32 column, one f64
+#: accumulator, one sanctioned mutator.
+SYNTH = Manifest.from_exports([{
+    "store": "Store", "module": "fixture",
+    "columns": {"burst": "float32", "window_tokens": "float64"},
+    "mirrored": ["burst"],
+    "kernel_f32": ["burst"],
+    "sanctioned_mutators": ["Pool.adopt_device"],
+}])
+
+
+def line_of(src: str, needle: str) -> int:
+    """1-based line of the first line containing ``needle``."""
+    for i, ln in enumerate(src.splitlines(), start=1):
+        if needle in ln:
+            return i
+    raise AssertionError(f"{needle!r} not in fixture")
+
+
+def run(tmp_path, src: str, rules, *, name="repro/core/mod.py",
+        tests_dir=None, manifest=SYNTH):
+    src = textwrap.dedent(src)
+    p = tmp_path / name
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(src)
+    report = analyze([str(p)], manifest=manifest, tests_dir=tests_dir,
+                     rules=rules)
+    return report, src
+
+
+class TestMirrorInvalidation:
+    VIOLATING = """
+    import numpy as np
+
+    class Pool:
+        def bump(self, slot, v):
+            c = self.store.col
+            c["burst"][slot] = v
+
+        def scatter(self, slots):
+            c = self.store.col
+            np.add.at(c["burst"], slots, 1.0)
+    """
+
+    CLEAN = """
+    class Pool:
+        def bump(self, slot, v):
+            c = self.store.col
+            c["burst"][slot] = v
+            self.store.mark_dirty()
+
+        def adopt_device(self, state):
+            self.store.col["burst"][:] = 0.0
+
+        def unmirrored(self, slot, v):
+            self.store.col["window_tokens"][slot] = v
+    """
+
+    def test_violating(self, tmp_path):
+        report, src = run(tmp_path, self.VIOLATING, ["mirror-invalidation"])
+        lines = sorted(f.line for f in report.unwaived)
+        assert [f.rule for f in report.unwaived] == ["mirror-invalidation"] * 2
+        assert lines == [line_of(src, 'c["burst"][slot] = v'),
+                         line_of(src, "np.add.at")]
+
+    def test_clean(self, tmp_path):
+        # invalidated write, sanctioned mutator, unmirrored column: 0
+        report, _ = run(tmp_path, self.CLEAN, ["mirror-invalidation"])
+        assert report.unwaived == []
+
+
+class TestDtypeDiscipline:
+    VIOLATING = """
+    import numpy as np
+    from repro.core.markers import kernel
+
+    @kernel(oracle="fixture.oracle_fn")
+    @jax.jit
+    def k(x):
+        return x
+
+    class Pool:
+        def call_uncast(self):
+            c = self.store.col
+            return k(c["window_tokens"])
+
+        def call_f64(self, arr):
+            return k(np.asarray(arr, np.float64))
+
+        def truncate(self, slot, v):
+            c = self.store.col
+            c["window_tokens"][slot] = np.float32(v)
+    """
+
+    CLEAN = """
+    import numpy as np
+    from repro.core.markers import kernel
+
+    @kernel(oracle="fixture.oracle_fn")
+    @jax.jit
+    def k(x):
+        return x
+
+    class Pool:
+        def call_cast(self):
+            c = self.store.col
+            return k(c["window_tokens"].astype(np.float32))
+
+        def accumulate(self, slot, v):
+            c = self.store.col
+            c["window_tokens"][slot] += float(v)
+    """
+
+    def test_violating(self, tmp_path):
+        report, src = run(tmp_path, self.VIOLATING, ["dtype-discipline"])
+        assert {f.rule for f in report.unwaived} == {"dtype-discipline"}
+        lines = sorted(f.line for f in report.unwaived)
+        assert lines == [line_of(src, 'k(c["window_tokens"])'),
+                         line_of(src, "np.asarray(arr, np.float64)"),
+                         line_of(src, "np.float32(v)")]
+
+    def test_clean(self, tmp_path):
+        report, _ = run(tmp_path, self.CLEAN, ["dtype-discipline"])
+        assert report.unwaived == []
+
+
+class TestRetraceHazard:
+    VIOLATING = """
+    from functools import partial
+    from repro.core.markers import kernel
+
+    COUNTS = {"k": 0}
+    NAMES = ("coeff",)
+
+    @kernel(oracle="fixture.oracle_fn")
+    @partial(jax.jit, static_argnames=NAMES)
+    def k(x, coeff=None):
+        COUNTS["k"] += 1
+        return x
+
+    @kernel(oracle="fixture.oracle_fn")
+    @partial(jax.jit, static_argnames=("coeff",))
+    def k2(x, coeff=None):
+        return x
+
+    def unbucketed(arr):
+        return k(arr)
+
+    def unhashable(arr):
+        return k2(pad_rows(arr), coeff=[1, 2])
+    """
+
+    CLEAN = """
+    from functools import partial
+    from repro.core.markers import kernel
+
+    @kernel(oracle="fixture.oracle_fn")
+    @partial(jax.jit, static_argnames=("coeff",))
+    def k(x, coeff=None):
+        return x
+
+    def driver(arr, n):
+        w = bucket_width(n)
+        return k(pad_rows(arr, w), coeff=3)
+    """
+
+    def test_violating(self, tmp_path):
+        report, src = run(tmp_path, self.VIOLATING, ["retrace-hazard"])
+        msgs = {f.line: f.message for f in report.unwaived}
+        assert {f.rule for f in report.unwaived} == {"retrace-hazard"}
+        # non-literal static_argnames on the jit decoration
+        assert "not a literal" in msgs[line_of(src, "static_argnames=NAMES")]
+        # mutable host capture inside the kernel body
+        assert "mutable host state 'COUNTS'" in \
+            msgs[line_of(src, 'COUNTS["k"] += 1')]
+        # call site with no shape-bucketing provider in sight
+        assert "retraces the kernel" in msgs[line_of(src, "return k(arr)")]
+        # unhashable literal for a declared static arg
+        assert "unhashable literal" in msgs[line_of(src, "coeff=[1, 2]")]
+        assert len(report.unwaived) == 4
+
+    def test_clean(self, tmp_path):
+        report, _ = run(tmp_path, self.CLEAN, ["retrace-hazard"])
+        assert report.unwaived == []
+
+
+class TestHotPathScalarLoop:
+    VIOLATING = """
+    from repro.core.markers import hot_path
+
+    class Pool:
+        @hot_path
+        def bad(self):
+            return [r for r in self.in_flight.values()]
+    """
+
+    CLEAN = """
+    from repro.core.markers import hot_path
+
+    class Pool:
+        @hot_path
+        def ok(self, batch):
+            return [b for b in batch]
+
+        def unmarked(self):
+            return [r for r in self.in_flight.values()]
+    """
+
+    def test_violating(self, tmp_path):
+        report, src = run(tmp_path, self.VIOLATING, ["hot-path-scalar-loop"])
+        [f] = report.unwaived
+        assert f.rule == "hot-path-scalar-loop"
+        assert f.line == line_of(src, "self.in_flight.values()")
+
+    def test_clean(self, tmp_path):
+        # batch comprehension in a hot path is O(batch) — allowed; row
+        # iteration outside @hot_path is not this pass's business.
+        report, _ = run(tmp_path, self.CLEAN, ["hot-path-scalar-loop"])
+        assert report.unwaived == []
+
+
+class TestOracleParity:
+    SRC = """
+    from repro.core.markers import kernel
+
+    @jax.jit
+    def unregistered(x):
+        return x
+
+    @kernel(oracle="repro.core.scalar.Oracle.run")
+    @jax.jit
+    def fused_step(x):
+        return x
+    """
+
+    def _tests_dir(self, tmp_path, covered=True):
+        d = tmp_path / "tests"
+        d.mkdir(exist_ok=True)
+        if covered:
+            (d / "test_parity.py").write_text(
+                "from mod import fused_step\n"
+                "from scalar import Oracle\n")
+        return str(d)
+
+    def test_unregistered_jit_flagged_and_covered_kernel_clean(
+            self, tmp_path):
+        report, src = run(tmp_path, self.SRC, ["oracle-parity"],
+                          tests_dir=self._tests_dir(tmp_path))
+        [f] = report.unwaived
+        assert f.line == line_of(src, "def unregistered")
+        assert "not registered" in f.message
+
+    def test_deleting_parity_test_fails_the_pass(self, tmp_path):
+        report, src = run(tmp_path, self.SRC, ["oracle-parity"],
+                          tests_dir=self._tests_dir(tmp_path, covered=False))
+        missing = [f for f in report.unwaived
+                   if "parity coverage missing" in f.message]
+        [f] = missing
+        assert f.line == line_of(src, "def fused_step")
+        assert "'fused_step'" in f.message
+
+    def test_out_of_scope_jit_exempt(self, tmp_path):
+        report, _ = run(tmp_path, self.SRC, ["oracle-parity"],
+                        name="repro/kernels/mod.py",
+                        tests_dir=self._tests_dir(tmp_path))
+        # neither the unregistered jit nor coverage applies... except
+        # the @kernel registration is global: coverage still checked.
+        assert all("not registered" not in f.message
+                   for f in report.unwaived)
+
+    def test_non_literal_oracle_flagged(self, tmp_path):
+        src = """
+        from repro.core.markers import kernel
+
+        PATH = "a.b"
+
+        @kernel(oracle=PATH)
+        @jax.jit
+        def fused_step(x):
+            return x
+        """
+        report, src = run(tmp_path, src, ["oracle-parity"],
+                          tests_dir=self._tests_dir(tmp_path))
+        assert any("no literal oracle" in f.message
+                   for f in report.unwaived)
+
+
+class TestWaivers:
+    def test_same_line_waiver_with_reason(self, tmp_path):
+        src = """
+        class Pool:
+            def bump(self, slot, v):
+                c = self.store.col
+                c["burst"][slot] = v  # repro: allow[mirror-invalidation] -- adopted wholesale below
+        """
+        report, _ = run(tmp_path, src, ["mirror-invalidation"])
+        assert report.unwaived == []
+        [f] = report.waived
+        assert f.waive_reason == "adopted wholesale below"
+        assert report.ok(strict=True)
+
+    def test_comment_line_waiver_binds_to_next_code_line(self, tmp_path):
+        src = """
+        class Pool:
+            def bump(self, slot, v):
+                c = self.store.col
+                # repro: allow[mirror-invalidation] -- statics; caller invalidates
+                c["burst"][slot] = v
+        """
+        report, _ = run(tmp_path, src, ["mirror-invalidation"])
+        assert report.unwaived == []
+        assert len(report.waived) == 1
+
+    def test_reasonless_waiver_fails_strict_only(self, tmp_path):
+        src = """
+        class Pool:
+            def bump(self, slot, v):
+                c = self.store.col
+                c["burst"][slot] = v  # repro: allow[mirror-invalidation]
+        """
+        report, _ = run(tmp_path, src, ["mirror-invalidation"])
+        assert report.unwaived == []
+        assert report.ok(strict=False)
+        assert not report.ok(strict=True)
+        [(path, line, rules)] = report.reasonless_waivers
+        assert rules == ("mirror-invalidation",)
+
+    def test_file_scoped_waiver(self, tmp_path):
+        src = """
+        # repro: allow-file[mirror-invalidation] -- generated shim
+
+        class Pool:
+            def bump(self, slot, v):
+                self.store.col["burst"][slot] = v
+        """
+        report, _ = run(tmp_path, src, ["mirror-invalidation"])
+        assert report.unwaived == []
+        assert len(report.waived) == 1
+
+    def test_waiver_is_rule_scoped(self, tmp_path):
+        # a hot-path waiver does not excuse a mirror violation
+        src = """
+        class Pool:
+            def bump(self, slot, v):
+                c = self.store.col
+                c["burst"][slot] = v  # repro: allow[hot-path-scalar-loop] -- wrong rule
+        """
+        report, _ = run(tmp_path, src, ["mirror-invalidation"])
+        assert len(report.unwaived) == 1
+
+    def test_multi_rule_waiver_parsing(self):
+        sf = SourceFile("x.py", textwrap.dedent("""
+            a = 1  # repro: allow[rule-a, rule-b] -- both
+        """))
+        [w] = sf.waivers
+        assert w.rules == ("rule-a", "rule-b")
+        assert w.reason == "both"
+        assert not w.file_scoped
+
+
+class TestManifest:
+    def test_json_round_trip(self):
+        m = default_manifest()
+        m2 = Manifest.from_json(m.to_json())
+        assert m2.mirrored == m.mirrored
+        assert m2.kernel_f32 == m.kernel_f32
+        assert m2.f64_columns == m.f64_columns
+        assert m2.sanctioned_mutators == m.sanctioned_mutators
+
+    def test_live_contract_contents(self):
+        m = default_manifest()
+        assert "burst" in m.mirrored and "debt" in m.mirrored
+        assert "class_code" in m.mirrored
+        assert "window_tokens" in m.f64_columns
+        assert "ResidentStore.adopt_device" in m.sanctioned_mutators
+        # request-table columns merge in (priority is f64 there)
+        assert "priority" in m.f64_columns
+
+
+class TestRepoIsClean:
+    """The adoption half of the tentpole: the analyzer runs over the
+    real src/ tree with the live manifest and finds nothing unwaived,
+    and every waiver carries a reason."""
+
+    def test_src_clean_under_strict(self):
+        report = analyze([str(REPO / "src")],
+                         tests_dir=str(REPO / "tests"))
+        assert [f.format() for f in report.unwaived] == []
+        assert report.reasonless_waivers == []
+        assert report.ok(strict=True)
+        # all five passes actually ran
+        assert len(report.rules_run) == 5
+
+    def test_deleting_a_parity_test_breaks_the_build(self, tmp_path):
+        """ISSUE acceptance: remove a kernel's parity test from the
+        cross-referenced tree and oracle-parity goes red."""
+        pruned = tmp_path / "tests"
+        shutil.copytree(REPO / "tests", pruned,
+                        ignore=shutil.ignore_patterns("test_fleet.py",
+                                                      "__pycache__"))
+        report = analyze([str(REPO / "src")], tests_dir=str(pruned),
+                         rules=["oracle-parity"])
+        assert any("'plan_fleet'" in f.message for f in report.unwaived)
+
+    def test_report_json_shape(self, tmp_path):
+        report = analyze([str(REPO / "src")],
+                         tests_dir=str(REPO / "tests"))
+        blob = json.loads(json.dumps(report.to_json()))
+        assert blob["unwaived_total"] == 0
+        assert set(blob["rules"]) == {
+            "mirror-invalidation", "dtype-discipline", "retrace-hazard",
+            "hot-path-scalar-loop", "oracle-parity"}
+
+
+class TestMarkers:
+    def test_registries_populated(self):
+        # importing the control plane registers the five fused kernels
+        import repro.core.fleet       # noqa: F401
+        import repro.core.vectorized  # noqa: F401
+        from repro.core.markers import HOT_PATHS, KERNELS
+
+        assert {"control_tick", "control_tick_pools", "tick_batch",
+                "admit_quantum", "plan_fleet"} <= set(KERNELS)
+        assert KERNELS["admit_quantum"].oracle == \
+            "repro.core.admission.AdmissionController.decide"
+        assert "repro.core.pool.TokenPool.reclaim_preemptible" in HOT_PATHS
+
+    def test_decorators_are_zero_overhead(self):
+        from repro.core.markers import hot_path, kernel
+
+        def f():
+            return 7
+
+        assert hot_path(f) is f          # same object: no wrapper
+        assert kernel(oracle="a.b")(f) is f
+        assert f() == 7
+
+    def test_assert_no_retrace_runtime_crosscheck(self):
+        from repro.analysis.runtime import assert_no_retrace
+        from repro.core.control_plane import TRACE_COUNTS
+
+        with assert_no_retrace("control_tick"):
+            pass                          # nothing compiled: fine
+        before = TRACE_COUNTS["control_tick"]
+        try:
+            with pytest.raises(AssertionError, match="retraced"):
+                with assert_no_retrace("control_tick"):
+                    TRACE_COUNTS["control_tick"] += 1
+        finally:
+            TRACE_COUNTS["control_tick"] = before
+
+
+class TestCLI:
+    def test_strict_run_over_src_exits_zero_and_writes_report(
+            self, tmp_path, capsys):
+        from repro.analysis.__main__ import main
+
+        out = tmp_path / "ANALYSIS_report.json"
+        rc = main(["--strict", "--report", str(out),
+                   "--tests-dir", str(REPO / "tests"), str(REPO / "src")])
+        assert rc == 0
+        blob = json.loads(out.read_text())
+        assert blob["unwaived_total"] == 0
+
+    def test_violation_exits_nonzero(self, tmp_path, capsys):
+        from repro.analysis.__main__ import main
+
+        bad = tmp_path / "bad.py"
+        bad.write_text(textwrap.dedent("""
+            from repro.core.markers import hot_path
+
+            class Pool:
+                @hot_path
+                def bad(self):
+                    return [r for r in self.in_flight.values()]
+        """))
+        rc = main(["--rules", "hot-path-scalar-loop",
+                   "--tests-dir", str(tmp_path), str(bad)])
+        assert rc == 1
+        assert "hot-path-scalar-loop" in capsys.readouterr().out
+
+    def test_list_rules(self, capsys):
+        from repro.analysis.__main__ import main
+
+        assert main(["--list-rules"]) == 0
+        out = capsys.readouterr().out
+        for rule in ("mirror-invalidation", "dtype-discipline",
+                     "retrace-hazard", "hot-path-scalar-loop",
+                     "oracle-parity"):
+            assert rule in out

@@ -22,6 +22,8 @@ from repro.core import (
     TickRecord,
     TokenPool,
 )
+from repro.core.fleet import plan_fleet
+from repro.core.markers import KERNELS
 from repro.gateway import Gateway
 
 
@@ -50,6 +52,15 @@ def mkrecord(t, demand: dict) -> TickRecord:
 # -- parity: plan_fleet == scalar Autoscaler ---------------------------------
 
 CFG = dict(headroom=1.2, demand_ewma=0.5, cooldown_ticks=3)
+
+
+def test_plan_fleet_registered_against_scalar_oracle():
+    """The fused kernel driven throughout this module is the registered
+    ``plan_fleet`` entry point, pinned to the scalar Autoscaler oracle —
+    the oracle-parity analyzer pass keys off both symbols here."""
+    spec = KERNELS["plan_fleet"]
+    assert spec.oracle == "repro.core.autoscaler.Autoscaler.plan"
+    assert callable(plan_fleet)
 
 
 def run_parity(pool_params, demand_rounds, cfg=CFG):

@@ -255,6 +255,42 @@ class TestReclamation:
         victims = pool.reclaim_preemptible()
         assert victims == ["r1"]          # preemptible evicted, spot not
 
+    def test_preemptible_eviction_order_and_liveness(self):
+        """Vectorized reclaim parity: victims come back in admission
+        order (the old per-record scan's order) and completed records
+        drop out of the victim set."""
+        from repro.core.pool import InFlight
+        pool = mkpool(tps=400.0, conc=32.0)
+        pool.add_entitlement(ent("a", ServiceClass.PREEMPTIBLE, 0.0))
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 50.0))
+        pool.add_entitlement(ent("b", ServiceClass.PREEMPTIBLE, 0.0))
+        for rid, owner in [("r1", "a"), ("r2", "g"),
+                           ("r3", "b"), ("r4", "a")]:
+            pool.register_admit(InFlight(rid, owner, 0.1, 0.0, 64, 0.0),
+                                64.0)
+        assert pool.reclaim_preemptible() == ["r1", "r3", "r4"]
+        pool.on_evict("r3", now=1.0)
+        assert pool.reclaim_preemptible() == ["r1", "r4"]
+
+    def test_preemptible_eviction_empty_table(self):
+        pool = mkpool(tps=100.0)
+        assert pool.reclaim_preemptible() == []
+
+
+class TestMirrorContract:
+    def test_write_statics_drops_device_mirror(self):
+        """Regression (surfaced by the mirror-invalidation analyzer
+        pass): ``_write_statics`` writes kernel-facing static columns,
+        so it must drop the cached device mirror itself instead of
+        relying on both callers writing ``st.state`` afterwards."""
+        pool = mkpool(tps=100.0)
+        pool.add_entitlement(ent("g", ServiceClass.GUARANTEED, 50.0))
+        pool.store.device_state()            # build + cache the mirror
+        assert pool.store._device is not None
+        slot = pool.store.slot_of["g"]
+        pool._write_statics(slot, ent("g", ServiceClass.GUARANTEED, 60.0))
+        assert pool.store._device is None    # mirror dropped per-write
+
     def test_evict_releases_state(self):
         from repro.core.pool import InFlight
         pool = mkpool(tps=100.0)
