@@ -100,14 +100,14 @@ def vectorized_admission_rate(n_requests: int = 65536,
     return n_requests / sorted(times)[len(times) // 2]
 
 
-def _bench_gateway(n_entitlements: int):
+def _bench_gateway(n_entitlements: int, telemetry: bool = False):
     """One big pool of bound elastic tenants behind a gateway — the
     §4.3 hot path at multi-tenant scale (one key per entitlement)."""
     from repro.gateway import Gateway
     pool = TokenPool(PoolSpec(
         name="p", model="m", scaling=ScalingBounds(1, 1),
         per_replica=Resources(1e9, 1e15, 1e6)))
-    gw = Gateway(pool)
+    gw = Gateway(pool, telemetry=telemetry)
     for i in range(n_entitlements):
         pool.add_entitlement(EntitlementSpec(
             name=f"e{i}", tenant_id=f"t{i}", pool="p",
@@ -148,6 +148,51 @@ def gateway_admission_rates(n_requests: int, n_entitlements: int = 512
         best = min(best, time.perf_counter() - t0)
     quantum = n_requests / best
     return scalar, quantum
+
+
+def telemetry_overhead_rates(n_requests: int, n_entitlements: int = 512
+                             ) -> tuple[float, float]:
+    """(telemetry off, telemetry on) steady-state ``handle_quantum``
+    decisions/s for one quantum — the observability tax.  The
+    telemetry-on path adds exactly one flight-ring scatter plus one
+    counter row-op per dispatched batch, so it must stay within a few
+    percent of the bare gateway (gated at >=0.95x for 10k quanta)."""
+    from repro.gateway import QuantumRequest
+
+    mkreqs = lambda tag: [                                  # noqa: E731
+        QuantumRequest(f"k{i % n_entitlements}", f"{tag}{i}", 64, 64)
+        for i in range(n_requests)]
+    # ONE gateway, telemetry toggled per quantum: comparing two
+    # separate instances measures their memory-layout luck as much as
+    # the telemetry branch, and on a cgroup-throttled single core the
+    # run-to-run swing dwarfs a few-percent overhead.  Toggling the
+    # attribute on physically identical state isolates exactly the
+    # instrumented branch, and alternating which variant goes first in
+    # each pair cancels the depleted-quota penalty the second quantum
+    # of a pair systematically pays.  Throttle spikes (~2x, roughly
+    # every third quantum on this host) still land on whichever
+    # variant is unlucky, so instead of raw totals we drop the slowest
+    # third of quanta from EACH variant symmetrically and compare the
+    # trimmed totals — a spike inflates only the half that gets
+    # trimmed away, never the estimate.
+    gw = _bench_gateway(n_entitlements, telemetry=True)
+    tel_obj = gw.telemetry
+    gw.handle_quantum(mkreqs("warm"), now=0.0)
+    reps = 12
+    times = {False: [], True: []}
+    for rep in range(reps):
+        order = (False, True) if rep % 2 == 0 else (True, False)
+        for tel in order:
+            gw.telemetry = tel_obj if tel else None
+            reqs = mkreqs(f"q{tel}-{rep}-")
+            t0 = time.perf_counter()
+            gw.handle_quantum(reqs, now=0.0)
+            times[tel].append(time.perf_counter() - t0)
+    gw.telemetry = tel_obj
+    keep = reps - reps // 3
+    trimmed = {tel: sum(sorted(ts)[:keep]) for tel, ts in times.items()}
+    return (keep * n_requests / trimmed[False],
+            keep * n_requests / trimmed[True])
 
 
 def gateway_lifecycle_rates(n_requests: int, n_entitlements: int = 512
@@ -462,6 +507,24 @@ def main(quick: bool = False, out_json: str | None = None) -> None:
     if not quick:
         v = vectorized_admission_rate(65536, 4096)
 
+    # -- the observability tax: telemetry-on vs telemetry-off
+    # handle_quantum at each quantum size (flight ring + counter
+    # row-ops ride the existing batch dispatch)
+    telemetry_rows = []
+    for nq in quantum_sizes:
+        toff, ton = telemetry_overhead_rates(nq, n_entitlements=gw_ents)
+        ratio = ton / toff
+        telemetry_rows.append({
+            "requests_per_quantum": nq,
+            "entitlements": gw_ents,
+            "telemetry_off_dps": round(toff, 1),
+            "telemetry_on_dps": round(ton, 1),
+            "on_over_off": round(ratio, 3),
+        })
+        print(f"telemetry_off_{nq},{1e6 / toff:.2f},decisions/s={toff:.0f}")
+        print(f"telemetry_on_{nq},{1e6 / ton:.2f},decisions/s={ton:.0f}")
+        print(f"telemetry_ratio_{nq},{ratio:.3f},on/off")
+
     # -- the full request lifecycle: admit + settle per quantum (the
     # batched charge_rows/settle_rows row-ops vs per-request loops)
     lifecycle = []
@@ -491,6 +554,13 @@ def main(quick: bool = False, out_json: str | None = None) -> None:
         gates[f"quantum_ge_1x_scalar_at_{gate_n}"] = bool(ok)
         print(f"gate_quantum_ge_1x_scalar_{gate_n},"
               f"{by_n[gate_n]['speedup']:.2f},x "
+              f"({'PASS' if ok else 'FAIL'})")
+    tel_by_n = {r["requests_per_quantum"]: r for r in telemetry_rows}
+    if not quick and 10_000 in tel_by_n:
+        ok = tel_by_n[10_000]["on_over_off"] >= 0.95
+        gates["telemetry_within_5pct_at_10000"] = bool(ok)
+        print(f"gate_telemetry_within_5pct_10000,"
+              f"{tel_by_n[10_000]['on_over_off']:.3f},on/off "
               f"({'PASS' if ok else 'FAIL'})")
     if not quick and 10_000 in by_n:
         ok = by_n[10_000]["speedup"] >= 5.0
@@ -546,6 +616,7 @@ def main(quick: bool = False, out_json: str | None = None) -> None:
                 "quick": quick,
                 "admission_trajectory": trajectory,
                 "lifecycle_trajectory": lifecycle,
+                "telemetry_overhead": telemetry_rows,
                 "gates": gates,
                 "kernel": {
                     "scalar_decide_dps": round(s, 1),

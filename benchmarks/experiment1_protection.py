@@ -28,7 +28,8 @@ from repro.serving import ServingSimulator, Workload
 from repro.serving.request import RequestState, percentile
 
 
-def build(admission: bool, duration: float = 90.0) -> ServingSimulator:
+def build(admission: bool, duration: float = 90.0,
+          telemetry=None) -> ServingSimulator:
     service_time = 64.0 / (240.0 / 16.0)      # ≈4.27 s per request
     rate_for = lambda slots: slots / service_time   # noqa: E731
     workloads = [
@@ -42,7 +43,7 @@ def build(admission: bool, duration: float = 90.0) -> ServingSimulator:
     ]
     return ServingSimulator(workloads, replica_slots=16,
                             replica_tps=240.0, n_replicas=1,
-                            admission=admission)
+                            admission=admission, telemetry=telemetry)
 
 
 def phase_ttft_p99(sim: ServingSimulator, ent: str, t0: float,
@@ -91,7 +92,33 @@ def run(duration: float = 90.0) -> dict:
     return out
 
 
-def main(duration: float = 90.0) -> None:
+def write_telemetry_artifacts(out_dir: str,
+                              duration: float = 90.0) -> dict:
+    """Re-run the token-pools arm with the telemetry plane attached and
+    export what an operator would pull off the paper's platform during
+    the §5.2 overload incident: ``TELEMETRY_snapshot.json`` (the full
+    registry — admission verdict counters, bucket-level / debt gauges,
+    per-tier SLO attainment) and ``TRACE_overload.json`` (a
+    Chrome-trace / Perfetto timeline of control ticks, admission
+    quanta and the overload incident markers)."""
+    import json
+    import os
+
+    sim = build(admission=True, telemetry=True)
+    sim.run(duration)
+    tel = sim.telemetry
+    os.makedirs(out_dir, exist_ok=True)
+    snap_path = os.path.join(out_dir, "TELEMETRY_snapshot.json")
+    with open(snap_path, "w") as f:
+        json.dump(tel.snapshot(), f, indent=1, sort_keys=True)
+    trace_path = os.path.join(out_dir, "TRACE_overload.json")
+    with open(trace_path, "w") as f:
+        f.write(tel.chrome_trace())
+    return {"snapshot": snap_path, "trace": trace_path,
+            "flight_rows": len(tel.flight)}
+
+
+def main(duration: float = 90.0, artifacts_dir: str | None = None) -> None:
     res = run(duration)
     tp = res["token_pools"]["guaranteed_a_ttft_p99"]
     bl = res["baseline"]["guaranteed_a_ttft_p99"]
@@ -109,7 +136,13 @@ def main(duration: float = 90.0) -> None:
           f"recovers")
     print(f"experiment1,spot_throttle_rate_phase2,"
           f"{res['spot_throttle_rate_phase2']:.2f},,~0.47")
+    if artifacts_dir:
+        art = write_telemetry_artifacts(artifacts_dir, duration)
+        print(f"experiment1,telemetry_flight_rows,{art['flight_rows']},"
+              f"wrote {art['snapshot']} + {art['trace']}")
 
 
 if __name__ == "__main__":
-    main()
+    import os
+    main(artifacts_dir=os.path.join(os.path.dirname(__file__),
+                                    "artifacts"))

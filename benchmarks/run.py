@@ -32,7 +32,12 @@ def main(quick: bool = False) -> None:
     _section("experiment1: cross-class protection (paper Figs 2-4)")
     try:
         from benchmarks.experiment1_protection import main as e1
-        e1(duration=30.0 if quick else 90.0)
+        # TELEMETRY_snapshot.json + TRACE_overload.json: the registry
+        # snapshot and Perfetto timeline of the overload incident —
+        # uploaded as CI artifacts
+        e1(duration=30.0 if quick else 90.0,
+           artifacts_dir=os.path.join(
+               os.path.dirname(__file__), "artifacts"))
     except Exception:                              # noqa: BLE001
         failures.append("experiment1")
         traceback.print_exc()

@@ -1,0 +1,112 @@
+"""Telemetry plane tour: registry, flight recorder, SLO tracker and
+the Perfetto timeline.
+
+    PYTHONPATH=src python examples/observability.py
+
+Builds a two-pool gateway with ``telemetry=True``, pushes a few
+admission quanta of mixed guaranteed/spot traffic, then shows what an
+operator gets for free:
+
+* ``explain(request_id)`` — the flight recorder's multi-leg decision
+  narrative (why was THIS request denied, at which spill hop, against
+  what priority threshold and bucket level);
+* live P50/P99 + SLO attainment per tier from completion batches;
+* the Prometheus text exposition of the same registry arrays
+  ``pool.stats()`` reads;
+* ``TRACE_observability.json`` — a Chrome-trace timeline of control
+  ticks and admission quanta, loadable at https://ui.perfetto.dev.
+"""
+import os
+import random
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+from repro.core import (  # noqa: E402
+    EntitlementSpec, PoolManager, PoolSpec, QoS, Resources,
+    ScalingBounds, ServiceClass,
+)
+from repro.gateway import Gateway, QuantumRequest  # noqa: E402
+
+rng = random.Random(0)
+
+
+def pool(name, tps, slots):
+    return PoolSpec(name=name, model="qwen3-8b",
+                    scaling=ScalingBounds(1, 1),
+                    per_replica=Resources(tps, float(1 << 30), slots),
+                    default_max_tokens=64, bucket_window_s=1.0)
+
+
+mgr = PoolManager()
+prod = mgr.add_pool(pool("prod", tps=600.0, slots=4.0))
+burst = mgr.add_pool(pool("burst", tps=1200.0, slots=8.0))
+for pl, name, klass, tps, conc in [
+    (prod, "web@prod", ServiceClass.GUARANTEED, 400.0, 3.0),
+    (prod, "batch@prod", ServiceClass.SPOT, 60.0, 1.0),
+    (burst, "web@burst", ServiceClass.ELASTIC, 300.0, 3.0),
+    (burst, "batch@burst", ServiceClass.SPOT, 120.0, 2.0),
+]:
+    pl.add_entitlement(EntitlementSpec(
+        name=name, tenant_id=name.split("@")[0], pool=pl.spec.name,
+        qos=QoS(service_class=klass, slo_target_ms=500.0),
+        baseline=Resources(tps, 0.0, conc)))
+
+gw = Gateway(mgr, telemetry=True)          # <- the whole opt-in
+tel = gw.telemetry
+# web spills prod -> burst; batch spills the other way round
+gw.register_route("web", [("prod", "web@prod"), ("burst", "web@burst")])
+gw.register_route("batch", [("burst", "batch@burst"),
+                            ("prod", "batch@prod")])
+
+# -- drive a few admission quanta + completions + control ticks --------
+responses = {}
+for q in range(6):
+    now = 0.25 * q
+    reqs = [QuantumRequest(api_key=rng.choice(["web", "batch"]),
+                           request_id=f"q{q}-r{i}",
+                           input_tokens=rng.choice([16, 64]),
+                           max_tokens=rng.choice([32, 64]))
+            for i in range(40)]
+    for req, resp in zip(reqs, gw.handle_quantum(reqs, now=now)):
+        responses[req.request_id] = resp
+    admitted = [r for r in reqs if responses[r.request_id].status == 200]
+    gw.on_complete_batch(
+        [(r.request_id, rng.choice([24, 48]),
+          rng.uniform(0.1, 0.8)) for r in admitted[: len(admitted) // 2]],
+        now=now + 0.1)
+    for pl in (prod, burst):
+        pl.tick(now=now + 0.2)
+
+# -- 1. flight recorder: explain one admit and one deny ----------------
+admit_rid = next(r for r, v in responses.items() if v.status == 200)
+deny_rid = next(r for r, v in responses.items() if v.status != 200)
+for rid in (admit_rid, deny_rid):
+    tr = tel.flight.explain(rid)
+    print(f"explain({rid}): status={tr.status} reason={tr.reason}")
+    for leg in tr.legs:
+        print(f"  leg {leg.leg} pool={leg.pool:<6} "
+              f"verdict={leg.verdict_name:<6} "
+              f"prio={leg.priority:7.3f} vs thr={leg.threshold:7.3f} "
+              f"bucket={leg.bucket_level:8.1f} debt={leg.debt:6.1f}")
+
+# -- 2. SLO attainment live view ---------------------------------------
+print("\nSLO attainment by tier:")
+for tier, stats in tel.slo.snapshot().items():
+    if stats["completions"]:
+        print(f"  {tier:<12} n={stats['completions']:<4.0f} "
+              f"p50={stats['p50_s'] * 1e3:7.1f}ms "
+              f"p99={stats['p99_s'] * 1e3:7.1f}ms "
+              f"attainment={stats['attainment']:.0%}")
+
+# -- 3. Prometheus exposition (excerpt) --------------------------------
+print("\nPrometheus exposition (admission decision counters):")
+for line in tel.prometheus().splitlines():
+    if line.startswith("repro_admission_decisions_total{"):
+        print(f"  {line}")
+
+# -- 4. Perfetto timeline ----------------------------------------------
+out = os.path.join(os.path.dirname(__file__),
+                   "TRACE_observability.json")
+with open(out, "w") as f:
+    f.write(tel.chrome_trace())
+print(f"\nwrote {out} — open it at https://ui.perfetto.dev")

@@ -58,6 +58,8 @@ def default_manifest() -> Manifest:
     """The live contract, imported from the stores themselves so a new
     column is covered the moment it is declared."""
     from repro.core import request_table, resident
+    from repro.telemetry import flight
 
     return Manifest.from_exports(
-        [resident.column_manifest(), request_table.column_manifest()])
+        [resident.column_manifest(), request_table.column_manifest(),
+         flight.column_manifest()])

@@ -1,4 +1,4 @@
-"""The five control-plane invariant passes.  Importing this package
+"""The six control-plane invariant passes.  Importing this package
 registers them all with ``repro.analysis.core.PASS_REGISTRY``."""
 from repro.analysis.passes import (  # noqa: F401
     dtype,
@@ -6,4 +6,5 @@ from repro.analysis.passes import (  # noqa: F401
     mirror,
     parity,
     retrace,
+    telemetry,
 )

@@ -45,6 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import time
 from collections import deque
 from typing import Optional
 
@@ -291,6 +292,11 @@ class TokenPool:
         #: bounded tick history (spec.history_maxlen; None = unbounded)
         self.history: deque = deque(maxlen=spec.history_maxlen)
         self._last_tick = now
+        #: optional ``repro.telemetry.Telemetry`` sink (set by
+        #: ``Telemetry.attach_pool``); when present every tick emits a
+        #: duration sample + water-fill/debt gauges + a trace slice
+        self.telemetry = None
+        self._tick_t0 = 0.0
         #: TTL deadlines for the (rare) entitlements that declare one —
         #: expiry scans these, not the whole membership
         self._ttl_deadline: dict[str, float] = {}
@@ -865,14 +871,22 @@ class TokenPool:
         ``Gateway``; the simulators drain completions once per step)."""
         return self.settle_rows(request_ids, actual_output_tokens, now)
 
-    def stats(self) -> dict:
-        """Pool-level observability counters (request lifecycle)."""
+    def gauges(self) -> dict:
+        """Pool-level observability gauges as zero-arg callables — the
+        single source both ``stats()`` (the legacy dict view) and the
+        telemetry registry (``Telemetry.attach_pool`` binds each
+        callable as a ``repro_pool_*`` gauge series) read through."""
         return {
-            "in_flight": self.pool_in_flight(),
-            "resident": self.total_resident(),
-            "request_rows": self.table.capacity,
-            "unknown_settles": self.ledger.unknown_settles,
+            "in_flight": self.pool_in_flight,
+            "resident": self.total_resident,
+            "request_rows": lambda: self.table.capacity,
+            "unknown_settles": lambda: self.ledger.unknown_settles,
         }
+
+    def stats(self) -> dict:
+        """Pool-level observability counters (request lifecycle) —
+        a thin evaluation of :meth:`gauges`."""
+        return {name: fn() for name, fn in self.gauges().items()}
 
     # -- contention & reclamation -------------------------------------------------
     def pool_in_flight(self) -> int:
@@ -991,6 +1005,7 @@ class TokenPool:
         interval retains exactly ½, the historical fixed blend, while
         irregular tick spacing now yields a tick-rate-independent time
         constant."""
+        self._tick_t0 = time.perf_counter()
         dt = max(1e-9, now - self._last_tick)
         self._last_tick = now
         self.expire_entitlements(now)
@@ -1113,6 +1128,15 @@ class TokenPool:
             demand_tps=c["demand_tps"][idx].copy(),
         )
         self.history.append(rec)
+        if self.telemetry is not None:
+            # once per tick (O(pools), not O(requests)): duration +
+            # water-fill/debt totals into the registry + trace timeline
+            self.telemetry.on_tick(
+                self.spec.name, now,
+                time.perf_counter() - self._tick_t0,
+                alloc_total=float(alloc64[idx].sum()),
+                debt_total=float(c["debt"][idx].sum()),
+                in_flight=int(c["in_flight"][idx].sum()))
         return rec
 
     @hot_path

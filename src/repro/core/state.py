@@ -93,10 +93,30 @@ class StateStore:
 
     # -- counters -----------------------------------------------------------
     def incr(self, key: str, by: float = 1.0, now: float = 0.0) -> float:
-        cur = self.get(key, now) or 0.0
-        new = cur + by
-        self.set(key, new, now)
+        """Atomic increment with Redis INCRBY semantics: the key's TTL
+        is PRESERVED (``set`` would rewrite the entry and clear
+        ``expires_at``); an absent or expired key starts from 0 with no
+        expiry."""
+        e = self._data.get(key)
+        if e is not None and e.expires_at is not None \
+                and now >= e.expires_at:
+            del self._data[key]
+            e = None
+        if e is None:
+            new = by + 0.0
+            self._data[key] = _Entry(value=new, version=1)
+        else:
+            new = (e.value or 0.0) + by
+            e.value = new
+            e.version += 1
         return new
+
+    def incr_many(self, deltas: dict, now: float = 0.0) -> None:
+        """Batched increments — the Redis MULTI/pipeline analogue the
+        hot paths use so a quantum issues ONE store call instead of one
+        ``incr`` per distinct key."""
+        for key, by in deltas.items():
+            self.incr(key, by, now)
 
     # -- TTL -----------------------------------------------------------------
     def expire(self, key: str, ttl_s: float, now: float = 0.0) -> bool:

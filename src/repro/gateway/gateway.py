@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import time
 from itertools import chain
 from operator import attrgetter
 from typing import NamedTuple, Optional, Sequence, Union
@@ -58,6 +59,7 @@ from repro.core.control_plane import (
 from repro.core.markers import hot_path
 from repro.core.pool_manager import PoolOrManager, as_manager
 from repro.core.vectorized import admit_quantum, quantum_snapshot
+from repro.telemetry import flight as flightrec
 
 #: C-speed attribute extractors for the quantum fast path.
 _Q_RID = attrgetter("request_id")
@@ -131,7 +133,8 @@ class _Pending:
 class Gateway:
     def __init__(self, pools: PoolOrManager,
                  store: Optional[StateStore] = None,
-                 spill_policy: str = "static") -> None:
+                 spill_policy: str = "static",
+                 telemetry=None) -> None:
         from repro.core.pool_manager import SPILL_POLICIES
         if spill_policy not in SPILL_POLICIES:
             raise ValueError(f"unknown spill policy {spill_policy!r}; "
@@ -142,6 +145,17 @@ class Gateway:
         self.controllers: dict[str, AdmissionController] = {
             name: AdmissionController(pool)
             for name, pool in self.manager.pools.items()}
+        # ``telemetry=True`` builds a fresh ``repro.telemetry.Telemetry``;
+        # passing an instance shares one plane across gateways.  Off by
+        # default: the overhead gate in BENCH_admission.json pins the
+        # telemetry-on quantum path within 5% of this zero-cost default.
+        if telemetry is True:
+            from repro.telemetry import Telemetry
+            telemetry = Telemetry()
+        self.telemetry = telemetry or None
+        if self.telemetry is not None:
+            for pool in self.manager.pools.values():
+                self.telemetry.attach_pool(pool)
 
     # -- back-compat accessors -------------------------------------------------
     @property
@@ -216,8 +230,13 @@ class Gateway:
     def handle(self, api_key: str, request_id: str, input_tokens: int,
                max_tokens: Optional[int], now: float,
                kv_bytes_per_token: float = 0.0) -> GatewayResponse:
+        tel = self.telemetry
         route = self.route(api_key, now)
         if not route:
+            if tel is not None:
+                tel.record_terminal_one(
+                    now, request_id, flightrec.VERDICT_UNKNOWN_KEY,
+                    flightrec.REASON_NONE)
             return GatewayResponse(status=401, request_id=request_id,
                                    reason="unknown_key")
         legs = self.manager.route_order_indexed(
@@ -231,6 +250,17 @@ class Gateway:
                 max_tokens=max_tokens, arrival_s=now,
                 request_id=request_id,
                 kv_bytes_per_token=kv_bytes_per_token))
+            if tel is not None:
+                pool = self.manager.pool(leg.pool)
+                tel.attach_pool(pool)
+                mt = (max_tokens if max_tokens is not None
+                      else pool.spec.default_max_tokens)
+                tel.record_decision(
+                    leg.pool, now, request_id, hop, leg.entitlement,
+                    decision.admitted,
+                    flightrec.REASON_NONE if decision.reason is None
+                    else flightrec.REASON_CODES[decision.reason.value],
+                    decision.priority, float(input_tokens + mt))
             if decision.admitted:
                 self.store.incr(f"admits:{leg.entitlement}", 1.0, now)
                 if hop > 0:
@@ -264,6 +294,10 @@ class Gateway:
         else:
             self.store.incr(f"unroutable:{api_key}", 1.0, now)
         if first_denial is None:           # no live pool on the route
+            if tel is not None:
+                tel.record_terminal_one(
+                    now, request_id, flightrec.VERDICT_DENY,
+                    flightrec.REASON_POOL_UNAVAILABLE)
             return GatewayResponse(
                 status=429, request_id=request_id, retry_after_s=5.0,
                 reason=DenyReason.POOL_UNAVAILABLE.value)
@@ -313,8 +347,13 @@ class Gateway:
             return [self.handle(q.api_key, q.request_id, q.input_tokens,
                                 q.max_tokens, now,
                                 kv_bytes_per_token=q.kv_bytes_per_token)]
+        tel = self.telemetry
+        t0 = time.perf_counter() if tel is not None else 0.0
         fast = self._quantum_fast(requests, now)
         if fast is not None:
+            if tel is not None:
+                tel.on_quantum(now, len(requests),
+                               time.perf_counter() - t0)
             return fast
         responses: list[Optional[GatewayResponse]] = [None] * len(requests)
         # Routes are resolved once per distinct (key, token shape) at
@@ -322,6 +361,7 @@ class Gateway:
         # route (and its headroom ordering) is a constant.
         route_cache: dict[tuple, Optional[list]] = {}
         pending: list[_Pending] = []
+        unknown_ids: list[str] = []
         for i, q in enumerate(requests):
             ck = (q.api_key, q.input_tokens, q.max_tokens)
             legs = route_cache.get(ck, False)
@@ -336,8 +376,13 @@ class Gateway:
                 responses[i] = GatewayResponse(
                     status=401, request_id=q.request_id,
                     reason="unknown_key")
+                unknown_ids.append(q.request_id)
                 continue
             pending.append(_Pending(idx=i, req=q, legs=list(legs)))
+        if tel is not None and unknown_ids:
+            tel.record_terminal(now, unknown_ids,
+                                flightrec.VERDICT_UNKNOWN_KEY,
+                                flightrec.REASON_NONE)
 
         while pending:
             # spills from different pools (and espec-miss skips) land in
@@ -354,6 +399,8 @@ class Gateway:
             for pool_name, batch in groups.items():
                 pending.extend(self._admit_batch(pool_name, batch,
                                                  responses, now))
+        if tel is not None:
+            tel.on_quantum(now, len(requests), time.perf_counter() - t0)
         return responses
 
     def _finish_denied(self, p: _Pending, now: float) -> GatewayResponse:
@@ -364,6 +411,10 @@ class Gateway:
         else:
             self.store.incr(f"unroutable:{p.req.api_key}", 1.0, now)
         if p.first_reason is None:         # no live pool on the route
+            if self.telemetry is not None:
+                self.telemetry.record_terminal_one(
+                    now, p.req.request_id, flightrec.VERDICT_DENY,
+                    flightrec.REASON_POOL_UNAVAILABLE)
             return GatewayResponse(
                 status=429, request_id=p.req.request_id,
                 retry_after_s=5.0,
@@ -452,6 +503,10 @@ class Gateway:
             resolved.append((idxs, ck, legs))
         responses: list[Optional[GatewayResponse]] = [None] * n
         pools: dict[str, list] = {}
+        tel = self.telemetry
+        unknown_ids: list[str] = []
+        unroutable_ids: list[str] = []
+        unroutable_incr: dict[str, float] = {}
         for idxs, ck, legs in resolved:
             key, inp, mx = ck
             if legs is None:
@@ -459,18 +514,32 @@ class Gateway:
                     responses[i] = GatewayResponse(
                         status=401, request_id=requests[i].request_id,
                         reason="unknown_key")
+                    unknown_ids.append(requests[i].request_id)
             elif not legs:               # route exists, no live pool
                 for i in idxs:
                     responses[i] = GatewayResponse(
                         status=429, request_id=requests[i].request_id,
                         retry_after_s=5.0,
                         reason=DenyReason.POOL_UNAVAILABLE.value)
-                self.store.incr(f"unroutable:{key}", float(len(idxs)),
-                                now)
+                    unroutable_ids.append(requests[i].request_id)
+                unroutable_incr[f"unroutable:{key}"] = \
+                    unroutable_incr.get(f"unroutable:{key}", 0.0) \
+                    + float(len(idxs))
             else:
                 hop, leg = legs[0]
                 pools.setdefault(leg.pool, []).append(
                     (idxs, key, leg.entitlement, inp, mx, hop))
+        if unroutable_incr:
+            self.store.incr_many(unroutable_incr, now)
+        if tel is not None:
+            if unknown_ids:
+                tel.record_terminal(now, unknown_ids,
+                                    flightrec.VERDICT_UNKNOWN_KEY,
+                                    flightrec.REASON_NONE)
+            if unroutable_ids:
+                tel.record_terminal(now, unroutable_ids,
+                                    flightrec.VERDICT_DENY,
+                                    flightrec.REASON_POOL_UNAVAILABLE)
         for pool_name, entries in pools.items():
             self._admit_batch_fast(pool_name, entries, requests,
                                    responses, now)
@@ -489,6 +558,16 @@ class Gateway:
         row_of = snap.row_of
         default_mt = pool.spec.default_max_tokens
         store = self.store
+        tel = self.telemetry
+        #: StateStore deltas for the whole batch — flushed as ONE
+        #: ``incr_many`` (the Redis pipeline shape) instead of one
+        #: ``incr`` per key
+        incr_acc: dict[str, float] = {}
+        # NOT_BOUND skips never reach the kernel; their decision rows
+        # record with ent_slot -1 and zeroed state dims
+        nb_rids: list[str] = []
+        nb_hops: list[int] = []
+        nb_toks: list[float] = []
         g_ent: list[str] = []
         g_key: list[str] = []
         g_hop: list[int] = []
@@ -508,7 +587,12 @@ class Gateway:
                     responses[i] = GatewayResponse(
                         status=429, request_id=requests[i].request_id,
                         reason=DenyReason.NOT_BOUND.value)
-                store.incr(f"denials:{ent}", float(len(idxs)), now)
+                    if tel is not None:
+                        nb_rids.append(requests[i].request_id)
+                        nb_hops.append(hop)
+                        nb_toks.append(float(inp + mt))
+                incr_acc[f"denials:{ent}"] = \
+                    incr_acc.get(f"denials:{ent}", 0.0) + float(len(idxs))
                 continue
             g_ent.append(ent)
             g_key.append(key)
@@ -519,7 +603,19 @@ class Gateway:
             g_mt.append(mt)
             counts.append(len(idxs))
             idx_lists.append(idxs)
+        if tel is not None and nb_rids:
+            tel.record_decisions(
+                pool_name, now, nb_rids,
+                np.full(len(nb_rids), -1, np.int64),
+                np.asarray(nb_hops, np.int64),
+                np.zeros(len(nb_rids), bool),
+                np.full(len(nb_rids), 1, np.int16),   # NOT_BOUND
+                0.0, float(snap.running_min_priority)
+                * (1.0 - pool.spec.admission_slack),
+                np.asarray(nb_toks, np.float64))
         if not counts:
+            if incr_acc:
+                store.incr_many(incr_acc, now)
             return
         # per-group constants expand to per-request arrays by GATHER,
         # not per-group np.full loops; argsort restores arrival order
@@ -592,10 +688,13 @@ class Gateway:
             per_gid = np.bincount(gids[acc], minlength=len(g_ent))
             for gid, cnt in enumerate(per_gid.tolist()):
                 if cnt:
-                    store.incr(f"admits:{g_ent[gid]}", float(cnt), now)
+                    k_adm = f"admits:{g_ent[gid]}"
+                    incr_acc[k_adm] = incr_acc.get(k_adm, 0.0) \
+                        + float(cnt)
                     if g_hop[gid] > 0:
-                        store.incr(f"spills:{g_key[gid]}", float(cnt),
-                                   now)
+                        k_sp = f"spills:{g_key[gid]}"
+                        incr_acc[k_sp] = incr_acc.get(k_sp, 0.0) \
+                            + float(cnt)
             if acc.size == m:
                 it = zip(idx_l, rids, w_l, gid_l)
             else:
@@ -639,7 +738,26 @@ class Gateway:
                     priority=w if lp else 0.0)
             pool.register_deny_batch(deny_ents, deny_demand, deny_lp)
             for ent, cnt in dcount.items():
-                store.incr(f"denials:{ent}", float(cnt), now)
+                k_den = f"denials:{ent}"
+                incr_acc[k_den] = incr_acc.get(k_den, 0.0) + float(cnt)
+        if incr_acc:
+            store.incr_many(incr_acc, now)
+        if tel is not None:
+            # ONE flight scatter for the kernel batch, with reasons
+            # finalized the way responses were: a kernel admit the
+            # ledger rejected flips to TOKEN_BUDGET (code 3)
+            final_reasons = np.where(
+                charged, 0,
+                np.where(admitted, 3, reasons.astype(np.int64)))
+            tel.record_decisions(
+                pool_name, now, rids, rows64,
+                np.asarray(g_hop, np.int64)[gids], charged,
+                final_reasons.astype(np.int16),
+                np.asarray(req_w, np.float64),
+                float(snap.running_min_priority)
+                * (1.0 - pool.spec.admission_slack),
+                toks64,
+                levels_at=np.asarray(snap.bucket_level, np.float64))
 
     @hot_path
     def _admit_batch(self, pool_name: str, batch: list[_Pending],
@@ -655,23 +773,45 @@ class Gateway:
         # NOT_BOUND without touching pool state (the scalar pipeline's
         # espec-is-None early out) — they skip the kernel entirely.
         kernel_batch: list[_Pending] = []
+        tel = self.telemetry
+        nb_rids: list[str] = []
+        nb_hops: list[int] = []
+        nb_toks: list[float] = []
+        #: declared route position per kernel-batch entry, captured
+        #: BEFORE the denial pass advances leg_ptr
+        hops: list[int] = []
         rows, tokens, kvs, eff_max = [], [], [], []
         for p in batch:
-            leg = p.current()[1]
+            hop, leg = p.current()
             row = snap.row_of.get(leg.entitlement)
+            mt = (p.req.max_tokens if p.req.max_tokens is not None
+                  else pool.spec.default_max_tokens)
             if row is None:
+                if tel is not None:
+                    nb_rids.append(p.req.request_id)
+                    nb_hops.append(hop)
+                    nb_toks.append(float(p.req.input_tokens + mt))
                 p.note_denial(DenyReason.NOT_BOUND, 0.0, None)
                 p.leg_ptr += 1
                 spilled.append(p)
                 continue
-            mt = (p.req.max_tokens if p.req.max_tokens is not None
-                  else pool.spec.default_max_tokens)
             kernel_batch.append(p)
+            hops.append(hop)
             rows.append(row)
             tokens.append(float(p.req.input_tokens + mt))
             kvs.append(float(p.req.input_tokens + mt)
                        * p.req.kv_bytes_per_token)
             eff_max.append(mt)
+        if tel is not None and nb_rids:
+            tel.record_decisions(
+                pool_name, now, nb_rids,
+                np.full(len(nb_rids), -1, np.int64),
+                np.asarray(nb_hops, np.int64),
+                np.zeros(len(nb_rids), bool),
+                np.full(len(nb_rids), 1, np.int16),   # NOT_BOUND
+                0.0, float(snap.running_min_priority)
+                * (1.0 - pool.spec.admission_slack),
+                np.asarray(nb_toks, np.float64))
         if not kernel_batch:
             return spilled
 
@@ -767,10 +907,11 @@ class Gateway:
             spill_col = pool.table.spill_from
             for k, leg_from in spill_tags:
                 spill_col[int(slots[k])] = leg_from
-            for ent, cnt in n_admits.items():
-                self.store.incr(f"admits:{ent}", float(cnt), now)
+            incr_acc = {f"admits:{ent}": float(cnt)
+                        for ent, cnt in n_admits.items()}
             for key, cnt in n_spills.items():
-                self.store.incr(f"spills:{key}", float(cnt), now)
+                incr_acc[f"spills:{key}"] = float(cnt)
+            self.store.incr_many(incr_acc, now)
 
         # -- scatter, pass 2b: denials.  Runs AFTER the quantum's
         # admits are registered, so Retry-After hints reflect the pool
@@ -807,6 +948,20 @@ class Gateway:
                 p.leg_ptr += 1
                 spilled.append(p)
             pool.register_deny_batch(deny_ents, deny_demand, deny_lp)
+        if tel is not None:
+            final_reasons = np.where(
+                charged, 0,
+                np.where(admitted, 3, reasons.astype(np.int64)))
+            tel.record_decisions(
+                pool_name, now,
+                [p.req.request_id for p in kernel_batch],
+                np.asarray(rows, np.int64), np.asarray(hops, np.int64),
+                charged, final_reasons.astype(np.int16),
+                np.asarray(req_w, np.float64),
+                float(snap.running_min_priority)
+                * (1.0 - pool.spec.admission_slack),
+                tokens64,
+                levels_at=np.asarray(snap.bucket_level, np.float64))
         return spilled
 
     def _deny_hint(self, pool: TokenPool, pool_name: str, ent: str,
@@ -860,7 +1015,11 @@ class Gateway:
         and surface it in the gateway's stats store: per-pool replica
         gauges, scale-up/down counters, and migration counters —
         the same observability surface the admission counters use."""
+        t0 = time.perf_counter()
         plan = self.manager.plan_quantum(now, records=records)
+        if self.telemetry is not None:
+            self.telemetry.on_plan(now, plan,
+                                   time.perf_counter() - t0)
         for name, d in plan.decisions.items():
             self.store.set(f"replicas:{name}", float(d.desired), now)
         # count authorization TRANSITIONS, not convergence rounds —
@@ -883,11 +1042,14 @@ class Gateway:
         settled = self.manager.on_complete(request_id,
                                            actual_output_tokens, now)
         if settled is not None:
-            _, rec = settled
+            pool_name, rec = settled
             self.store.incr(f"tokens:{rec.entitlement}",
                             float(actual_output_tokens), now)
             self.store.set(f"last_latency:{rec.entitlement}", latency_s,
                            now)
+            if self.telemetry is not None:
+                self.telemetry.record_completions(
+                    now, [pool_name], [rec.entitlement], [latency_s])
 
     @hot_path
     def on_complete_batch(self, completions: Sequence[tuple], now: float
@@ -905,18 +1067,31 @@ class Gateway:
             return
         settled = self.manager.on_complete_batch(
             [(rid, out) for rid, out, _ in completions], now)
+        tel = self.telemetry
         tokens_incr: dict = {}
         last_lat: dict = {}
+        done_pools: list[str] = []
+        done_ents: list[str] = []
+        done_lats: list[float] = []
         for (_, out, lat), res in zip(completions, settled):
             if res is None:
                 continue
             ent = res[1]
-            tokens_incr[ent] = tokens_incr.get(ent, 0.0) + float(out)
+            tokens_incr[f"tokens:{ent}"] = \
+                tokens_incr.get(f"tokens:{ent}", 0.0) + float(out)
             last_lat[ent] = lat
-        for ent, tok in tokens_incr.items():
-            self.store.incr(f"tokens:{ent}", tok, now)
+            if tel is not None:
+                done_pools.append(res[0])
+                done_ents.append(ent)
+                done_lats.append(lat)
+        self.store.incr_many(tokens_incr, now)
         for ent, lat in last_lat.items():
             self.store.set(f"last_latency:{ent}", lat, now)
+        if tel is not None and done_ents:
+            # one SLO row-op for the whole drain (per-tier latency
+            # histograms + attainment counters)
+            tel.record_completions(now, done_pools, done_ents,
+                                   done_lats)
 
     def on_failure(self, request_id: str, now: float) -> None:
         self.manager.on_evict(request_id, now)

@@ -155,7 +155,8 @@ class ServingSimulator:
                  hedge_after_s: Optional[float] = None,
                  accounting_interval_s: float = 1.0,
                  fixed_avg_slo_ms: Optional[float] = None,
-                 bucket_window_s: float = 4.0) -> None:
+                 bucket_window_s: float = 4.0,
+                 telemetry=None) -> None:
         self.dt = dt
         self.admission = admission
         self.workloads = {w.name: w for w in workloads}
@@ -200,6 +201,14 @@ class ServingSimulator:
                 self.pool.ledger.set_rate(
                     w.name, replica_tps * charge_factor, 0.0)
 
+        # telemetry=True builds a fresh plane; an instance is shared
+        if telemetry is True:
+            from repro.telemetry import Telemetry
+            telemetry = Telemetry()
+        self.telemetry = telemetry or None
+        if self.telemetry is not None:
+            self.telemetry.attach_pool(self.pool)
+
         self.replicas = [ReplicaSim(f"r{i}", replica_slots, replica_tps)
                          for i in range(n_replicas)]
         self.waiting: list[tuple[float, float, str]] = []  # heap
@@ -233,6 +242,14 @@ class ServingSimulator:
             dec = self.controller.decide(AdmissionRequest(
                 entitlement=w.name, input_tokens=w.in_tokens,
                 max_tokens=w.out_tokens, arrival_s=now, request_id=rid))
+            if self.telemetry is not None:
+                from repro.telemetry import flight as flightrec
+                code = (flightrec.REASON_NONE if dec.reason is None
+                        else flightrec.REASON_CODES[dec.reason.value])
+                self.telemetry.record_decision(
+                    self.pool.spec.name, now, rid, 0, w.name,
+                    dec.admitted, code, dec.priority,
+                    float(w.in_tokens + w.out_tokens))
             if not dec.admitted:
                 req.state = RequestState.DENIED
                 req.deny_reason = dec.reason.value if dec.reason else None
@@ -271,6 +288,13 @@ class ServingSimulator:
             self.pool.on_complete_batch(
                 [rid for rid, _ in done],
                 [req.max_tokens for _, req in done], now + self.dt)
+            if self.telemetry is not None:
+                name = self.pool.spec.name
+                self.telemetry.record_completions(
+                    now + self.dt, [name] * len(done),
+                    [req.entitlement for _, req in done],
+                    [now + self.dt - req.arrival_s
+                     for _, req in done])
 
     def _handle_event(self, kind: str, payload: dict, now: float) -> None:
         if kind == "fail_replica":
@@ -286,9 +310,15 @@ class ServingSimulator:
                                (-req.priority, req.arrival_s, rid))
                 del replica.active[rid]
             self.pool.set_replicas(len(self._alive()))
+            if self.telemetry is not None:
+                self.telemetry.incident_start(
+                    f"replica{payload['idx']}", now)
         elif kind == "recover_replica":
             self.replicas[payload["idx"]].alive = True
             self.pool.set_replicas(len(self._alive()))
+            if self.telemetry is not None:
+                self.telemetry.incident_end(
+                    f"replica{payload['idx']}", now)
         elif kind == "retry":
             w = self.workloads[payload["workload"]]
             if now < w.end_s:
@@ -431,7 +461,8 @@ class MultiPoolSimulator:
                  autoscale: bool = False,
                  planner_config=None,
                  provision_lag_s: float = 2.0,
-                 drain_s: float = 2.0) -> None:
+                 drain_s: float = 2.0,
+                 telemetry=None) -> None:
         from repro.core import FleetPlanner, PoolManager
         from repro.gateway import Gateway
 
@@ -496,7 +527,9 @@ class MultiPoolSimulator:
         self.replica_timeline: dict[str, list[tuple[float, int]]] = {
             s.name: [] for s in sites}
 
-        self.gateway = Gateway(self.manager, spill_policy=spill_policy)
+        self.gateway = Gateway(self.manager, spill_policy=spill_policy,
+                               telemetry=telemetry)
+        self.telemetry = self.gateway.telemetry
         for w in workloads:
             if not w.pools:
                 raise ValueError(f"workload {w.name!r} names no pools")
@@ -715,11 +748,17 @@ class MultiPoolSimulator:
                                (-req.priority, req.arrival_s, rid))
                 del replica.active[rid]
             self._sync_replicas(pname)
+            if self.telemetry is not None:
+                self.telemetry.incident_start(
+                    f"{pname}/r{payload['idx']}", now)
         elif kind == "recover_replica":
             replica = self.replicas[payload["pool"]][payload["idx"]]
             replica.failed = False
             replica.alive = True
             self._sync_replicas(payload["pool"])
+            if self.telemetry is not None:
+                self.telemetry.incident_end(
+                    f"{payload['pool']}/r{payload['idx']}", now)
         elif kind == "replica_live":
             # provisioning completed (scheduled by ``_provision``);
             # ignored if the planner cancelled it or the slot failed

@@ -1,0 +1,38 @@
+"""Vectorized telemetry plane: metrics registry, admission flight
+recorder, SLO attainment tracking, and Prometheus / JSON /
+Chrome-trace exporters.
+
+Quickstart::
+
+    from repro.telemetry import Telemetry
+    gw = Gateway(pool, telemetry=True)       # or telemetry=Telemetry()
+    ...
+    print(gw.telemetry.prometheus())         # Prometheus exposition
+    print(gw.telemetry.flight.explain(rid).narrative())
+    open("trace.json", "w").write(gw.telemetry.chrome_trace())
+"""
+from repro.telemetry.export import (TraceBuffer, chrome_trace_json,
+                                    json_snapshot, prometheus_text)
+from repro.telemetry.facade import Telemetry
+from repro.telemetry.flight import (DecisionTrace, FlightRecorder,
+                                    FlightRow)
+from repro.telemetry.registry import (Counter, Gauge, Histogram,
+                                      MetricsRegistry)
+from repro.telemetry.slo import SloTracker, TIER_NAMES
+
+__all__ = [
+    "Counter",
+    "DecisionTrace",
+    "FlightRecorder",
+    "FlightRow",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "SloTracker",
+    "TIER_NAMES",
+    "Telemetry",
+    "TraceBuffer",
+    "chrome_trace_json",
+    "json_snapshot",
+    "prometheus_text",
+]

@@ -405,8 +405,8 @@ class TestRepoIsClean:
         assert [f.format() for f in report.unwaived] == []
         assert report.reasonless_waivers == []
         assert report.ok(strict=True)
-        # all five passes actually ran
-        assert len(report.rules_run) == 5
+        # all six passes actually ran
+        assert len(report.rules_run) == 6
 
     def test_deleting_a_parity_test_breaks_the_build(self, tmp_path):
         """ISSUE acceptance: remove a kernel's parity test from the
@@ -426,7 +426,8 @@ class TestRepoIsClean:
         assert blob["unwaived_total"] == 0
         assert set(blob["rules"]) == {
             "mirror-invalidation", "dtype-discipline", "retrace-hazard",
-            "hot-path-scalar-loop", "oracle-parity"}
+            "hot-path-scalar-loop", "oracle-parity",
+            "telemetry-hot-path"}
 
 
 class TestMarkers:
