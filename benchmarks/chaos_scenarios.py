@@ -1,0 +1,69 @@
+"""Chaos scenario sweep — the CI chaos job's entry point.
+
+Runs every library scenario under the full invariant registry, then
+differentially replays each one (scalar vs quantum vs fast-path), and
+writes ``benchmarks/artifacts/SCENARIO_report.json`` next to the
+BENCH_* artifacts.  Exit status is non-zero if any invariant fired or
+any replay diverged, so the CI job fails loudly.
+
+Usage::
+
+    PYTHONPATH=src python benchmarks/chaos_scenarios.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+from repro.chaos import (
+    SCENARIOS,
+    checker_catalog,
+    run_replay,
+    run_scenario,
+)
+
+ARTIFACTS = os.path.join(os.path.dirname(__file__), "artifacts")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="first two scenarios only, no replay")
+    ap.add_argument("--out", default=os.path.join(
+        ARTIFACTS, "SCENARIO_report.json"))
+    args = ap.parse_args(argv)
+
+    scenarios = SCENARIOS[:2] if args.quick else SCENARIOS
+    report = {"checkers": checker_catalog(), "scenarios": []}
+    ok = True
+    for sc in scenarios:
+        t0 = time.time()
+        rep = run_scenario(sc)
+        if not args.quick:
+            replay = run_replay(sc)
+            rep["replay_identical"] = replay.identical
+            rep["replay_mismatches"] = replay.mismatches[:20]
+            ok = ok and replay.identical
+        rep["wall_s"] = round(time.time() - t0, 2)
+        ok = ok and rep["passed"]
+        report["scenarios"].append(rep)
+        print(f"{sc.name:24s} "
+              f"{'ok' if rep['passed'] else 'VIOLATIONS'} "
+              f"replay={'ok' if rep.get('replay_identical', True) else 'DIVERGED'} "
+              f"({rep['wall_s']}s, {rep['requests_total']} requests)")
+        for v in rep["violations"][:5]:
+            print(f"    {v['checker']} @ t={v['t']:.2f}: {v['message']}")
+    report["passed"] = ok
+
+    os.makedirs(os.path.dirname(args.out), exist_ok=True)
+    with open(args.out, "w") as fh:
+        json.dump(report, fh, indent=2, default=str)
+    print(f"wrote {args.out}")
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,6 +1,7 @@
-"""The six control-plane invariant passes.  Importing this package
+"""The seven control-plane invariant passes.  Importing this package
 registers them all with ``repro.analysis.core.PASS_REGISTRY``."""
 from repro.analysis.passes import (  # noqa: F401
+    chaos_api,
     dtype,
     hotpath,
     mirror,

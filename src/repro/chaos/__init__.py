@@ -1,0 +1,54 @@
+"""Chaos scenario harness for the multi-tenant control plane.
+
+Three layers:
+
+- :mod:`repro.chaos.scenario` — the declarative, seeded scenario DSL
+  (:class:`Scenario` / :class:`ScenarioEvent`) and ``build_sim``.
+- :mod:`repro.chaos.invariants` — the global invariant-checker
+  registry run after every simulated quantum (token conservation, row
+  leaks, debt bounds, capacity closure, mirror coherence, guaranteed
+  P99).
+- :mod:`repro.chaos.replay` — differential replay: the same seeded
+  scenario under scalar / quantum / fast-path admission must be
+  decision-identical.
+
+``repro.chaos.scenarios`` ships the library of scripted incidents and
+``repro.chaos.runner`` executes a scenario under the full registry.
+"""
+from repro.chaos.invariants import (
+    CheckContext,
+    Checker,
+    Violation,
+    default_checkers,
+    make_context,
+    register_checker,
+)
+from repro.chaos.replay import (
+    REPLAY_MODES,
+    ModeTrace,
+    ReplayResult,
+    RequestOutcome,
+    capture_trace,
+    diff_traces,
+    run_replay,
+)
+from repro.chaos.runner import checker_catalog, install_checkers, run_scenario
+from repro.chaos.scenario import (
+    Scenario,
+    ScenarioEvent,
+    build_sim,
+    schedule_event,
+    seeded_backoff,
+)
+from repro.chaos.scenarios import SCENARIOS, by_name
+
+__all__ = [
+    "CheckContext", "Checker", "Violation", "default_checkers",
+    "make_context", "register_checker",
+    "REPLAY_MODES", "ModeTrace", "ReplayResult", "RequestOutcome",
+    "capture_trace", "diff_traces", "run_replay",
+    "checker_catalog", "install_checkers", "run_scenario",
+    "Scenario", "ScenarioEvent", "build_sim", "schedule_event",
+    "seeded_backoff",
+    "SCENARIOS", "by_name",
+]

@@ -116,6 +116,11 @@ class FleetPlan:
     unmet_replicas: dict[str, float]
     applied: list[RebalanceProposal] = dataclasses.field(
         default_factory=list)
+    #: proposals NOT applied because the destination pool lost its
+    #: replicas between planning and execution (same-quantum failure) —
+    #: the entitlement stays put rather than migrating into a dead pool
+    skipped: list[RebalanceProposal] = dataclasses.field(
+        default_factory=list)
     preempted: dict[str, list[str]] = dataclasses.field(
         default_factory=dict)
     #: pools whose AUTHORIZED replica count moved this round, as

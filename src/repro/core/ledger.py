@@ -120,6 +120,9 @@ class RowBucket:
     @level.setter
     def level(self, v: float) -> None:
         self._store.col["bucket_level"][self._slot] = v
+        audit = self._store.level_audit
+        if audit is not None:
+            audit.note("scalar", self._slot)
 
     @property
     def burst_window_s(self) -> float:
@@ -161,6 +164,71 @@ class RowBucket:
 Bucket = Union[TokenBucket, RowBucket]
 
 
+class LevelAudit:
+    """Opt-in conservation ledger for the ``bucket_level`` column.
+
+    Every SANCTIONED mutation site (scalar ``RowBucket.level`` writes,
+    the vectorized charge/refund/rate row-ops, bucket init/teardown,
+    store row recycling) notifies the audit after mutating, which
+    accrues the net delta into a per-kind flow total and advances the
+    per-slot ``expected`` mirror.  The conservation invariant is then
+
+        bucket_level[s] == expected[s]            (per slot)
+        Σ level − Σ baseline == Σ flows           (in aggregate)
+
+    i.e. refills − charges + refunds (+ init/teardown) fully explain
+    the observed level deltas.  Any write that bypasses the sanctioned
+    entry points (a stray ``col["bucket_level"]`` poke) shows up as
+    non-zero :meth:`drift`.  Off by default — production paths pay one
+    attribute load + ``is None`` check per mutation batch."""
+
+    def __init__(self, store) -> None:
+        self._store = store
+        self.expected = store.col["bucket_level"].astype(np.float64)
+        #: net level delta per sanctioned-flow kind ("refill",
+        #: "charge", "refund", "init", "lifecycle", "scalar")
+        self.flows: dict[str, float] = {}
+        self.baseline_total = float(self.expected.sum())
+
+    def _sync_width(self) -> None:
+        cap = self._store.capacity
+        if len(self.expected) < cap:        # store grew: pad with zeros
+            grown = np.zeros(cap, np.float64)
+            grown[:len(self.expected)] = self.expected
+            self.expected = grown
+
+    def note(self, kind: str, slots=None) -> None:
+        """Absorb the level delta at ``slots`` (an int, an index array,
+        or None for full width) as sanctioned flow of ``kind``."""
+        self._sync_width()
+        lvl = self._store.col["bucket_level"]
+        if slots is None:
+            delta = float(lvl.sum() - self.expected.sum())
+            self.expected = lvl.astype(np.float64)
+        elif np.ndim(slots) == 0:
+            delta = float(lvl[slots] - self.expected[slots])
+            self.expected[slots] = lvl[slots]
+        else:
+            u = np.unique(np.asarray(slots, np.int64))
+            delta = float(lvl[u].sum() - self.expected[u].sum())
+            self.expected[u] = lvl[u]
+        self.flows[kind] = self.flows.get(kind, 0.0) + delta
+
+    def drift(self) -> np.ndarray:
+        """Per-slot unsanctioned level movement (actual − expected);
+        all-zero when every mutation went through a sanctioned path."""
+        self._sync_width()
+        return (self._store.col["bucket_level"]
+                - self.expected[:self._store.capacity])
+
+    def conservation_gap(self) -> float:
+        """|Σ level − (Σ baseline + Σ flows)| — 0.0 when the flow
+        ledger fully explains the column."""
+        total = float(self._store.col["bucket_level"].sum())
+        return abs(total - (self.baseline_total
+                            + sum(self.flows.values())))
+
+
 @dataclasses.dataclass
 class Charge:
     """Record of an admission-time charge, so completion can refund."""
@@ -200,6 +268,27 @@ class Ledger:
         #: but counted so lifecycle bugs can't hide (surfaced through
         #: ``TokenPool.stats``)
         self.unknown_settles = 0
+
+    # -- conservation audit (opt-in) -------------------------------------------
+    @property
+    def level_audit(self) -> Optional[LevelAudit]:
+        """The active :class:`LevelAudit` (None unless enabled)."""
+        return None if self._store is None else self._store.level_audit
+
+    def enable_level_audit(self) -> LevelAudit:
+        """Start auditing sanctioned ``bucket_level`` flows (resident
+        mode only) — the chaos harness's token-conservation checker
+        reads :meth:`LevelAudit.drift` after every quantum."""
+        if self._store is None:
+            raise ValueError("level audit requires resident mode")
+        if self._store.level_audit is None:
+            self._store.level_audit = LevelAudit(self._store)
+        return self._store.level_audit
+
+    def _audit_note(self, kind: str, slots) -> None:
+        if self._store is not None \
+                and self._store.level_audit is not None:
+            self._store.level_audit.note(kind, slots)
 
     # -- charge storage (both modes) -------------------------------------------
     def _put_charge(self, charge: Charge) -> None:
@@ -259,6 +348,7 @@ class Ledger:
             c["bucket_window"][slot] = self.burst_window_s
             c["bucket_level"][slot] = rate_tps * self.burst_window_s
             c["bucket_refill"][slot] = now
+            self._audit_note("init", slot)
         return RowBucket(self._store, slot)
 
     @hot_path
@@ -280,6 +370,7 @@ class Ledger:
         c["bucket_window"][ns] = self.burst_window_s
         c["bucket_level"][ns] = r * self.burst_window_s
         c["bucket_refill"][ns] = now
+        self._audit_note("init", ns)
 
     def peek_level(self, entitlement: str, rate_tps: float,
                    now: float) -> float:
@@ -374,6 +465,7 @@ class Ledger:
             c["bucket_rate"][slot] = 0.0
             c["bucket_refill"][slot] = 0.0
             c["bucket_window"][slot] = 0.0
+            self._audit_note("lifecycle", slot)
 
     def attach(self, entitlement: str, bucket: Optional[TokenBucket],
                charges: list[Charge], now: float) -> None:
@@ -396,6 +488,7 @@ class Ledger:
                 c["bucket_window"][slot] = bucket.burst_window_s
                 c["bucket_level"][slot] = bucket.level
                 c["bucket_refill"][slot] = bucket.last_refill_s
+                self._audit_note("init", slot)
         for ch in charges:
             self._put_charge(ch)
 
@@ -431,6 +524,7 @@ class Ledger:
             fresh, self.burst_window_s, window)
         c["bucket_refill"][:] = np.where(mask, now, c["bucket_refill"])
         c["has_bucket"][:] = c["has_bucket"] | mask
+        self._audit_note("refill", None)
 
     def charge(self, charge: Charge, now: float) -> bool:
         b = self.bucket(charge.entitlement)
@@ -521,6 +615,7 @@ class Ledger:
         dt = np.maximum(0.0, now - sc["bucket_refill"][u])
         lvl[u] = np.minimum(cap, lvl[u] + dt * sc["bucket_rate"][u])
         sc["bucket_refill"][u] = now
+        self._audit_note("refill", u)
         n = len(ent_slot)
         order = np.argsort(ent_slot, kind="stable")
         s_ord = ent_slot[order]
@@ -547,6 +642,7 @@ class Ledger:
                 if lvl[s] >= t:
                     lvl[s] -= t
                     ok[order[pos]] = True
+        self._audit_note("charge", u)
         return ok
 
     @hot_path
@@ -619,8 +715,10 @@ class Ledger:
         dt = np.maximum(0.0, now - sc["bucket_refill"][u])
         lvl[u] = np.minimum(cap, lvl[u] + dt * sc["bucket_rate"][u])
         sc["bucket_refill"][u] = now
+        self._audit_note("refill", u)
         np.add.at(lvl, ch_owner, refunds)
         lvl[u] = np.minimum(lvl[u], cap)
+        self._audit_note("refund", u)
 
     @hot_path
     def settle_rows(self, slots: np.ndarray, actual_output_tokens:

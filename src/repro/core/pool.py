@@ -888,6 +888,46 @@ class TokenPool:
         a thin evaluation of :meth:`gauges`."""
         return {name: fn() for name, fn in self.gauges().items()}
 
+    def audit_snapshot(self) -> dict:
+        """Cheap public consistency snapshot for external invariant
+        checkers (the chaos harness runs these after every quantum).
+        Everything here is a masked column reduction — no per-row
+        Python, no device sync, no state mutation.
+
+        ``per_slot_in_flight`` / ``per_slot_resident`` recount the
+        request table by owner (bincount over record rows), so a
+        checker can diff them against the store's ``in_flight`` /
+        ``resident`` counters without touching private columns."""
+        sc = self.store.col
+        tc = self.table.col
+        alive = sc["alive"]
+        width = self.store.capacity
+        has_rec = tc["has_record"]
+        owners = tc["owner"][has_rec].astype(np.int64)
+        per_slot_in_flight = np.bincount(owners, minlength=width)
+        res_owners = tc["owner"][has_rec & tc["resident"]].astype(np.int64)
+        per_slot_resident = np.bincount(res_owners, minlength=width)
+        live = np.flatnonzero(alive)
+        return {
+            "store": self.store.row_accounting(),
+            "table": self.table.row_accounting(),
+            "replicas": self.replicas,
+            "authorized_replicas": self._authorized,
+            "max_replicas": self.spec.scaling.max_replicas,
+            "slots_per_replica": self.spec.per_replica.concurrency,
+            "alive_slots": live,
+            "alive_names": self.store.live_names(),
+            "in_flight_col": sc["in_flight"][live],
+            "resident_col": sc["resident"][live],
+            "kv_in_use_col": sc["kv_in_use"][live],
+            "debt_col": sc["debt"][live].astype(np.float64),
+            "class_code_col": sc["class_code"][live],
+            "per_slot_in_flight": per_slot_in_flight[live],
+            "per_slot_resident": per_slot_resident[live],
+            "mirror_drift": self.store.mirror_drift(),
+            "unknown_settles": self.ledger.unknown_settles,
+        }
+
     # -- contention & reclamation -------------------------------------------------
     def pool_in_flight(self) -> int:
         return len(self.in_flight)

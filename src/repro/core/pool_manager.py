@@ -412,7 +412,14 @@ class PoolManager:
             if needed > dpool._authorized:
                 dpool.authorize_replicas(needed)
         mig = spool.detach_entitlement(name, now)
-        return dpool.attach_entitlement(mig, now)
+        try:
+            return dpool.attach_entitlement(mig, now)
+        except Exception:
+            # roll back: re-adopt on the source so nothing is lost —
+            # bucket level, debt/burst, charges and in-flight records
+            # all travel back with the same migration payload
+            spool.attach_entitlement(mig, now)
+            raise
 
     def plan_quantum(self, now: float, records=None):
         """One closed-loop planning round for the fleet: batched tick →
@@ -449,6 +456,14 @@ class PoolManager:
                 else:
                     pool.set_replicas(d.desired)
         for prop in plan.migrations:
+            # a pool can FAIL between planning and execution (the plan
+            # and the outage land in the same quantum): migrating into
+            # a dead pool would strand the entitlement behind zero
+            # capacity, so the proposal is skipped — the planner will
+            # re-propose next round if the target recovers
+            if not self.available(prop.dst):
+                plan.skipped.append(prop)
+                continue
             self.migrate_entitlement(prop.entitlement, prop.src,
                                      prop.dst, now)
             plan.applied.append(prop)

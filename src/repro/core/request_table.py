@@ -140,6 +140,20 @@ class RequestTable:
         #: bumps whenever capacity grows (array identities change)
         self.generation = 0
 
+    # -- audit surface (public: chaos invariant checkers read these) ----------
+    def row_accounting(self) -> dict:
+        """Free-list / live-row closure snapshot: the invariant is
+        ``rows + free == capacity``, with record rows a subset of live
+        rows (``n_records`` counts record halves only)."""
+        return {
+            "capacity": self.capacity,
+            "rows": len(self.slot_of),
+            "free": len(self._free),
+            "records": self.n_records,
+            "record_rows": int(np.count_nonzero(self.col["has_record"])),
+            "charge_rows": int(np.count_nonzero(self.col["has_charge"])),
+        }
+
     # -- slot lifecycle -------------------------------------------------------
     def ensure_slot(self, request_id: str) -> int:
         """Row slot for ``request_id``, allocating one if needed.

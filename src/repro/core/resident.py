@@ -131,6 +131,10 @@ class ResidentStore:
         self._live_names: Optional[list[str]] = None
         #: bumps whenever capacity grows (array identities change)
         self.generation = 0
+        #: opt-in ``repro.core.ledger.LevelAudit`` (None = off); set by
+        #: ``Ledger.enable_level_audit`` — sanctioned bucket_level
+        #: mutators notify it so conservation checkers can diff
+        self.level_audit = None
 
     # -- slot lifecycle -------------------------------------------------------
     def __len__(self) -> int:
@@ -153,6 +157,8 @@ class ResidentStore:
         for arr in self.col.values():          # recycled slots start clean
             arr[slot] = 0
         self.col["alive"][slot] = True
+        if self.level_audit is not None:
+            self.level_audit.note("lifecycle", slot)
         self._membership_changed()
         return slot
 
@@ -165,6 +171,8 @@ class ResidentStore:
         for arr in self.col.values():
             arr[slot] = 0
         self._free.append(slot)
+        if self.level_audit is not None:
+            self.level_audit.note("lifecycle", slot)
         self._membership_changed()
         return slot
 
@@ -190,6 +198,34 @@ class ResidentStore:
         """A kernel-facing column was written host-side: drop the
         cached device mirror (rebuilt lazily from the numpy columns)."""
         self._device = None
+
+    # -- audit surface (public: chaos invariant checkers read these) ----------
+    def row_accounting(self) -> dict:
+        """Free-list / live-row closure snapshot: the invariant is
+        ``live + free == capacity`` with the ``alive`` column agreeing
+        on both counts."""
+        return {
+            "capacity": self.capacity,
+            "live": len(self.slot_of),
+            "free": len(self._free),
+            "alive_rows": int(np.count_nonzero(self.col["alive"])),
+        }
+
+    def mirror_drift(self) -> dict[str, float]:
+        """Max |device − host| per mirrored column, for the cached
+        device mirror ONLY (empty dict when no mirror is cached — an
+        invalidated mirror is coherent by definition).  Non-zero means
+        a host write to a mirrored column skipped ``mark_dirty()``."""
+        if self._device is None:
+            return {}
+        dev = self._device
+        out: dict[str, float] = {}
+        for name in _MIRRORED:
+            host = self.col[name]
+            mirror = np.asarray(getattr(dev, name))
+            out[name] = float(np.max(np.abs(
+                mirror.astype(np.float64) - host.astype(np.float64))))
+        return out
 
     # -- live-row views (cached until membership changes) ---------------------
     def live_slots(self) -> np.ndarray:

@@ -156,6 +156,12 @@ class Gateway:
         if self.telemetry is not None:
             for pool in self.manager.pools.values():
                 self.telemetry.attach_pool(pool)
+        #: public knob: False forces ``handle_quantum`` through the
+        #: generic leg-round loop even when the single-leg fast path
+        #: would apply — the chaos differential-replay harness runs the
+        #: same seeded scenario with this on/off (and against the
+        #: scalar ``handle``) to pin all three decision traces equal
+        self.quantum_fast_enabled: bool = True
 
     # -- back-compat accessors -------------------------------------------------
     @property
@@ -349,7 +355,8 @@ class Gateway:
                                 kv_bytes_per_token=q.kv_bytes_per_token)]
         tel = self.telemetry
         t0 = time.perf_counter() if tel is not None else 0.0
-        fast = self._quantum_fast(requests, now)
+        fast = (self._quantum_fast(requests, now)
+                if self.quantum_fast_enabled else None)
         if fast is not None:
             if tel is not None:
                 tel.on_quantum(now, len(requests),

@@ -169,6 +169,35 @@ class InferenceEngine:
                 lane.remaining = 0
         return produced
 
+    def evict(self, request_id: str, now: float) -> bool:
+        """Mid-stream eviction (preemption / client disconnect): free
+        the lane and its KV pages, cancel the admission charge through
+        the gateway failure path.  Queued-but-unstarted requests are
+        evicted too (no KV to reclaim).  Returns False for unknown or
+        already-terminal ids — nothing is freed twice."""
+        for lane in self.lanes:
+            if lane.request is not None \
+                    and lane.request.request_id == request_id:
+                req = lane.request
+                req.state = RequestState.EVICTED
+                req.finished_s = now
+                self.finished.append(req)
+                self.kv_pages.free(request_id)
+                if self.gateway is not None:
+                    self.gateway.on_failure(request_id, now)
+                lane.request = None
+                lane.remaining = 0
+                return True
+        for i, req in enumerate(self.queue):
+            if req.request_id == request_id:
+                req.state = RequestState.EVICTED
+                req.finished_s = now
+                self.finished.append(self.queue.pop(i))
+                if self.gateway is not None:
+                    self.gateway.on_failure(request_id, now)
+                return True
+        return False
+
     def run_until_drained(self, now: float = 0.0,
                           time_per_step: float = 0.05,
                           max_steps: int = 10_000) -> float:

@@ -22,6 +22,11 @@ class OutOfPages(RuntimeError):
     pass
 
 
+class DoubleFree(RuntimeError):
+    """A sequence's pages were returned twice — the second free would
+    corrupt the free list (pages handed to two owners)."""
+
+
 @dataclasses.dataclass
 class SequenceAlloc:
     seq_id: str
@@ -39,6 +44,14 @@ class KVBlockManager:
         self.bytes_per_token = bytes_per_token
         self._free: list[int] = list(range(total_pages - 1, -1, -1))
         self._seqs: dict[str, SequenceAlloc] = {}
+        #: seq ids already freed once — a second ``free`` is rejected
+        #: (cleared when the id is legitimately re-allocated)
+        self._freed: set[str] = set()
+        #: observability: rejected double frees / frees of ids never
+        #: allocated (both are lifecycle bugs upstream; neither touches
+        #: the free list)
+        self.double_free_rejections = 0
+        self.unknown_frees = 0
 
     # -- capacity queries ------------------------------------------------------
     @property
@@ -68,6 +81,7 @@ class KVBlockManager:
         alloc = SequenceAlloc(seq_id=seq_id, pages=pages,
                               tokens_used=tokens)
         self._seqs[seq_id] = alloc
+        self._freed.discard(seq_id)
         return alloc
 
     def extend(self, seq_id: str, new_total_tokens: int) -> SequenceAlloc:
@@ -82,11 +96,23 @@ class KVBlockManager:
         alloc.tokens_used = new_total_tokens
         return alloc
 
-    def free(self, seq_id: str) -> int:
+    def free(self, seq_id: str, strict: bool = False) -> int:
+        """Return a sequence's pages to the free list.  A double free
+        is REJECTED — counted, raised under ``strict`` — because
+        re-extending the free list would hand the same pages to two
+        owners.  Freeing an id that was never allocated stays a
+        counted no-op (late duplicate completions)."""
         alloc = self._seqs.pop(seq_id, None)
         if alloc is None:
+            if seq_id in self._freed:
+                self.double_free_rejections += 1
+                if strict:
+                    raise DoubleFree(seq_id)
+            else:
+                self.unknown_frees += 1
             return 0
         self._free.extend(reversed(alloc.pages))
+        self._freed.add(seq_id)
         return len(alloc.pages)
 
     def block_table(self, seq_id: str, max_pages: int) -> np.ndarray:

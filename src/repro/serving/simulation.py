@@ -284,6 +284,11 @@ class ServingSimulator:
         done: list[tuple[str, Request]] = []
         advance_replicas(self._alive(), self.requests, self.dt, now,
                          lambda rid, req: done.append((rid, req)))
+        # settle in (finished_s, rid) order — collection order follows
+        # dict iteration over ``replica.active``, which tracks dispatch
+        # history; sorting pins the settle sequence regardless of how
+        # requests were interleaved onto replicas
+        done.sort(key=lambda p: (p[1].finished_s, p[0]))
         if done:
             self.pool.on_complete_batch(
                 [rid for rid, _ in done],
@@ -564,11 +569,21 @@ class MultiPoolSimulator:
             w.name: w.start_s for w in workloads}
         self.tick_records: dict[str, list] = {s.name: [] for s in sites}
         self._step_batch: list = []     # quantum mode: this step's batch
+        #: callables ``hook(sim, now)`` run after EVERY completed step
+        #: (post-settle, post-tick) — the chaos harness registers its
+        #: invariant checkers here; the simulator stays policy-free
+        self.step_hooks: list = []
+        #: optional override ``fn(workload, req, attempt, resp) -> s``
+        #: replacing the Retry-After-driven client backoff (see
+        #: ``_apply_response``)
+        self.retry_backoff = None
 
     # -- event API -----------------------------------------------------------
     def at(self, t: float, kind: str, **payload) -> None:
         """Schedule an external event: ``fail_replica`` /
-        ``recover_replica`` (pool=<name>, idx=<replica>)."""
+        ``recover_replica`` (pool=<name>, idx=<replica>), or the
+        generic ``call`` (fn=<callable(sim, now)>) used by scripted
+        scenarios to inject arbitrary control-plane actions."""
         heapq.heappush(self._events, (t, self._eid, kind, payload))
         self._eid += 1
 
@@ -678,7 +693,17 @@ class MultiPoolSimulator:
             req.deny_reason = resp.reason
             req.retry_after_s = resp.retry_after_s
             if attempt < w.max_retries:
-                backoff = min(resp.retry_after_s or 1.0, w.retry_cap_s)
+                if self.retry_backoff is not None:
+                    # scenario-controlled backoff: Retry-After hints
+                    # legitimately differ between the scalar and
+                    # quantum admission paths, so differential replay
+                    # substitutes a deterministic function of
+                    # (workload, attempt) to keep retry timelines —
+                    # and therefore decision traces — comparable
+                    backoff = self.retry_backoff(w, req, attempt, resp)
+                else:
+                    backoff = min(resp.retry_after_s or 1.0,
+                                  w.retry_cap_s)
                 self.at(now + max(backoff, self.dt), "retry",
                         workload=w.name, attempt=attempt + 1)
             return
@@ -726,6 +751,10 @@ class MultiPoolSimulator:
         for pname in self.replicas:
             advance_replicas(self._alive(pname), self.requests, self.dt,
                              now, lambda rid, req: done.append((rid, req)))
+        # settle in (finished_s, rid) order — collection order follows
+        # per-replica dict iteration and the pool map; sorting pins the
+        # settle (and retry re-submission) sequence deterministically
+        done.sort(key=lambda p: (p[1].finished_s, p[0]))
         if done:
             self.gateway.on_complete_batch(
                 [(rid, req.max_tokens, req.finished_s - req.arrival_s)
@@ -785,6 +814,11 @@ class MultiPoolSimulator:
                     self._step_batch.append((w, payload["attempt"]))
                 else:
                     self._arrive(w, now, attempt=payload["attempt"])
+        elif kind == "call":
+            # scripted-scenario escape hatch: run an arbitrary action
+            # against the simulator at a scheduled instant (entitlement
+            # churn, migrations, rate reshaping, ...)
+            payload["fn"](self, now)
         else:
             raise ValueError(kind)
 
@@ -830,6 +864,8 @@ class MultiPoolSimulator:
                     self.replica_timeline[pname].append(
                         (now, self.manager.pool(pname).replicas))
                 next_tick += interval
+            for hook in self.step_hooks:
+                hook(self, now)
             now += self.dt
         return self.summary()
 

@@ -113,6 +113,8 @@ class Telemetry:
         self._tier_cache: dict[tuple, tuple[int, float]] = {}
         #: open incident windows: key → start clock
         self._open_incidents: dict[str, float] = {}
+        #: closed incident windows: (key, start, end) in close order
+        self._closed_incidents: list[tuple[str, float, float]] = []
 
     # -- attachment --------------------------------------------------------
     def attach_pool(self, pool) -> None:
@@ -333,8 +335,19 @@ class Telemetry:
         start = self._open_incidents.pop(key, None)
         if start is None:
             return
+        self._closed_incidents.append((key, start, now))
         self.trace.complete(f"incident:{key}", "incidents", start,
                             now - start)
+
+    def incident_windows(self) -> list[tuple[str, float, Optional[float]]]:
+        """All incident windows as ``(key, start, end)`` — closed ones
+        first (in close order), then still-open ones with ``end=None``.
+        Scenario assertions (the chaos harness) read THIS rather than
+        the trace buffer."""
+        out: list[tuple[str, float, Optional[float]]] = list(
+            self._closed_incidents)
+        out.extend((k, s, None) for k, s in self._open_incidents.items())
+        return out
 
     # -- export ------------------------------------------------------------
     def prometheus(self) -> str:

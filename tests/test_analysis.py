@@ -405,8 +405,8 @@ class TestRepoIsClean:
         assert [f.format() for f in report.unwaived] == []
         assert report.reasonless_waivers == []
         assert report.ok(strict=True)
-        # all six passes actually ran
-        assert len(report.rules_run) == 6
+        # all seven passes actually ran
+        assert len(report.rules_run) == 7
 
     def test_deleting_a_parity_test_breaks_the_build(self, tmp_path):
         """ISSUE acceptance: remove a kernel's parity test from the
@@ -427,7 +427,7 @@ class TestRepoIsClean:
         assert set(blob["rules"]) == {
             "mirror-invalidation", "dtype-discipline", "retrace-hazard",
             "hot-path-scalar-loop", "oracle-parity",
-            "telemetry-hot-path"}
+            "telemetry-hot-path", "chaos-public-api"}
 
 
 class TestMarkers:

@@ -1,0 +1,157 @@
+"""Engine + KV manager under failure: page reclamation after a
+mid-stream eviction, double-free rejection, and steps with zero live
+requests (the chaos PR's serving-layer satellite)."""
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core import (
+    EntitlementSpec,
+    PoolSpec,
+    QoS,
+    Resources,
+    ScalingBounds,
+    ServiceClass,
+    TokenPool,
+)
+from repro.gateway import Gateway
+from repro.models import build_model
+from repro.serving import InferenceEngine, Request, RequestState
+from repro.serving.kv_manager import DoubleFree, KVBlockManager
+
+
+@pytest.fixture(scope="module")
+def served_model():
+    cfg = get_config("tinyllama-1.1b").reduced(num_layers=2,
+                                               vocab_size=256)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    return cfg, model, params
+
+
+def mkgateway(slots=4, tps=1e4):
+    spec = PoolSpec(name="p", model="m", scaling=ScalingBounds(1, 1),
+                    per_replica=Resources(tps, float(1 << 30),
+                                          float(slots)),
+                    default_max_tokens=8)
+    pool = TokenPool(spec)
+    pool.add_entitlement(EntitlementSpec(
+        name="prod", tenant_id="t1", pool="p",
+        qos=QoS(service_class=ServiceClass.GUARANTEED,
+                slo_target_ms=200),
+        baseline=Resources(tps / 2, 0.0, float(slots))))
+    gw = Gateway(pool)
+    gw.register_key("key-prod", "prod")
+    return gw
+
+
+def mkreq(rid: str, max_tokens: int = 6) -> Request:
+    return Request(request_id=rid, entitlement="prod",
+                   prompt_tokens=[3, 5, 7], max_tokens=max_tokens,
+                   arrival_s=0.0, api_key="key-prod")
+
+
+class TestKVBlockManagerFailurePaths:
+    def test_double_free_rejected_and_counted(self):
+        kv = KVBlockManager(total_pages=8, page_tokens=16)
+        kv.allocate("s1", 40)                 # 3 pages
+        assert kv.used_pages == 3
+        assert kv.free("s1") == 3
+        assert kv.used_pages == 0
+        # second free: counted no-op (pages must NOT return twice)
+        assert kv.free("s1") == 0
+        assert kv.double_free_rejections == 1
+        assert kv.used_pages == 0
+        with pytest.raises(DoubleFree):
+            kv.free("s1", strict=True)
+        assert kv.double_free_rejections == 2
+        assert kv.free_pages == kv.total_pages
+
+    def test_unknown_free_is_counted_noop(self):
+        kv = KVBlockManager(total_pages=4, page_tokens=16)
+        assert kv.free("never-seen") == 0
+        assert kv.unknown_frees == 1
+        assert kv.double_free_rejections == 0
+        assert kv.free_pages == 4
+
+    def test_reallocate_clears_double_free_state(self):
+        kv = KVBlockManager(total_pages=4, page_tokens=16)
+        kv.allocate("s1", 16)
+        kv.free("s1")
+        kv.allocate("s1", 16)                 # legitimate reuse
+        assert kv.free("s1", strict=True) == 1   # not a double free
+        assert kv.double_free_rejections == 0
+
+    def test_leak_invariant_closed_under_churn(self):
+        kv = KVBlockManager(total_pages=16, page_tokens=16)
+        for i in range(5):
+            kv.allocate(f"s{i}", 16 * (i + 1))
+        for i in (1, 3):
+            kv.free(f"s{i}")
+        kv.extend("s4", 16 * 5 + 1)
+        assert kv.used_pages + kv.free_pages == kv.total_pages
+
+
+class TestEngineFailurePaths:
+    def test_step_with_zero_live_requests(self, served_model):
+        cfg, model, params = served_model
+        eng = InferenceEngine(model, params, slots=2, max_seq=64)
+        assert eng.step(now=0.0) == 0
+        assert eng.kv_pages.used_pages == 0
+
+    def test_mid_stream_eviction_reclaims_kv(self, served_model):
+        cfg, model, params = served_model
+        gw = mkgateway(slots=2)
+        eng = InferenceEngine(model, params, slots=2, max_seq=64,
+                              gateway=gw)
+        a, b = mkreq("a"), mkreq("b")
+        assert eng.submit(a, now=0.0) and eng.submit(b, now=0.0)
+        eng.step(now=0.0)                     # both decoding
+        assert eng.kv_pages.used_pages > 0
+        assert gw.pool.pool_in_flight() == 2
+
+        assert eng.evict("a", now=0.1)
+        assert a.state == RequestState.EVICTED
+        assert a in eng.finished
+        # the lane's pages went back and the admission charge was
+        # cancelled through the gateway failure path
+        assert "a" not in eng.kv_pages.sequences()
+        assert gw.pool.pool_in_flight() == 1
+        # freeing the evicted lane again is a rejected double free
+        assert eng.kv_pages.free("a") == 0
+        assert eng.kv_pages.double_free_rejections == 1
+
+        # the survivor drains normally and every page comes home
+        eng.run_until_drained(now=0.2)
+        assert b.state == RequestState.FINISHED
+        assert eng.kv_pages.used_pages == 0
+        assert gw.pool.pool_in_flight() == 0
+
+    def test_evict_queued_unstarted_request(self, served_model):
+        cfg, model, params = served_model
+        gw = mkgateway(slots=4)
+        eng = InferenceEngine(model, params, slots=1, max_seq=64,
+                              gateway=gw)
+        first, queued = mkreq("first"), mkreq("queued")
+        eng.submit(first, now=0.0)
+        eng.submit(queued, now=0.0)
+        eng.step(now=0.0)                     # only "first" gets a lane
+        used = eng.kv_pages.used_pages
+        assert eng.evict("queued", now=0.1)
+        assert queued.state == RequestState.EVICTED
+        # no KV was resident for the queued request — nothing freed
+        assert eng.kv_pages.used_pages == used
+        assert gw.pool.pool_in_flight() == 1
+        eng.run_until_drained(now=0.2)
+        assert eng.kv_pages.used_pages == 0
+
+    def test_evict_unknown_id_returns_false(self, served_model):
+        cfg, model, params = served_model
+        eng = InferenceEngine(model, params, slots=1, max_seq=64)
+        assert not eng.evict("ghost", now=0.0)
+        r = mkreq("r")
+        eng.submit(r, now=0.0)
+        eng.run_until_drained()
+        # already-terminal ids are not re-evicted (nothing freed twice)
+        assert not eng.evict("r", now=1.0)
+        assert eng.kv_pages.double_free_rejections == 0
