@@ -642,6 +642,13 @@ def main(quick: bool = False, out_json: str | None = None) -> None:
                 "tick_trajectory": tick_rows,
             }, f, indent=2)
         print(f"# wrote {tick_json}")
+        # BENCH_shard.json: shard_map mesh trajectory (1M-16M rows x
+        # 1/2/4/8 forced-host devices) + bitwise decision parity — the
+        # worker needs XLA_FLAGS before jax import, so it runs in a
+        # subprocess (see benchmarks/shard_scale.py)
+        from benchmarks.shard_scale import main as shard_main
+        shard_main(quick=quick, out_json=os.path.join(
+            os.path.dirname(out_json) or ".", "BENCH_shard.json"))
 
 
 if __name__ == "__main__":

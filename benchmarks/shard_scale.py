@@ -1,0 +1,299 @@
+"""Sharded control-plane scale trajectory (``core.shard_plane``).
+
+Measures ``shard_tick`` against the single-device ``control_tick`` at
+10^6–10^7+ entitlement rows across 1/2/4/8-way forced-host CPU meshes
+(``XLA_FLAGS=--xla_force_host_platform_device_count=8``), and checks
+that the sharded decisions are BIT-IDENTICAL to the unsharded kernel at
+every cell.
+
+The flag must be set before jax imports, so the measurement runs in a
+fresh subprocess (the ``--worker`` entry below); the importing driver
+(``sharded_tick_trajectory``) spawns it and parses one JSON blob back.
+
+**Reading the numbers on this host.**  CI and this container expose ONE
+physical core, so the S forced-host "devices" of a mesh execute their
+per-shard blocks serially: the mesh wall time is ``S * T_block + O``
+where ``O`` is the fixed mesh overhead (collective lowering + dispatch)
+— a single core can never show a wall-clock win.  The trajectory
+therefore reports, per cell:
+
+- ``measured_speedup``  = T_full / T_mesh_wall (honest, ~<=1 here);
+- ``overhead_us``       = max(0, T_mesh_wall - S * T_block);
+- ``projected_speedup`` = T_full / (T_block + overhead) — the wall
+  time S real devices would see, each running its own block
+  concurrently and paying the measured overhead once;
+- ``serial_projected_speedup`` = S * T_full / T_mesh_wall — the S
+  identical per-device programs execute back-to-back on one core, so
+  T_mesh/S bounds one device's program (collective payloads here are
+  shard roots and scalars, a few KB — negligible on real links).
+
+The mesh cells are measured at STEADY STATE: inputs are pre-sharded
+onto their devices (``NamedSharding(mesh, P("rows"))``) exactly as a
+sharded resident store holds them between ticks — row-sharded kernel
+outputs feed the next tick's inputs without resharding, so a per-call
+device-0 scatter would charge the mesh for a copy the production loop
+never performs.
+
+The acceptance gate is on the conservative PROJECTED speedup (>=2x at
+4M rows on the 4-device mesh) plus bitwise decision parity at every
+cell; the raw terms are all in ``BENCH_shard.json`` so the projection
+is auditable.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+#: rows are powers of two so every mesh splits them evenly and the
+#: single-device width is identical to the sharded width (bitwise
+#: comparison needs the exact same padded arrays).
+FULL_ROWS = [1_048_576, 4_194_304, 16_777_216]
+QUICK_ROWS = [65_536, 262_144]
+DEVICES = [1, 2, 4, 8]
+MARK = "SHARD_SCALE_JSON:"
+
+
+# ---------------------------------------------------------------------------
+# worker — runs in the forced-host subprocess
+# ---------------------------------------------------------------------------
+
+def _median_us(fn, reps: int) -> float:
+    fn()                                           # warm / compile
+    times = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        times.append(time.perf_counter() - t0)
+    return sorted(times)[len(times) // 2] * 1e6
+
+
+def _worker(cfg: dict) -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.core import PriorityCoefficients
+    from repro.core.control_plane import ControlState, control_tick
+    from repro.core.shard_plane import (
+        row_mesh,
+        shard_admit_quantum,
+        shard_tick,
+    )
+    from repro.core.vectorized import admit_quantum
+
+    coeff = PriorityCoefficients()
+    devices = [s for s in cfg["devices"] if s <= len(jax.devices())]
+    out = {
+        "devices_visible": len(jax.devices()),
+        "cells": [],
+        "admission": None,
+    }
+
+    def build(n):
+        rng = np.random.RandomState(7)
+        f32 = lambda x: jnp.asarray(x, jnp.float32)       # noqa: E731
+        state = ControlState(
+            class_code=jnp.asarray(rng.randint(0, 5, n), jnp.int32),
+            bound=jnp.ones(n, bool),
+            baseline_tps=f32(rng.uniform(10, 100, n)),
+            baseline_kv=jnp.zeros(n, jnp.float32),
+            baseline_conc=jnp.full(n, 8.0, jnp.float32),
+            slo_ms=f32(rng.uniform(100, 30000, n)),
+            burst=f32(rng.uniform(0, 0.5, n)),
+            debt=f32(rng.uniform(-0.1, 0.5, n)))
+        cols = (f32(rng.uniform(0, 120, n)), jnp.zeros(n, jnp.float32),
+                f32(rng.randint(0, 8, n)), f32(rng.uniform(0, 200, n)))
+        return state, cols
+
+    for n in cfg["rows"]:
+        reps = max(1, cfg["reps"] if n <= 2_000_000 else cfg["reps"] // 2)
+        state, cols = build(n)
+        cap = jnp.float32(25.0 * n)
+        slo = jnp.float32(10_000.0)
+
+        def full():
+            control_tick(state, cap, *cols, slo,
+                         coeff=coeff)[1].block_until_ready()
+        t_full = _median_us(full, reps)
+        ref = control_tick(state, cap, *cols, slo, coeff=coeff)
+
+        for s in devices:
+            mesh = row_mesh(s)
+            # steady state: a sharded resident store keeps each block
+            # ON its device between ticks (out_specs feed in_specs),
+            # so the measured call must not pay a device-0 reshard —
+            # pre-shard the inputs exactly as the store would hold them
+            rowsh = NamedSharding(mesh, PartitionSpec("rows"))
+            sstate = jax.device_put(state, rowsh)
+            scols = tuple(jax.device_put(c, rowsh) for c in cols)
+
+            def mesh_tick():
+                shard_tick(sstate, cap, *scols, slo, coeff=coeff,
+                           mesh=mesh)[1].block_until_ready()
+            t_mesh = _median_us(mesh_tick, reps)
+
+            got = shard_tick(sstate, cap, *scols, slo, coeff=coeff,
+                             mesh=mesh)
+            bit = bool(jnp.array_equal(ref[1], got[1])) and all(
+                bool(jnp.array_equal(a, b)) for a, b in
+                zip(jax.tree_util.tree_leaves(ref[0]),
+                    jax.tree_util.tree_leaves(got[0])))
+
+            # one device's shard of work, on the single-device kernel
+            b = n // s
+            bstate = jax.tree_util.tree_map(lambda x: x[:b], state)
+            bcols = tuple(c[:b] for c in cols)
+
+            def block():
+                control_tick(bstate, cap, *bcols, slo,
+                             coeff=coeff)[1].block_until_ready()
+            t_block = _median_us(block, reps)
+
+            overhead = max(0.0, t_mesh - s * t_block)
+            out["cells"].append({
+                "rows": n,
+                "devices": s,
+                "full_tick_us": round(t_full, 1),
+                "block_tick_us": round(t_block, 1),
+                "mesh_wall_us": round(t_mesh, 1),
+                "overhead_us": round(overhead, 1),
+                "measured_speedup": round(t_full / t_mesh, 3),
+                "projected_speedup": round(
+                    t_full / (t_block + overhead), 2),
+                # the S per-device programs serialize on this host's
+                # one core, so T_mesh/S bounds one device's program
+                "serial_projected_speedup": round(
+                    s * t_full / t_mesh, 2),
+                "decisions_equal": bit,
+            })
+
+    # sharded admission parity at scale: same requests, same answers
+    n, m = cfg["admit_rows"], cfg["admit_reqs"]
+    rng = np.random.RandomState(11)
+    state, _ = build(n)
+    kw = dict(
+        bucket_level=jnp.asarray(rng.uniform(0, 200, n), jnp.float32),
+        in_flight=jnp.asarray(rng.randint(0, 4, n), jnp.int32),
+        kv_in_use=jnp.zeros(n, jnp.float32),
+        pool_in_flight=jnp.int32(3),
+        pool_conc_cap=jnp.float32(float(n)),
+        running_min_priority=jnp.float32(np.inf),
+        pool_avg_slo=jnp.float32(1000.0),
+        req_ent=jnp.asarray(rng.randint(0, n, m), jnp.int32),
+        req_tokens=jnp.full(m, 128.0, jnp.float32),
+        req_kv=jnp.zeros(m, jnp.float32))
+    ref_adm = admit_quantum(state, **kw, coeff=coeff)
+    adm_equal = True
+    for s in devices:
+        got_adm = shard_admit_quantum(state, **kw, coeff=coeff,
+                                      mesh=row_mesh(s))
+        adm_equal &= all(bool(jnp.array_equal(a, b))
+                         for a, b in zip(ref_adm, got_adm))
+    out["admission"] = {"rows": n, "requests": m,
+                        "devices": devices,
+                        "decisions_equal": bool(adm_equal)}
+    return out
+
+
+# ---------------------------------------------------------------------------
+# driver — spawns the forced-host subprocess
+# ---------------------------------------------------------------------------
+
+def sharded_tick_trajectory(quick: bool = False,
+                            max_devices: int = 8) -> dict:
+    cfg = {
+        "rows": QUICK_ROWS if quick else FULL_ROWS,
+        "devices": [s for s in DEVICES if s <= max_devices],
+        "reps": 3 if quick else 5,
+        "admit_rows": 4_096 if quick else 65_536,
+        "admit_reqs": 1_024 if quick else 8_192,
+    }
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{max_devices}")
+    env["JAX_PLATFORMS"] = "cpu"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(root, "src"),
+                    env.get("PYTHONPATH")) if p)
+    proc = subprocess.run(
+        [sys.executable, "-m", "benchmarks.shard_scale", "--worker",
+         json.dumps(cfg)],
+        capture_output=True, text=True, env=env, cwd=root,
+        timeout=600 if quick else 3600, check=False)
+    for line in proc.stdout.splitlines():
+        if line.startswith(MARK):
+            return json.loads(line[len(MARK):])
+    raise RuntimeError(
+        f"shard_scale worker produced no result "
+        f"(rc={proc.returncode}):\n{proc.stdout[-2000:]}"
+        f"\n{proc.stderr[-2000:]}")
+
+
+def main(quick: bool = False, out_json: str | None = None) -> None:
+    res = sharded_tick_trajectory(quick=quick)
+    gate_rows, gate_dev = (None, None) if quick else (4_194_304, 4)
+    gates = {}
+    for c in res["cells"]:
+        tag = f"{c['rows'] // 1000}k_x{c['devices']}dev"
+        print(f"shard_tick_mesh_wall_{tag},{c['mesh_wall_us']:.0f},"
+              f"us (block {c['block_tick_us']:.0f} + overhead "
+              f"{c['overhead_us']:.0f})")
+        print(f"shard_tick_projected_{tag},{c['projected_speedup']:.2f},"
+              f"x over single-device (serial-program bound "
+              f"{c['serial_projected_speedup']:.2f}x; measured on "
+              f"1 core: {c['measured_speedup']:.2f}x)")
+        print(f"shard_tick_decisions_equal_{tag},"
+              f"{int(c['decisions_equal'])},bitwise")
+        if c["rows"] == gate_rows and c["devices"] == gate_dev:
+            ok = c["projected_speedup"] >= 2.0
+            gates["shard_projected_ge_2x_at_4m_x4"] = bool(ok)
+            print(f"gate_shard_projected_ge_2x_4m_x4,"
+                  f"{c['projected_speedup']:.2f},x "
+                  f"({'PASS' if ok else 'FAIL'})")
+    parity_ok = (all(c["decisions_equal"] for c in res["cells"])
+                 and res["admission"]["decisions_equal"])
+    gates["shard_decisions_bitwise_equal"] = bool(parity_ok)
+    print(f"gate_shard_decisions_equal,{int(parity_ok)},"
+          f"bitwise incl. admission "
+          f"({'PASS' if parity_ok else 'FAIL'})")
+
+    if out_json:
+        os.makedirs(os.path.dirname(out_json) or ".", exist_ok=True)
+        with open(out_json, "w") as f:
+            json.dump({
+                "benchmark": "shard_scale",
+                "quick": quick,
+                "devices_visible": res["devices_visible"],
+                "acceptance": ("projected >=2x over single-device at "
+                               "4M rows on the 4-device mesh; sharded "
+                               "decisions bitwise equal everywhere"),
+                "projection": ("steady-state mesh cells (inputs "
+                               "pre-sharded as the resident store "
+                               "holds them); projected = T_full / "
+                               "(T_block + overhead) with overhead = "
+                               "mesh_wall - S*T_block — the forced-"
+                               "host devices serialize on one core, "
+                               "so wall time projects to one block "
+                               "plus the measured mesh overhead; "
+                               "serial_projected = S*T_full/mesh_wall "
+                               "is the per-device-program bound"),
+                "tick_trajectory": res["cells"],
+                "admission_parity": res["admission"],
+                "gates": gates,
+            }, f, indent=2)
+        print(f"# wrote {out_json}")
+
+
+if __name__ == "__main__":
+    if "--worker" in sys.argv:
+        cfg = json.loads(sys.argv[sys.argv.index("--worker") + 1])
+        print(MARK + json.dumps(_worker(cfg)))
+    else:
+        args = [a for a in sys.argv[1:] if a != "--quick"]
+        main(quick="--quick" in sys.argv,
+             out_json=args[0] if args else None)

@@ -30,7 +30,8 @@ WAIVER_RE = re.compile(
     r"(?:\s*--\s*(?P<reason>\S.*?))?\s*$")
 
 #: calls that invalidate (or wholesale replace) the device mirror
-INVALIDATORS = ("mark_dirty", "adopt_device", "_membership_changed")
+INVALIDATORS = ("mark_dirty", "mark_dirty_slot", "adopt_device",
+                "_membership_changed", "_membership_changed_shard")
 
 #: ``np.<ufunc>.at`` in-place scatter ops treated as column writes
 _UFUNC_AT = ("add", "subtract", "maximum", "minimum", "multiply")

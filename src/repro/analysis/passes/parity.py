@@ -9,17 +9,35 @@ retained scalar oracle.  Mechanically:
 * for every registered kernel there must exist a test module under
   ``tests/`` that references BOTH the kernel name and its oracle (the
   terminal symbol of the dotted path, or the class when the oracle is
-  a method) — delete a kernel's parity test and this pass fails CI.
+  a method) — delete a kernel's parity test and this pass fails CI;
+* a jit function whose body calls ``shard_map`` is a SHARDED kernel —
+  it must register an oracle wherever it lives (``distributed/`` and
+  ``models/`` included): multi-device decisions are pinned against
+  the single-device kernel, which is itself pinned against the scalar
+  oracle (``core.shard_plane`` is the template).
 
 Model/serving jit code (``repro/kernels``, ``repro/serving``, ...) is
-outside the control-plane contract and exempt from registration.
+otherwise outside the control-plane contract and exempt.
 """
 from __future__ import annotations
+
+import ast
 
 from repro.analysis.core import Finding, Pass, Project, register_pass
 
 #: path fragments whose jit functions MUST register an oracle.
 REGISTRATION_SCOPE = ("repro/core/", "repro/gateway/")
+
+
+def _uses_shard_map(func: ast.AST) -> bool:
+    for sub in ast.walk(func):
+        if isinstance(sub, ast.Call):
+            f = sub.func
+            name = f.id if isinstance(f, ast.Name) else (
+                f.attr if isinstance(f, ast.Attribute) else None)
+            if name == "shard_map":
+                return True
+    return False
 
 
 def _oracle_symbols(oracle: str) -> set[str]:
@@ -41,13 +59,23 @@ class OracleParityPass(Pass):
         for jd in project.jit_defs:
             in_scope = any(s in jd.file.path.replace("\\", "/")
                            for s in REGISTRATION_SCOPE)
-            if in_scope and jd.node.name not in project.kernels:
+            if jd.node.name in project.kernels:
+                continue
+            if in_scope:
                 findings.append(Finding(
                     rule=self.rule, path=jd.file.path, line=jd.node.lineno,
                     message=(
                         f"jit kernel {jd.node.name!r} is not registered "
                         f"via @kernel(oracle=...) — every control-plane "
                         f"kernel needs a scalar parity oracle")))
+            elif _uses_shard_map(jd.node):
+                findings.append(Finding(
+                    rule=self.rule, path=jd.file.path, line=jd.node.lineno,
+                    message=(
+                        f"sharded jit kernel {jd.node.name!r} (shard_map "
+                        f"body) is not registered via @kernel(oracle=...) "
+                        f"— multi-device decisions must be pinned against "
+                        f"the single-device kernel")))
         for decl in project.kernels.values():
             if decl.oracle is None:
                 findings.append(Finding(

@@ -20,7 +20,12 @@ hazard shapes, all reported under one rule:
   reads or writes a module-level dict/list/set that the project
   mutates: the closure captures trace-time state that silently
   diverges from runtime (the deliberate ``TRACE_COUNTS`` trace
-  counters carry explicit waivers).
+  counters carry explicit waivers);
+* **inline mesh construction** — a ``shard_map`` kernel call site
+  passing ``mesh=Mesh(...)`` built in place: ``mesh`` is a static jit
+  argument, so every fresh ``Mesh`` object fragments the dispatch
+  cache — meshes must come from the cached providers
+  (``row_mesh`` / ``pool_mesh`` in ``core.shard_plane``).
 """
 from __future__ import annotations
 
@@ -43,6 +48,9 @@ SHAPE_PROVIDERS = {
     "bucket_width", "quantum_width", "pad_rows", "pad_state",
     "stack_states", "device_state", "_kernel_inputs", "_arrays",
     "arrays_from_pool", "quantum_snapshot",
+    # sharded plane: mesh-aligned pow2 widths and the cached meshes
+    # (``core.shard_plane``)
+    "shard_width", "row_mesh", "pool_mesh",
 }
 
 
@@ -149,4 +157,17 @@ class RetraceHazardPass(Pass):
                                     f"unhashable literal passed as "
                                     f"static arg {kw.arg!r} of kernel "
                                     f"{kname!r} in {qualname}")))
+                        if kw.arg == "mesh" and isinstance(
+                                kw.value, ast.Call) and \
+                                _call_name(kw.value) == "Mesh":
+                            findings.append(Finding(
+                                rule=self.rule, path=f.path,
+                                line=kw.value.lineno,
+                                message=(
+                                    f"inline Mesh(...) passed as static "
+                                    f"mesh of kernel {kname!r} in "
+                                    f"{qualname} — every fresh Mesh "
+                                    f"object is a new dispatch-cache "
+                                    f"entry; use the cached row_mesh/"
+                                    f"pool_mesh providers")))
         return findings

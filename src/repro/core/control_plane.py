@@ -49,7 +49,9 @@ ELASTIC_MASK = jnp.array([False, False, True, False, False])
 #: Python while TRACING, so bumping a counter inside it counts compiled
 #: variants.  Tests pin that entitlement churn within a pow2 resident
 #: bucket never retraces (``tests/test_resident.py``).
-TRACE_COUNTS: dict[str, int] = {"control_tick": 0, "admit_quantum": 0}
+TRACE_COUNTS: dict[str, int] = {"control_tick": 0, "admit_quantum": 0,
+                                "shard_tick": 0, "shard_admit_quantum": 0,
+                                "shard_plan_fleet": 0}
 
 
 @jax.tree_util.register_dataclass
@@ -109,24 +111,88 @@ def ewma(prev: jax.Array, x: jax.Array, gamma: float) -> jax.Array:
     return gamma * prev + (1.0 - gamma) * x
 
 
+# -- shard-stable reductions --------------------------------------------------
+#
+# Every pool-level aggregate in the tick (protected floor, water-filling
+# shares, demand totals) reduces the row axis with a FIXED binary tree
+# over the pow2-padded rows instead of ``jnp.sum``'s backend-chosen
+# order.  The pairing depends only on element POSITION, so any
+# contiguous pow2 blocking of the rows computes bit-identical partials:
+# per-shard subtrees plus the top tree over the gathered shard roots IS
+# the full single-device tree.  That is what lets ``shard_plane`` run
+# the same math under ``shard_map`` with ``axis_name`` set and return
+# decisions bit-identical to the single-device kernel, without f64
+# accumulation (x64 stays disabled) or Kahan compensation.
+
+def _pairwise(x: jax.Array, op) -> jax.Array:
+    """Reduce the trailing (pow2) axis with positional pairing."""
+    while x.shape[-1] > 1:
+        x = op(x[..., 0::2], x[..., 1::2])
+    return x[..., 0]
+
+
+def tree_sum(x: jax.Array, axis_name: str | None = None) -> jax.Array:
+    """Binary-tree sum over the row axis; with ``axis_name`` the rows
+    are a shard_map block and the shard roots combine through the top
+    of the same tree (``all_gather`` orders roots by device index, i.e.
+    block order).  Non-pow2 widths pad with zeros (exact for adds)."""
+    w = bucket_width(x.shape[-1])
+    if w != x.shape[-1]:
+        x = jnp.concatenate(
+            [x, jnp.zeros(x.shape[:-1] + (w - x.shape[-1],), x.dtype)],
+            axis=-1)
+    local = _pairwise(x, jnp.add)
+    if axis_name is None:
+        return local
+    return _pairwise(jax.lax.all_gather(local, axis_name), jnp.add)
+
+
+def tree_any(x: jax.Array, axis_name: str | None = None) -> jax.Array:
+    """Binary-tree logical-or over the row axis (pad with False)."""
+    w = bucket_width(x.shape[-1])
+    if w != x.shape[-1]:
+        x = jnp.concatenate(
+            [x, jnp.zeros(x.shape[:-1] + (w - x.shape[-1],), bool)],
+            axis=-1)
+    local = _pairwise(x, jnp.logical_or)
+    if axis_name is None:
+        return local
+    return _pairwise(jax.lax.all_gather(local, axis_name),
+                     jnp.logical_or)
+
+
+def tree_count(x: jax.Array, axis_name: str | None = None) -> jax.Array:
+    """Row count of a bool mask as int32 (integer adds are exact, so
+    any order agrees — the tree keeps the structure uniform)."""
+    return tree_sum(x.astype(jnp.int32), axis_name)
+
+
 def waterfill_rows(capacity: jax.Array, want: jax.Array,
-                   weight: jax.Array, max_rounds: int = 32) -> jax.Array:
+                   weight: jax.Array, max_rounds: int = 32,
+                   axis_name: str | None = None) -> jax.Array:
     """Priority-weighted progressive water-filling (jnp mirror of
     ``core.pool.waterfill``).  Runs the same cap-and-redistribute rounds
     inside a ``lax.while_loop``; converges in ≤ #distinct-caps rounds,
-    bounded by ``max_rounds`` for compile-time safety."""
+    bounded by ``max_rounds`` for compile-time safety.
+
+    With ``axis_name`` the rows are one shard_map block: the per-round
+    couplings (total weight, active count, filled total, the done /
+    progress flags) combine across shards through the shard-stable tree
+    reductions, and the loop state that the ``cond`` reads (remaining /
+    round counter / any-active) is replicated — every device runs the
+    same trip count."""
     want = jnp.maximum(want, 0.0)
     active0 = want > 1e-12
 
     def cond(state):
-        alloc, remaining, active, i = state
-        return (remaining > 1e-9) & jnp.any(active) & (i < max_rounds)
+        alloc, remaining, active, i, has_active = state
+        return (remaining > 1e-9) & has_active & (i < max_rounds)
 
     def body(state):
-        alloc, remaining, active, i = state
+        alloc, remaining, active, i, _ = state
         w = jnp.where(active, weight, 0.0)
-        total_w = jnp.sum(w)
-        n_active = jnp.sum(active)
+        total_w = tree_sum(w, axis_name)
+        n_active = tree_count(active, axis_name)
         total_w_safe = jnp.where(total_w > 0.0, total_w, 1.0)
         share = jnp.where(
             total_w > 0.0,
@@ -136,27 +202,28 @@ def waterfill_rows(capacity: jax.Array, want: jax.Array,
         take = jnp.minimum(room, share)
         take = jnp.where(active, take, 0.0)
         alloc = alloc + take
-        remaining = remaining - jnp.sum(take)
+        remaining = remaining - tree_sum(take, axis_name)
         # done when the share covered the remaining room — compare take
         # to room with a magnitude-scaled epsilon (f32-safe; an absolute
         # 1e-12 misfires once want ≳ 1e2 in float32)
         newly_done = active & (take >= room
                                - 1e-6 * jnp.maximum(1.0, want))
         # scalar loop breaks when a round fills nobody
-        progress = jnp.any(newly_done)
+        progress = tree_any(newly_done, axis_name)
         active = active & ~newly_done
         i = jnp.where(progress, i + 1, max_rounds)
-        return alloc, remaining, active, i
+        return alloc, remaining, active, i, tree_any(active, axis_name)
 
     alloc0 = jnp.zeros_like(want)
-    alloc, _, _, _ = jax.lax.while_loop(
+    alloc, _, _, _, _ = jax.lax.while_loop(
         cond, body, (alloc0, jnp.maximum(capacity, 0.0), active0,
-                     jnp.asarray(0)))
+                     jnp.asarray(0), tree_any(active0, axis_name)))
     return alloc
 
 
 def allocate_rows(capacity: jax.Array, state: ControlState,
-                  weights: jax.Array, demand_tps: jax.Array) -> jax.Array:
+                  weights: jax.Array, demand_tps: jax.Array,
+                  axis_name: str | None = None) -> jax.Array:
     """Funding allocation with work conservation (the Table-1 ordering):
     protected funded at baseline (emergency-scaled if their *active* use
     exceeds capacity) → elastic demand-capped baselines water-filled →
@@ -165,7 +232,7 @@ def allocate_rows(capacity: jax.Array, state: ControlState,
     protected = live & PROTECTED_MASK[state.class_code]
     base_p = jnp.where(protected, state.baseline_tps, 0.0)
     active_p = jnp.minimum(base_p, jnp.where(protected, demand_tps, 0.0))
-    total_active_p = jnp.sum(active_p)
+    total_active_p = tree_sum(active_p, axis_name)
     emergency = total_active_p > capacity
     scale = jnp.where(emergency,
                       capacity / jnp.maximum(total_active_p, 1e-30), 1.0)
@@ -177,9 +244,10 @@ def allocate_rows(capacity: jax.Array, state: ControlState,
     want_e = jnp.where(elastic,
                        jnp.minimum(state.baseline_tps, demand_tps), 0.0)
     fill_e = waterfill_rows(remaining, want_e,
-                            jnp.where(elastic, weights, 0.0))
+                            jnp.where(elastic, weights, 0.0),
+                            axis_name=axis_name)
     alloc = alloc_p + fill_e
-    remaining = jnp.maximum(0.0, remaining - jnp.sum(fill_e))
+    remaining = jnp.maximum(0.0, remaining - tree_sum(fill_e, axis_name))
 
     burst_ok = live & BURSTOK_MASK[state.class_code]
     used = jnp.where(protected, active_p,
@@ -187,7 +255,8 @@ def allocate_rows(capacity: jax.Array, state: ControlState,
     want_b = jnp.where(burst_ok,
                        jnp.maximum(0.0, demand_tps - used), 0.0)
     fill_b = waterfill_rows(remaining, want_b,
-                            jnp.where(burst_ok, weights, 0.0))
+                            jnp.where(burst_ok, weights, 0.0),
+                            axis_name=axis_name)
     return alloc + fill_b
 
 
@@ -195,6 +264,7 @@ def _tick_impl(state: ControlState, capacity_tps: jax.Array,
                measured_tps: jax.Array, used_kv: jax.Array,
                used_conc: jax.Array, demand_tps: jax.Array,
                avg_slo_ms: jax.Array, coeff: PriorityCoefficients,
+               axis_name: str | None = None,
                ) -> tuple[ControlState, jax.Array, jax.Array]:
     """Tick body shared by the single-pool and vmapped entry points.
     Mirrors the scalar controller's steps 2–5: burst EWMA → priority →
@@ -205,7 +275,8 @@ def _tick_impl(state: ControlState, capacity_tps: jax.Array,
     s1 = dataclasses.replace(state, burst=burst)
 
     weights = priority_rows(s1, jnp.maximum(avg_slo_ms, 1e-9), coeff)
-    alloc = allocate_rows(capacity_tps, s1, weights, demand_tps)
+    alloc = allocate_rows(capacity_tps, s1, weights, demand_tps,
+                          axis_name=axis_name)
 
     # Eq. 2 debt: underservice only counts against live demand, service
     # is the measured completion rate floored by demand-capped funding.

@@ -52,12 +52,13 @@ from typing import Optional
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import control_plane, priority as prio
+from repro.core import control_plane, priority as prio, shard_plane
 from repro.core.control_plane import CLASS_CODES, ControlState
 from repro.core.ledger import Ledger
 from repro.core.markers import hot_path
 from repro.core.request_table import InFlight, InFlightMap, RequestTable
-from repro.core.resident import ResidentStatus, ResidentStore, _DictView
+from repro.core.resident import (ResidentStatus, ResidentStore,
+                                 ShardedResidentStore, _DictView)
 from repro.core.types import (
     EntitlementSpec,
     EntitlementState,
@@ -276,8 +277,12 @@ class TokenPool:
         self.provider = provider or VirtualNodeProvider()
         self.replicas = spec.scaling.min_replicas
         #: the resident structure-of-arrays — source of truth for every
-        #: control-plane column (``core.resident``)
-        self.store = ResidentStore()
+        #: control-plane column (``core.resident``); ``spec.shards``
+        #: opts into the sharded facade (``core.shard_plane``)
+        if spec.shards is not None and spec.shards > 1:
+            self.store = ShardedResidentStore(n_shards=spec.shards)
+        else:
+            self.store = ResidentStore()
         #: the resident request table — source of truth for every
         #: in-flight record and outstanding charge
         #: (``core.request_table``)
@@ -1189,11 +1194,22 @@ class TokenPool:
         jitted kernel."""
         self._measure(now)
         measured, used_kv, used_conc, demand = self._kernel_inputs()
-        new_state, alloc, weights = control_plane.control_tick(
-            self.store.device_state(),
-            jnp.float32(self.capacity().tokens_per_second),
-            measured, used_kv, used_conc, demand,
-            jnp.float32(self.pool_avg_slo()),
-            coeff=self.spec.coefficients)
+        mesh = shard_plane.pool_mesh(self)
+        if mesh is None:
+            new_state, alloc, weights = control_plane.control_tick(
+                self.store.device_state(),
+                jnp.float32(self.capacity().tokens_per_second),
+                measured, used_kv, used_conc, demand,
+                jnp.float32(self.pool_avg_slo()),
+                coeff=self.spec.coefficients)
+        else:
+            # sharded dispatch — bit-identical decisions (the tick's
+            # tree reductions decompose exactly across mesh blocks)
+            new_state, alloc, weights = shard_plane.shard_tick(
+                self.store.device_state(),
+                jnp.float32(self.capacity().tokens_per_second),
+                measured, used_kv, used_conc, demand,
+                jnp.float32(self.pool_avg_slo()),
+                coeff=self.spec.coefficients, mesh=mesh)
         return self._absorb_tick(now, new_state, np.asarray(alloc),
                                  np.asarray(weights))

@@ -199,6 +199,12 @@ class ResidentStore:
         cached device mirror (rebuilt lazily from the numpy columns)."""
         self._device = None
 
+    def mark_dirty_slot(self, slot: int) -> None:
+        """Slot-granular mirror invalidation.  The flat store has no
+        sub-mirror structure, so this is :meth:`mark_dirty`; the
+        sharded store narrows it to the owning shard's block."""
+        self.mark_dirty()
+
     # -- audit surface (public: chaos invariant checkers read these) ----------
     def row_accounting(self) -> dict:
         """Free-list / live-row closure snapshot: the invariant is
@@ -306,6 +312,214 @@ class ResidentStore:
         v.created_at = st.created_at
 
 
+def _state_block(state: ControlState, lo: int, hi: int) -> ControlState:
+    """Device-side row slice of a ``ControlState`` (views, no upload)."""
+    return ControlState(**{
+        f.name: getattr(state, f.name)[lo:hi]
+        for f in dataclasses.fields(ControlState)})
+
+
+class ShardedResidentStore(ResidentStore):
+    """:class:`ResidentStore` partitioned into ``n_shards`` equal
+    contiguous row blocks — the host-side half of the sharded control
+    plane (``core.shard_plane``).
+
+    Same columns, same view objects, same ``slot_of`` surface — the
+    facade changes WHERE work lands, not what callers see:
+
+      * **per-shard free lists**: allocation picks the emptiest shard
+        and recycles within it, so entitlement churn touches exactly
+        one block and never crosses shards;
+      * **block-granular mirror invalidation**: ``mark_dirty_slot``
+        marks only the owning shard's block stale; ``device_state()``
+        re-uploads dirty blocks and concatenates them with the cached
+        clean ones device-side — attach/detach/migration of one row
+        re-uploads ``capacity/n_shards`` rows, not the pool
+        (``block_uploads`` / ``full_uploads`` / ``uploaded_rows``
+        counters pin this in tests);
+      * **slot stability**: shards are equal blocks of the CURRENT
+        capacity.  Growth doubles the whole store — slots never move
+        (every persistent view/row index stays valid) — and the
+        shard boundaries are recomputed with the free lists rebuilt,
+        an O(N) step on the already-O(N) grow path.
+
+    ``n_shards`` must be a power of two so shard blocks align with
+    the pow2 device blocks of any ``row_mesh`` of size ≤ ``n_shards``
+    (the tree reductions are blocking-invariant, so ANY such mesh
+    yields bit-identical decisions — mesh size is decoupled from the
+    shard count)."""
+
+    def __init__(self, capacity: int = 8, n_shards: int = 4) -> None:
+        if n_shards < 1 or n_shards & (n_shards - 1):
+            raise ValueError(
+                f"n_shards must be a power of two, got {n_shards}")
+        super().__init__(max(capacity, n_shards))
+        self.n_shards = n_shards
+        #: global free list retired: per-shard LIFO lists own recycling
+        self._free = []
+        self._shard_free: list[list[int]] = []
+        self._rebuild_shard_free(list(range(self.capacity - 1, -1, -1)))
+        #: per-shard device ``ControlState`` blocks (None = no block
+        #: cache; concatenation of blocks == the full mirror)
+        self._device_blocks: Optional[list[ControlState]] = None
+        self._dirty_shards: set[int] = set()
+        # upload observability (tests pin churn stays block-local)
+        self.block_uploads = 0
+        self.full_uploads = 0
+        self.uploaded_rows = 0
+
+    @property
+    def shard_rows(self) -> int:
+        return self.capacity // self.n_shards
+
+    def shard_of(self, slot: int) -> int:
+        return slot // self.shard_rows
+
+    def shard_of_name(self, name: str) -> int:
+        """Owning shard of a resident entitlement (routing surface)."""
+        return self.shard_of(self.slot_of[name])
+
+    def _rebuild_shard_free(self, free_desc: list[int]) -> None:
+        """Rebuild per-shard LIFO free lists from a descending global
+        free list (descending append ⇒ pop() yields ascending slots,
+        matching the flat store's initial recycle order)."""
+        rows = self.capacity // self.n_shards
+        self._shard_free = [[] for _ in range(self.n_shards)]
+        for slot in free_desc:
+            self._shard_free[slot // rows].append(slot)
+
+    def _pick_shard(self) -> Optional[int]:
+        """Emptiest shard (ties → lowest id): balanced residency keeps
+        per-device work even across the mesh."""
+        best, best_free = None, 0
+        for s, fl in enumerate(self._shard_free):
+            if len(fl) > best_free:
+                best, best_free = s, len(fl)
+        return best
+
+    # -- slot lifecycle (shard-local churn) -----------------------------------
+    def allocate(self, name: str) -> int:
+        if name in self.slot_of:
+            raise ValueError(f"entitlement {name!r} already resident")
+        shard = self._pick_shard()
+        if shard is None:
+            self._grow()
+            shard = self._pick_shard()
+        slot = self._shard_free[shard].pop()
+        self.slot_of[name] = slot
+        self.name_of[slot] = name
+        for arr in self.col.values():          # recycled slots start clean
+            arr[slot] = 0
+        self.col["alive"][slot] = True
+        if self.level_audit is not None:
+            self.level_audit.note("lifecycle", slot)
+        self._membership_changed_shard(slot)
+        return slot
+
+    def release(self, name: str) -> int:
+        slot = self.slot_of.pop(name)
+        self.name_of[slot] = None
+        for arr in self.col.values():
+            arr[slot] = 0
+        self._shard_free[self.shard_of(slot)].append(slot)
+        if self.level_audit is not None:
+            self.level_audit.note("lifecycle", slot)
+        self._membership_changed_shard(slot)
+        return slot
+
+    def _grow(self) -> None:
+        old = self.capacity
+        kept = [s for fl in self._shard_free for s in fl]
+        super()._grow()                        # doubles arrays + capacity
+        self._free = []
+        # shard BOUNDARIES move (shard_rows doubled); slots do not —
+        # rebuild the free lists under the new mapping
+        self._rebuild_shard_free(
+            sorted(kept + list(range(old, self.capacity)), reverse=True))
+
+    def _membership_changed_shard(self, slot: int) -> None:
+        """Shard-local flavor of ``_membership_changed``: live caches
+        drop (they index the whole store) but the mirror goes stale
+        only in the owning shard's block."""
+        self._live_slots = None
+        self._live_names = None
+        self.mark_dirty_slot(slot)
+
+    def _membership_changed(self) -> None:
+        super()._membership_changed()
+        self._device_blocks = None
+        self._dirty_shards.clear()
+
+    # -- block-granular device mirror -----------------------------------------
+    def mark_dirty(self) -> None:
+        self._device = None
+        self._device_blocks = None
+        self._dirty_shards.clear()
+
+    def mark_dirty_slot(self, slot: int) -> None:
+        if self._device is not None:
+            # split the (clean) full mirror into blocks before any goes
+            # stale — device-side slicing, no upload
+            rows = self.shard_rows
+            self._device_blocks = [
+                _state_block(self._device, s * rows, (s + 1) * rows)
+                for s in range(self.n_shards)]
+            self._device = None
+        if self._device_blocks is None:
+            return                             # fully dirty: next build is full
+        self._dirty_shards.add(self.shard_of(slot))
+
+    def device_state(self) -> ControlState:
+        if self._device is not None:
+            return self._device
+        if self._device_blocks is not None:
+            rows = self.shard_rows
+            c = self.col
+            for s in sorted(self._dirty_shards):
+                lo = s * rows
+                self._device_blocks[s] = ControlState(
+                    class_code=jnp.asarray(c["class_code"][lo:lo + rows]),
+                    bound=jnp.asarray(c["bound"][lo:lo + rows]),
+                    baseline_tps=jnp.asarray(
+                        c["baseline_tps"][lo:lo + rows]),
+                    baseline_kv=jnp.asarray(c["baseline_kv"][lo:lo + rows]),
+                    baseline_conc=jnp.asarray(
+                        c["baseline_conc"][lo:lo + rows]),
+                    slo_ms=jnp.asarray(c["slo_ms"][lo:lo + rows]),
+                    burst=jnp.asarray(c["burst"][lo:lo + rows]),
+                    debt=jnp.asarray(c["debt"][lo:lo + rows]),
+                )
+            self.block_uploads += len(self._dirty_shards)
+            self.uploaded_rows += rows * len(self._dirty_shards)
+            self._dirty_shards.clear()
+            blocks = self._device_blocks
+            self._device = ControlState(**{
+                f.name: jnp.concatenate(
+                    [getattr(b, f.name) for b in blocks])
+                for f in dataclasses.fields(ControlState)})
+            return self._device
+        state = super().device_state()         # full (re)build
+        self.full_uploads += 1
+        self.uploaded_rows += self.capacity
+        return state
+
+    def adopt_device(self, state: ControlState) -> None:
+        super().adopt_device(state)
+        self._device_blocks = None             # blocks stale; resliced lazily
+        self._dirty_shards.clear()
+
+    # -- audit surface --------------------------------------------------------
+    def row_accounting(self) -> dict:
+        return {
+            "capacity": self.capacity,
+            "live": len(self.slot_of),
+            "free": sum(len(fl) for fl in self._shard_free),
+            "alive_rows": int(np.count_nonzero(self.col["alive"])),
+            "n_shards": self.n_shards,
+            "shard_free": [len(fl) for fl in self._shard_free],
+        }
+
+
 def _col_property(col: str, py, *, dirty: bool = False):
     """Property accessing ``store.col[col][slot]`` coerced through
     ``py`` (float/int); ``dirty=True`` invalidates the device mirror
@@ -317,7 +531,7 @@ def _col_property(col: str, py, *, dirty: bool = False):
     if dirty:
         def fset(self, value):
             self._store.col[col][self._slot] = value
-            self._store.mark_dirty()
+            self._store.mark_dirty_slot(self._slot)
     else:
         def fset(self, value):
             self._store.col[col][self._slot] = value
@@ -353,7 +567,7 @@ class ResidentStatus:
         s, i = self._store, self._slot
         s.col["state_code"][i] = STATE_CODES[value]
         s.col["bound"][i] = STATE_CODES[value] == _BOUND_CODE
-        s.mark_dirty()
+        s.mark_dirty_slot(i)
 
     burst = _col_property("burst", float, dirty=True)
     debt = _col_property("debt", float, dirty=True)

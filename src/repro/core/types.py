@@ -245,6 +245,13 @@ class PoolSpec:
     #: a deque(maxlen=...)); None = unbounded.  Long-running
     #: deployments tick forever — an unbounded history is a slow leak.
     history_maxlen: Optional[int] = 4096
+    #: partition the resident rows into this many shards (pow2) — the
+    #: pool then uses ``ShardedResidentStore`` (shard-local churn,
+    #: block-granular mirror uploads) and its tick/admission kernels
+    #: dispatch over a ``shard_map`` row mesh whenever ≥2 devices are
+    #: visible (``core.shard_plane``; decisions are bit-identical to
+    #: the single-device kernels).  None/1 keeps the flat store.
+    shards: Optional[int] = None
 
 
 @dataclasses.dataclass(frozen=True)

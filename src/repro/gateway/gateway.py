@@ -57,6 +57,7 @@ from repro.core.control_plane import (
     quantum_width,
 )
 from repro.core.markers import hot_path
+from repro.core import shard_plane
 from repro.core.pool_manager import PoolOrManager, as_manager
 from repro.core.vectorized import admit_quantum, quantum_snapshot
 from repro.telemetry import flight as flightrec
@@ -449,7 +450,11 @@ class Gateway:
 
         live = np.zeros(width, bool)
         live[:m] = True
-        admitted, reasons, req_w = admit_quantum(
+        mesh = shard_plane.pool_mesh(pool)
+        admit_kw = {} if mesh is None else {"mesh": mesh}
+        admit_fn = admit_quantum if mesh is None \
+            else shard_plane.shard_admit_quantum
+        admitted, reasons, req_w = admit_fn(
             pad_state(snap.state, row_width),
             pad_rows(snap.bucket_level, row_width),
             pad_rows(snap.in_flight, row_width),
@@ -465,7 +470,8 @@ class Gateway:
             req_live=live,
             weights=pad_rows(snap.weights, row_width),
             coeff=pool.spec.coefficients,
-            slack=pool.spec.admission_slack)
+            slack=pool.spec.admission_slack,
+            **admit_kw)
         return (np.asarray(admitted)[:m], np.asarray(reasons)[:m],
                 np.asarray(req_w)[:m])
 

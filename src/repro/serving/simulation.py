@@ -437,6 +437,10 @@ class PoolSite:
     #: ``autoscale=True`` the fleet starts at ``n_replicas`` live and
     #: the planner provisions up to this many.
     max_replicas: int = 0
+    #: resident-store shard count (0 → flat store; pow2 → sharded
+    #: store + ``shard_map`` kernel dispatch when devices allow, see
+    #: ``PoolSpec.shards``)
+    shards: int = 0
 
 
 class MultiPoolSimulator:
@@ -510,7 +514,8 @@ class MultiPoolSimulator:
                                       float(s.replica_slots)),
                 coefficients=coeff,
                 accounting_interval_s=accounting_interval_s,
-                bucket_window_s=bucket_window_s)
+                bucket_window_s=bucket_window_s,
+                shards=s.shards or None)
             pool = self.manager.add_pool(spec)
             pool.set_replicas(s.n_replicas)
             # fleet sized to the autoscaling ceiling; slots beyond the

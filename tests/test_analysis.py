@@ -201,6 +201,56 @@ class TestRetraceHazard:
         assert report.unwaived == []
 
 
+class TestShardMapRetraceHazard:
+    """``shard_map`` call-site awareness: ``mesh`` is a static jit
+    argument, so an inline ``Mesh(...)`` at a kernel call site is a
+    dispatch-cache leak; the cached ``row_mesh``/``pool_mesh``
+    providers (and ``shard_width``) count as shape providers."""
+
+    VIOLATING = """
+    from functools import partial
+    from repro.core.markers import kernel
+
+    @kernel(oracle="fixture.oracle_fn")
+    @partial(jax.jit, static_argnames=("mesh",))
+    def sharded_k(x, *, mesh):
+        return x
+
+    def driver(arr, devices):
+        w = bucket_width(arr.shape[0])
+        return sharded_k(pad_rows(arr, w),
+                         mesh=Mesh(devices, ("rows",)))
+    """
+
+    CLEAN = """
+    from functools import partial
+    from repro.core.markers import kernel
+
+    @kernel(oracle="fixture.oracle_fn")
+    @partial(jax.jit, static_argnames=("mesh",))
+    def sharded_k(x, *, mesh):
+        return x
+
+    def driver(arr, n):
+        mesh = row_mesh(4)
+        w = shard_width(n, mesh)
+        return sharded_k(pad_rows(arr, w), mesh=mesh)
+    """
+
+    def test_violating(self, tmp_path):
+        report, src = run(tmp_path, self.VIOLATING, ["retrace-hazard"])
+        [f] = report.unwaived
+        assert f.rule == "retrace-hazard"
+        assert f.line == line_of(src, "mesh=Mesh(devices")
+        assert "inline Mesh" in f.message
+        assert "row_mesh" in f.message
+
+    def test_clean(self, tmp_path):
+        # cached mesh provider + shard_width as the bucketing witness
+        report, _ = run(tmp_path, self.CLEAN, ["retrace-hazard"])
+        assert report.unwaived == []
+
+
 class TestHotPathScalarLoop:
     VIOLATING = """
     from repro.core.markers import hot_path
@@ -284,6 +334,33 @@ class TestOracleParity:
         # the @kernel registration is global: coverage still checked.
         assert all("not registered" not in f.message
                    for f in report.unwaived)
+
+    def test_out_of_scope_shard_map_jit_still_flagged(self, tmp_path):
+        # a shard_map body makes a jit def a SHARDED kernel: it needs a
+        # single-device oracle registration wherever it lives
+        src = """
+        from functools import partial
+        from repro.core.markers import kernel
+
+        @partial(jax.jit, static_argnames=("mesh",))
+        def rogue_sharded(x, *, mesh):
+            return shard_map(lambda b: b, mesh=mesh,
+                             in_specs=P("rows"), out_specs=P("rows"))(x)
+
+        @kernel(oracle="repro.core.scalar.Oracle.run")
+        @partial(jax.jit, static_argnames=("mesh",))
+        def fused_step(x, *, mesh):
+            return shard_map(lambda b: b, mesh=mesh,
+                             in_specs=P("rows"), out_specs=P("rows"))(x)
+        """
+        report, src = run(tmp_path, src, ["oracle-parity"],
+                          name="repro/distributed/mod.py",
+                          tests_dir=self._tests_dir(tmp_path))
+        flagged = [f for f in report.unwaived
+                   if "sharded jit kernel" in f.message]
+        [f] = flagged
+        assert f.line == line_of(src, "def rogue_sharded")
+        assert "'rogue_sharded'" in f.message
 
     def test_non_literal_oracle_flagged(self, tmp_path):
         src = """

@@ -1,0 +1,627 @@
+"""Sharded control plane (``core.shard_plane``) — CPU-mesh parity.
+
+The contract under test: ``shard_tick`` / ``shard_admit_quantum`` /
+``shard_plan_fleet`` decisions are BIT-IDENTICAL to the single-device
+kernels ``control_tick`` / ``admit_quantum`` / ``plan_fleet`` at every
+power-of-two mesh size the backend offers, and (transitively, plus
+directly for the tick) match the scalar oracles ``reference_tick`` /
+``AdmissionController`` / ``Autoscaler.plan`` within the established
+tolerances.  Run under ``XLA_FLAGS=--xla_force_host_platform_device_count=8``
+(the CI ``shard`` job) this sweeps 1/2/4/8-way meshes; on a plain
+single-device host it still drives the full shard_map path at mesh
+size 1.
+
+Also covered here: the ``ShardedResidentStore`` facade (per-shard free
+lists, block-granular mirror uploads, slot stability across growth),
+the ``PoolManager.tick`` stacked-state cache (no-retrace + no-recopy
+counter pins), and a chaos-invariant churn+migration run over sharded
+stores (token conservation, row leaks, mirror coherence).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from repro.core import (
+    EntitlementSpec,
+    PoolSpec,
+    PriorityCoefficients,
+    QoS,
+    Resources,
+    ScalingBounds,
+    ServiceClass,
+    TokenPool,
+)
+from repro.core import control_plane
+from repro.core.control_plane import (
+    TRACE_COUNTS,
+    ControlState,
+    control_tick,
+    pad_rows,
+    pad_state,
+    reference_tick,
+    state_from_rows,
+    tree_any,
+    tree_count,
+    tree_sum,
+)
+from repro.core.fleet import FleetPlannerConfig, plan_fleet
+from repro.core.pool_manager import PoolManager
+from repro.core.resident import ResidentStore, ShardedResidentStore
+from repro.core.shard_plane import (
+    pool_mesh,
+    row_mesh,
+    shard_admit_quantum,
+    shard_plan_fleet,
+    shard_tick,
+    shard_width,
+)
+from repro.core.vectorized import admit_quantum
+from tests.test_control_plane import ABS, REL, random_rows
+
+#: every power-of-two mesh the backend offers (1 on a plain host;
+#: 1/2/4/8 under the forced-host CI mesh)
+MESH_SIZES = [s for s in (1, 2, 4, 8) if s <= len(jax.devices())]
+CLASSES = [ServiceClass.GUARANTEED, ServiceClass.DEDICATED,
+           ServiceClass.ELASTIC, ServiceClass.SPOT]
+
+
+def state_equal(a: ControlState, b: ControlState) -> bool:
+    return all(
+        bool(jnp.array_equal(getattr(a, f.name), getattr(b, f.name)))
+        for f in dataclasses.fields(ControlState))
+
+
+def padded_tick_inputs(rows, mesh):
+    """(state, measured, kv, conc, demand) padded to the mesh-aligned
+    width — padding rows are inert unbound zeros, exactly like free
+    store slots."""
+    w = shard_width(len(rows), mesh)
+    state = pad_state(state_from_rows(rows), w)
+    cols = [
+        pad_rows(jnp.asarray([r.measured_tps for r in rows],
+                             jnp.float32), w),
+        pad_rows(jnp.asarray([r.used_kv for r in rows], jnp.float32), w),
+        pad_rows(jnp.asarray([r.used_conc for r in rows],
+                             jnp.float32), w),
+        pad_rows(jnp.asarray([r.demand_tps for r in rows],
+                             jnp.float32), w),
+    ]
+    return state, cols
+
+
+class TestTreeReductions:
+    """The shard-stable positional binary tree is blocking-invariant:
+    any contiguous pow2 blocking (= any mesh size) reproduces the
+    exact same f32 adds in the exact same order."""
+
+    @pytest.mark.parametrize("n", [1, 3, 16, 37, 256])
+    def test_tree_sum_matches_exact(self, n):
+        rng = np.random.RandomState(n)
+        x = (rng.rand(n) * 1000).astype(np.float32)
+        got = float(tree_sum(jnp.asarray(x)))
+        # n ≤ 256 f32 values sum exactly in f64 well under 2^53
+        assert got == pytest.approx(float(np.sum(x.astype(np.float64))),
+                                    rel=1e-6)
+
+    def test_tree_sum_blocking_invariance(self):
+        """Per-block subtrees + a top tree over the block roots must be
+        bitwise the full tree — the property the mesh decomposition
+        rides on."""
+        rng = np.random.RandomState(7)
+        x = jnp.asarray(rng.rand(64).astype(np.float32) * 997.0)
+        full = float(tree_sum(x))
+        for blocks in (2, 4, 8):
+            roots = jnp.stack([
+                tree_sum(x[k * (64 // blocks):(k + 1) * (64 // blocks)])
+                for k in range(blocks)])
+            assert float(tree_sum(roots)) == full, blocks
+
+    def test_tree_any_and_count(self):
+        m = jnp.asarray([True, False, True, False, False])
+        assert bool(tree_any(m)) is True
+        assert int(tree_count(m)) == 2
+        assert bool(tree_any(jnp.zeros(5, bool))) is False
+
+
+class TestShardTickParity:
+    """shard_tick == control_tick bitwise at every mesh size, and both
+    match the scalar reference_tick within the pinned tolerances."""
+
+    @pytest.mark.parametrize("seed", range(4))
+    @pytest.mark.parametrize("scarcity", [0.2, 1.0, 5.0])
+    def test_mesh_vs_single_device_bitwise(self, seed, scarcity):
+        rng = np.random.RandomState(seed)
+        rows = random_rows(int(rng.randint(3, 60)), rng)
+        demand = sum(min(r.baseline_tps, r.demand_tps)
+                     for r in rows if r.bound)
+        cap = jnp.float32(max(10.0, scarcity * demand))
+        slo = jnp.float32(10_000.0)
+        coeff = PriorityCoefficients()
+        mesh0 = row_mesh(MESH_SIZES[-1])
+        state, cols = padded_tick_inputs(rows, mesh0)
+        ref = control_tick(state, cap, *cols, slo, coeff=coeff)
+        for size in MESH_SIZES:
+            got = shard_tick(state, cap, *cols, slo, coeff=coeff,
+                             mesh=row_mesh(size))
+            assert state_equal(ref[0], got[0]), size
+            assert jnp.array_equal(ref[1], got[1]), size
+            assert jnp.array_equal(ref[2], got[2]), size
+
+    @pytest.mark.parametrize("seed", range(3))
+    def test_mesh_vs_scalar_oracle(self, seed):
+        rng = np.random.RandomState(100 + seed)
+        rows = random_rows(24, rng)
+        cap = 800.0
+        coeff = PriorityCoefficients()
+        mesh = row_mesh(MESH_SIZES[-1])
+        state, cols = padded_tick_inputs(rows, mesh)
+        new_state, alloc, weights = shard_tick(
+            state, jnp.float32(cap), *cols, jnp.float32(10_000.0),
+            coeff=coeff, mesh=mesh)
+        o_rows, o_alloc, o_weights = reference_tick(
+            rows, cap, 10_000.0, coeff)
+        alloc = np.asarray(alloc)
+        weights = np.asarray(weights)
+        burst = np.asarray(new_state.burst)
+        debt = np.asarray(new_state.debt)
+        for i, o in enumerate(o_rows):
+            ctx = f"row {i} ({o.service_class.value})"
+            assert weights[i] == pytest.approx(o_weights[i],
+                                               rel=1e-4), ctx
+            assert alloc[i] == pytest.approx(o_alloc[i], rel=REL,
+                                             abs=ABS), ctx
+            assert burst[i] == pytest.approx(o.burst, rel=1e-4,
+                                             abs=1e-5), ctx
+            assert debt[i] == pytest.approx(o.debt, rel=1e-4,
+                                            abs=1e-5), ctx
+
+    @pytest.mark.parametrize("seed", range(200, 212))
+    def test_seeded_sweep(self, seed):
+        rng = np.random.RandomState(seed)
+        check_tick_parity(int(rng.randint(0, 2**31 - 1)),
+                          int(rng.randint(2, 49)),
+                          float(rng.uniform(0.1, 6.0)))
+
+
+def check_tick_parity(seed, n, scarcity):
+    rng = np.random.RandomState(seed)
+    rows = random_rows(n, rng)
+    demand = sum(r.demand_tps for r in rows if r.bound)
+    cap = jnp.float32(max(10.0, scarcity * max(demand, 1.0)))
+    slo = jnp.float32(float(rng.uniform(200, 20000)))
+    coeff = PriorityCoefficients()
+    mesh = row_mesh(MESH_SIZES[-1])
+    state, cols = padded_tick_inputs(rows, mesh)
+    ref = control_tick(state, cap, *cols, slo, coeff=coeff)
+    got = shard_tick(state, cap, *cols, slo, coeff=coeff, mesh=mesh)
+    assert state_equal(ref[0], got[0])
+    assert jnp.array_equal(ref[1], got[1])
+    assert jnp.array_equal(ref[2], got[2])
+
+
+def random_admit_case(rng, n, m):
+    """Random (state, rows arrays, request arrays) for an admission
+    quantum at mesh-aligned width."""
+    mesh = row_mesh(MESH_SIZES[-1])
+    w = shard_width(n, mesh)
+    state = pad_state(state_from_rows(random_rows(n, rng)), w)
+    kw = dict(
+        bucket_level=pad_rows(jnp.asarray(
+            rng.rand(n).astype(np.float32) * 120), w),
+        in_flight=pad_rows(jnp.asarray(
+            rng.randint(0, 5, n), jnp.int32), w),
+        kv_in_use=pad_rows(jnp.asarray(
+            rng.rand(n).astype(np.float32) * 50), w),
+        pool_in_flight=jnp.int32(rng.randint(0, 12)),
+        pool_conc_cap=jnp.float32(rng.choice([8.0, 64.0, 1e9])),
+        running_min_priority=jnp.float32(
+            np.inf if rng.rand() < 0.5 else rng.rand() * 4),
+        pool_avg_slo=jnp.float32(rng.uniform(200, 20000)),
+        req_ent=jnp.asarray(rng.randint(0, n, m), jnp.int32),
+        req_tokens=jnp.asarray(rng.rand(m).astype(np.float32) * 40 + 1),
+        req_kv=jnp.asarray(rng.rand(m).astype(np.float32) * 20),
+        pool_resident=jnp.int32(rng.randint(0, 40)),
+        req_live=jnp.asarray(rng.rand(m) < 0.9),
+    )
+    return state, kw, mesh
+
+
+class TestShardAdmitParity:
+    """shard_admit_quantum == admit_quantum bitwise: the sharded gather
+    + compact replicated replay must reproduce the sequential decision
+    stream decision for decision (admit_quantum itself is pinned
+    against the scalar AdmissionController in test_admit_quantum)."""
+
+    @pytest.mark.parametrize("seed", range(6))
+    def test_mesh_vs_kernel_bitwise(self, seed):
+        rng = np.random.RandomState(seed)
+        n, m = int(rng.randint(2, 50)), int(rng.randint(1, 33))
+        state, kw, _ = random_admit_case(rng, n, m)
+        coeff = PriorityCoefficients()
+        slack = float(rng.choice([0.0, 0.1]))
+        ref = admit_quantum(state, **kw, coeff=coeff, slack=slack)
+        for size in MESH_SIZES:
+            got = shard_admit_quantum(state, **kw, coeff=coeff,
+                                      slack=slack, mesh=row_mesh(size))
+            for r, g in zip(ref, got):
+                assert jnp.array_equal(r, g), (size, seed)
+
+    def test_explicit_weights_bitwise(self):
+        rng = np.random.RandomState(99)
+        state, kw, mesh = random_admit_case(rng, 21, 16)
+        w = pad_rows(jnp.asarray(rng.rand(21).astype(np.float32) * 3),
+                     state.class_code.shape[0])
+        ref = admit_quantum(state, **kw, weights=w)
+        got = shard_admit_quantum(state, **kw, weights=w, mesh=mesh)
+        for r, g in zip(ref, got):
+            assert jnp.array_equal(r, g)
+        # the returned priorities are the gathered row weights, bitwise
+        assert jnp.array_equal(got[2], w[kw["req_ent"]])
+
+    @pytest.mark.parametrize("seed", range(300, 312))
+    def test_seeded_sweep(self, seed):
+        check_admit_parity(seed)
+
+
+def check_admit_parity(seed, n=None, m=None):
+    rng = np.random.RandomState(seed)
+    n = n if n is not None else int(rng.randint(2, 41))
+    m = m if m is not None else int(rng.randint(1, 25))
+    state, kw, mesh = random_admit_case(rng, n, m)
+    ref = admit_quantum(state, **kw)
+    got = shard_admit_quantum(state, **kw, mesh=mesh)
+    for r, g in zip(ref, got):
+        assert jnp.array_equal(r, g)
+
+
+if HAVE_HYPOTHESIS:
+    class TestShardHypothesis:
+        """Hypothesis adds shrinking depth to the seeded sweeps where
+        installed (the container runs the seeded forms regardless)."""
+
+        @settings(max_examples=25, deadline=None, derandomize=True)
+        @given(seed=st.integers(0, 2**31 - 1),
+               n=st.integers(2, 48), scarcity=st.floats(0.1, 6.0))
+        def test_tick_parity(self, seed, n, scarcity):
+            check_tick_parity(seed, n, scarcity)
+
+        @settings(max_examples=25, deadline=None, derandomize=True)
+        @given(seed=st.integers(0, 2**31 - 1),
+               n=st.integers(2, 40), m=st.integers(1, 24))
+        def test_admit_parity(self, seed, n, m):
+            check_admit_parity(seed, n, m)
+
+
+class TestShardPlanFleetParity:
+    """shard_plan_fleet == plan_fleet bitwise over the pool axis (the
+    scale policy is per-pool elementwise; plan_fleet itself is pinned
+    against the scalar Autoscaler.plan in test_fleet)."""
+
+    @pytest.mark.parametrize("seed", range(4))
+    def test_mesh_vs_kernel_bitwise(self, seed):
+        rng = np.random.RandomState(seed)
+        p = 16
+        args = (
+            jnp.asarray(rng.randint(1, 5, p), jnp.int32),      # current
+            jnp.ones(p, jnp.int32),                            # lo
+            jnp.full((p,), 8, jnp.int32),                      # hi
+            jnp.asarray(rng.rand(p).astype(np.float32) * 100 + 10),
+            jnp.asarray(rng.rand(p).astype(np.float32) * 200 + 20),
+            jnp.asarray(rng.rand(p).astype(np.float32) * 8 + 1),
+            jnp.asarray(rng.rand(p).astype(np.float32) * 80),
+            jnp.asarray(rng.rand(p).astype(np.float32) * 100),
+            jnp.asarray(rng.rand(p).astype(np.float32) * 4),
+            jnp.asarray(rng.rand(p).astype(np.float32) * 150),
+            jnp.asarray(rng.rand(p).astype(np.float32) * 100),
+            jnp.asarray(rng.rand(p) < 0.7),
+            jnp.asarray(rng.randint(0, 4, p), jnp.int32),
+        )
+        cfg = FleetPlannerConfig()
+        ref = plan_fleet(*args, config=cfg)
+        for size in MESH_SIZES:
+            got = shard_plan_fleet(*args, config=cfg,
+                                   mesh=row_mesh(size))
+            for r, g in zip(ref, got):
+                assert jnp.array_equal(r, g), (size, seed)
+
+
+class TestShardedResidentStore:
+    def mkstore(self, capacity=64, n_shards=4, live=40):
+        st_ = ShardedResidentStore(capacity=capacity, n_shards=n_shards)
+        for i in range(live):
+            st_.allocate(f"e{i}")
+        return st_
+
+    def test_pow2_shards_enforced(self):
+        with pytest.raises(ValueError):
+            ShardedResidentStore(n_shards=3)
+
+    def test_row_accounting_closure(self):
+        st_ = self.mkstore()
+        acct = st_.row_accounting()
+        assert acct["live"] + acct["free"] == acct["capacity"]
+        assert acct["alive_rows"] == acct["live"]
+        assert sum(acct["shard_free"]) == acct["free"]
+
+    def test_allocation_balances_shards(self):
+        st_ = self.mkstore(capacity=64, n_shards=4, live=40)
+        per_shard = [st_.shard_rows - f
+                     for f in st_.row_accounting()["shard_free"]]
+        assert max(per_shard) - min(per_shard) <= 1
+
+    def test_churn_is_block_local(self):
+        """release / allocate / view-write re-upload exactly one shard
+        block, never the pool."""
+        st_ = self.mkstore()
+        st_.device_state()
+        for mutate in (lambda: st_.release("e3"),
+                       lambda: st_.allocate("e3b"),
+                       lambda: setattr(st_.view("e10"), "burst", 3.0)):
+            b0, f0, r0 = (st_.block_uploads, st_.full_uploads,
+                          st_.uploaded_rows)
+            mutate()
+            st_.device_state()
+            assert st_.block_uploads - b0 == 1
+            assert st_.full_uploads == f0
+            assert st_.uploaded_rows - r0 == st_.shard_rows
+
+    def test_block_rebuild_is_coherent(self):
+        """After block-granular rebuilds the mirror must agree with the
+        host columns exactly (the chaos MirrorCoherence invariant)."""
+        st_ = self.mkstore()
+        st_.device_state()
+        st_.view("e7").debt = 1.25
+        st_.release("e20")
+        st_.view("e30").state = st_.view("e30").state  # state_code path
+        st_.device_state()
+        drift = st_.mirror_drift()
+        assert drift and max(drift.values()) == 0.0
+
+    def test_growth_keeps_slots_stable(self):
+        st_ = self.mkstore(capacity=16, n_shards=4, live=16)
+        before = dict(st_.slot_of)
+        views = {n: st_.view(n) for n in list(before)[:5]}
+        for i in range(20):
+            st_.allocate(f"g{i}")
+        assert st_.capacity == 64
+        assert all(st_.slot_of[n] == s for n, s in before.items())
+        for n, v in views.items():          # persistent views stay valid
+            assert v.slot == before[n]
+        acct = st_.row_accounting()
+        assert acct["live"] + acct["free"] == 64
+
+    def test_shard_of_name_routes(self):
+        st_ = self.mkstore()
+        for name, slot in st_.slot_of.items():
+            assert st_.shard_of_name(name) == slot // st_.shard_rows
+
+    def test_adopt_device_resyncs(self):
+        st_ = self.mkstore()
+        state = st_.device_state()
+        bumped = dataclasses.replace(
+            state, burst=state.burst + 1.0, debt=state.debt + 0.5)
+        st_.adopt_device(bumped)
+        assert st_.device_state() is bumped
+        assert np.allclose(st_.col["burst"], np.asarray(bumped.burst))
+        drift = st_.mirror_drift()
+        assert max(drift.values()) == 0.0
+
+
+def mkpool(shards, n_ents=37, tps=2000.0, slots=64.0, name="p"):
+    spec = PoolSpec(name=name, model="m", shards=shards,
+                    scaling=ScalingBounds(1, 1),
+                    per_replica=Resources(tps, float(1 << 40), slots))
+    pool = TokenPool(spec)
+    for i in range(n_ents):
+        pool.add_entitlement(EntitlementSpec(
+            name=f"e{i}", tenant_id=f"t{i}", pool=name,
+            qos=QoS(service_class=CLASSES[i % 4],
+                    slo_target_ms=100.0 + 10 * i),
+            baseline=Resources(20.0 + i, float(1 << 20), 4.0)))
+    return pool
+
+
+class TestPoolIntegration:
+    """A sharded pool (PoolSpec.shards) must tick and admit exactly
+    like a flat pool, name for name, through the public surfaces."""
+
+    def test_spec_selects_store(self):
+        assert isinstance(mkpool(None).store, ResidentStore)
+        assert not isinstance(mkpool(None).store, ShardedResidentStore)
+        assert isinstance(mkpool(4).store, ShardedResidentStore)
+
+    def test_tick_parity_namewise(self):
+        flat, shard = mkpool(None), mkpool(4)
+        for t in (1.0, 2.0, 3.0):
+            flat.tick(t)
+            shard.tick(t)
+        cf, cs = flat.store.col, shard.store.col
+        for name in flat.store.slot_of:
+            sf, ss = flat.store.slot_of[name], shard.store.slot_of[name]
+            for col in ("burst", "debt", "eff_tps", "eff_kv",
+                        "eff_conc"):
+                assert cf[col][sf] == cs[col][ss], (name, col)
+
+    def test_gateway_quantum_parity(self):
+        from repro.gateway.gateway import Gateway, QuantumRequest
+        flat, shard = mkpool(None), mkpool(4)
+        outs = []
+        for pool in (flat, shard):
+            pool.tick(1.0)
+            gw = Gateway(pool)
+            for i in range(37):
+                gw.register_route(f"k{i}", [("p", f"e{i}")])
+            reqs = [QuantumRequest(api_key=f"k{i % 37}",
+                                   request_id=f"r{i}",
+                                   input_tokens=50, max_tokens=64)
+                    for i in range(100)]
+            outs.append(gw.handle_quantum(reqs, now=1.5))
+        for a, b in zip(*outs):
+            assert (a.status, a.reason) == (b.status, b.reason), \
+                a.request_id
+
+    def test_pool_mesh_gate(self):
+        """pool_mesh: flat store never meshes; sharded store meshes
+        only when ≥2 devices are visible, never wider than the shard
+        count."""
+        assert pool_mesh(mkpool(None)) is None
+        mesh = pool_mesh(mkpool(4))
+        if len(jax.devices()) < 2:
+            assert mesh is None
+        else:
+            assert 2 <= mesh.size <= 4
+
+    def test_churn_does_not_retrace(self):
+        """Entitlement churn within a capacity bucket must not retrace
+        any tick kernel (sharded or not)."""
+        pool = mkpool(4, n_ents=20)
+        pool.tick(1.0)
+        pool.tick(2.0)
+        before = dict(TRACE_COUNTS)
+        pool.remove_entitlement("e7", now=2.5)
+        pool.add_entitlement(EntitlementSpec(
+            name="e7b", tenant_id="t7b", pool="p",
+            qos=QoS(service_class=ServiceClass.ELASTIC,
+                    slo_target_ms=500.0),
+            baseline=Resources(25.0, float(1 << 20), 4.0)))
+        pool.tick(3.0)
+        assert dict(TRACE_COUNTS) == before
+
+
+class TestStackCache:
+    """PoolManager.tick stacked-state cache: steady-state fleet ticks
+    reuse the kernel's own output stack (no re-stack, no re-upload, no
+    retrace) and stay bitwise identical to uncached stacking; churn
+    re-splices only the changed pool's row."""
+
+    def mkmanager(self):
+        mgr = PoolManager()
+        for pname, n in (("a", 5), ("b", 13), ("c", 37)):
+            spec = PoolSpec(name=pname, model="m",
+                            scaling=ScalingBounds(1, 1),
+                            per_replica=Resources(900.0, float(1 << 40),
+                                                  32.0))
+            pool = mgr.add_pool(spec)
+            for i in range(n):
+                pool.add_entitlement(EntitlementSpec(
+                    name=f"{pname}{i}", tenant_id=f"t{i}", pool=pname,
+                    qos=QoS(service_class=CLASSES[i % 4],
+                            slo_target_ms=100.0 + 7 * i),
+                    baseline=Resources(10.0 + i, float(1 << 18), 2.0)))
+        return mgr
+
+    def test_steady_state_reuses_no_retrace(self):
+        mgr = self.mkmanager()
+        mgr.tick(1.0)
+        assert mgr.stack_restacks == 3      # first tick stacks 3 pools
+        trace_before = dict(TRACE_COUNTS)
+        restacks = mgr.stack_restacks
+        for t in (2.0, 3.0, 4.0):
+            mgr.tick(t)
+        assert mgr.stack_reuses == 3
+        assert mgr.stack_restacks == restacks          # no re-copy
+        assert dict(TRACE_COUNTS) == trace_before      # no re-trace
+
+    def test_cached_equals_fresh_bitwise(self):
+        cached, fresh = self.mkmanager(), self.mkmanager()
+        for t in (1.0, 2.0, 3.0, 4.0):
+            cached.tick(t)
+        for t in (1.0, 2.0, 3.0, 4.0):
+            fresh._stack_cache.clear()      # defeat the cache
+            fresh.tick(t)
+        for pname in ("a", "b", "c"):
+            cc = cached.pool(pname).store.col
+            cf = fresh.pool(pname).store.col
+            for col in ("burst", "debt", "eff_tps"):
+                assert np.array_equal(cc[col], cf[col]), (pname, col)
+
+    def test_churn_splices_one_row(self):
+        mgr = self.mkmanager()
+        mgr.tick(1.0)
+        mgr.tick(2.0)
+        r0 = mgr.stack_restacks
+        mgr.pool("b").remove_entitlement("b3", now=2.5)
+        mgr.tick(3.0)
+        assert mgr.stack_restacks - r0 == 1
+        # and the spliced row is decision-correct vs uncached stacking
+        fresh = self.mkmanager()
+        fresh._stack_cache.clear()
+        fresh.tick(1.0)
+        fresh._stack_cache.clear()
+        fresh.tick(2.0)
+        fresh.pool("b").remove_entitlement("b3", now=2.5)
+        fresh._stack_cache.clear()
+        fresh.tick(3.0)
+        for pname in ("a", "b", "c"):
+            cc = mgr.pool(pname).store.col
+            cf = fresh.pool(pname).store.col
+            for col in ("burst", "debt", "eff_tps"):
+                assert np.array_equal(cc[col], cf[col]), (pname, col)
+
+
+class TestChaosShardedChurn:
+    """The churn+migration incident scenario over SHARDED stores must
+    hold every global invariant — token conservation, row-leak
+    closure, debt bounds, capacity, device-mirror coherence — while
+    entitlements join, migrate across pools (and shard boundaries)
+    and leave under live traffic."""
+
+    def sharded_scenario(self):
+        from repro.chaos.scenarios import CHURN_MIGRATION
+        return dataclasses.replace(
+            CHURN_MIGRATION,
+            sites=tuple({**dict(s), "shards": 4}
+                        for s in CHURN_MIGRATION.sites))
+
+    def test_stores_are_sharded(self):
+        from repro.chaos.scenario import build_sim
+        sim = build_sim(self.sharded_scenario())
+        for pool in sim.manager.pools.values():
+            assert isinstance(pool.store, ShardedResidentStore)
+
+    def test_invariants_hold(self):
+        from repro.chaos.runner import run_scenario
+        rep = run_scenario(self.sharded_scenario())
+        assert rep["passed"], rep["violations"]
+
+    def test_migration_across_shard_boundaries(self):
+        mgr = PoolManager()
+        for pname in ("src", "dst"):
+            spec = PoolSpec(name=pname, model="m", shards=4,
+                            scaling=ScalingBounds(1, 2),
+                            per_replica=Resources(900.0, float(1 << 40),
+                                                  32.0))
+            pool = mgr.add_pool(spec)
+            for i in range(11):
+                pool.add_entitlement(EntitlementSpec(
+                    name=f"{pname}{i}", tenant_id=f"t{i}", pool=pname,
+                    qos=QoS(service_class=ServiceClass.ELASTIC,
+                            slo_target_ms=500.0),
+                    baseline=Resources(15.0, float(1 << 18), 2.0)))
+        mgr.tick(1.0)
+        src, dst = mgr.pool("src"), mgr.pool("dst")
+        src.ledger.set_rate("src3", 50.0, 1.0)
+        src.ledger.bucket("src3").level = 33.0
+        src.status["src3"].debt = 0.75
+        mgr.migrate_entitlement("src3", "src", "dst", now=1.5)
+        assert "src3" not in src.store
+        assert "src3" in dst.store
+        assert dst.status["src3"].debt == pytest.approx(0.75)
+        # carried bucket is refilled to `now`: 33 + 50 tps * 0.5 s
+        assert dst.ledger.bucket("src3").level == pytest.approx(58.0)
+        for pool in (src, dst):
+            acct = pool.store.row_accounting()
+            assert acct["live"] + acct["free"] == acct["capacity"]
+            assert acct["alive_rows"] == acct["live"]
+        mgr.tick(2.0)           # and the fleet still ticks cleanly
+        drift = dst.store.mirror_drift()
+        assert not drift or max(drift.values()) == 0.0
